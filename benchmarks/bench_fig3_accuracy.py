@@ -1,0 +1,55 @@
+"""Paper Fig. 3: oracle projection vs measured runs, per strategy.
+
+Measured on the available (virtual) host devices with a reduced LM + the
+paper's accuracy metric (1 − |proj − meas|/meas). The paper reports 86.74%
+mean on a real 1024-GPU system; here the "cluster" is 8 time-shared host
+devices — the harness and metric are identical, the hardware is not.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layer_stats import stats_for
+from repro.core.validation import accuracy_report, validate
+from repro.models import LMConfig, TransformerLM
+from repro.nn import AttentionConfig, FFNConfig
+
+from .common import emit, note
+
+
+def run():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    cfg = LMConfig(name="bench", vocab=256, d_model=128, n_layers=4,
+                   attn=AttentionConfig(128, 4, 4, 32, dtype=jnp.float32),
+                   ffn=FFNConfig(128, 512, dtype=jnp.float32),
+                   dtype=jnp.float32)
+    model = TransformerLM(cfg)
+    B, S = 16, 128
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, 256)}
+    stats = stats_for(cfg, S)
+    flops = sum(s.flops_fwd for s in stats)
+    strategies = ["data", "filter", "channel", "df", "ds"]
+    pts = validate(model, cfg, batch, mesh, strategies,
+                   flops_per_sample=flops, B=B, S=S)
+    note(accuracy_report(pts).replace("\n", "\n# "))
+    rows = []
+    for pt in pts:
+        rows.append((f"fig3/{pt.strategy}/p{pt.p}", pt.measured_s * 1e6,
+                     f"projected_us={pt.projected_s*1e6:.1f};"
+                     f"accuracy={pt.accuracy*100:.1f}%"))
+    import numpy as np
+    mean_acc = float(np.mean([pt.accuracy for pt in pts]))
+    rows.append(("fig3/mean_accuracy", 0.0, f"accuracy={mean_acc*100:.2f}%"))
+    return rows
+
+
+def main():
+    note("Fig 3 — oracle vs measured (8 virtual host devices)")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Fig. 4: CosmoFlow Data+Spatial (ds) prediction accuracy.
+
+The paper's flagship case: 3-D samples too large for anything but ds.
+Measured with a reduced CosmoFlow on host devices + oracle projection.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.layer_stats import stats_for
+from repro.core.validation import accuracy_report, validate
+from repro.models.cnn import CosmoFlow, CosmoFlowConfig
+
+from .common import emit, note
+
+
+def run():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    mc = CosmoFlowConfig(img=32, n_conv=3, width=8)
+    model = CosmoFlow(mc)
+    B = 8
+    key = jax.random.PRNGKey(0)
+    batch = {"images": jax.random.normal(key, (B, 32, 32, 32, 4)),
+             "targets": jax.random.normal(key, (B, 4))}
+    stats = stats_for(mc)
+    flops = sum(s.flops_fwd for s in stats)
+    pts = validate(model, mc, batch, mesh, ["ds", "data"],
+                   flops_per_sample=flops, B=B)
+    note(accuracy_report(pts).replace("\n", "\n# "))
+    return [(f"fig4/cosmoflow/{pt.strategy}", pt.measured_s * 1e6,
+             f"projected_us={pt.projected_s*1e6:.1f};"
+             f"accuracy={pt.accuracy*100:.1f}%") for pt in pts]
+
+
+def main():
+    note("Fig 4 — CosmoFlow ds accuracy (reduced, host devices)")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

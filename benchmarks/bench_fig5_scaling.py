@@ -1,0 +1,42 @@
+"""Paper Fig. 5: spatial+data (ds) scaling for CosmoFlow.
+
+Oracle projection of ds vs pure-spatial speedup at p = 4 … 1024 on the
+paper's cluster model — the paper's 'perfect scaling' curve. Derived value =
+speedup of ds over pure spatial at equal p (paper's labels).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import OracleConfig, PAPER_V100_CLUSTER, TimeModel, project, stats_for
+from repro.models.cnn import CosmoFlowConfig
+
+from .common import emit, note
+
+
+def run():
+    stats = stats_for(CosmoFlowConfig(img=128))
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    rows = []
+    for p in (4, 16, 64, 256, 1024):
+        B = max(p // 4, 4)  # weak scaling: 0.25 samples/GPU (paper §5.1)
+        cfg = OracleConfig(B=B, D=1584)
+        t0 = time.perf_counter()
+        spatial = project("spatial", stats, tm, cfg, min(p, 64))
+        ds = project("ds", stats, tm, cfg, p, p1=max(p // 4, 1), p2=min(p, 4))
+        us = (time.perf_counter() - t0) * 1e6
+        speedup = spatial.total_s / ds.total_s if ds.total_s else 0.0
+        rows.append((f"fig5/cosmoflow/ds/p{p}", us,
+                     f"ds_iter_ms={ds.per_iteration()['total_s']*1e3:.2f};"
+                     f"speedup_vs_spatial={speedup:.2f};"
+                     f"feasible={ds.feasible}"))
+    return rows
+
+
+def main():
+    note("Fig 5 — CosmoFlow ds scaling (weak scaling, oracle projection)")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Fig. 6 / §4.3: contention coefficient φ and congested outliers.
+
+The paper observed congested runs up to 4× the φ=1 prediction. We sweep φ
+over the df hybrid's gradient exchange and report the slowdown curve — the
+model the paper fits its outliers against (plus the φ=2 value used for the
+df results in Fig. 3).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import OracleConfig, PAPER_V100_CLUSTER, TimeModel, project, stats_for
+from repro.models.cnn import RESNET50
+
+from .common import emit, note
+
+
+def run():
+    stats = stats_for(RESNET50)
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    rows = []
+    base = None
+    for phi in (1.0, 2.0, 3.0, 4.0):
+        cfg = OracleConfig(B=2048, D=1_281_167, phi_hybrid=phi)
+        t0 = time.perf_counter()
+        proj = project("df", stats, tm, cfg, 512, p1=128, p2=4)
+        us = (time.perf_counter() - t0) * 1e6
+        if base is None:
+            base = proj.comm_ge_s
+        rows.append((f"fig6/resnet50/df/phi{phi:.0f}", us,
+                     f"ge_ms={proj.comm_ge_s/proj.iterations*1e3:.3f};"
+                     f"slowdown={proj.comm_ge_s/base:.2f}x"))
+    return rows
+
+
+def main():
+    note("Fig 6 — contention penalty sweep (paper's 4x congestion outliers)")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

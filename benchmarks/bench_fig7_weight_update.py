@@ -1,0 +1,74 @@
+"""Paper Fig. 7 / §5.3.3: the weight update is non-trivial for large models.
+
+Measured WU share of a real train step for a small/large-ish pair on this
+host, plus the oracle's projected share for the paper's models (VGG16 ≈ 15%
+in the paper) and for qwen3-32b with AdamW (transformers: 'up to 45%').
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import OracleConfig, PAPER_V100_CLUSTER, TimeModel, project, stats_for
+from repro.data.pipeline import DataConfig, ShardedLoader
+from repro.models import LMConfig, TransformerLM
+from repro.nn import AttentionConfig, FFNConfig
+from repro.nn.module import NULL_CTX, tree_init
+from repro.optim.optimizers import OptimizerConfig, apply_update
+from repro.training.steps import make_train_step, train_state_spec
+
+from .common import emit, note, timed
+
+
+def _measured_share(d_model, d_ff, n_layers, vocab=512):
+    cfg = LMConfig(name="b", vocab=vocab, d_model=d_model, n_layers=n_layers,
+                   attn=AttentionConfig(d_model, 4, 4, d_model // 4,
+                                        dtype=jnp.float32),
+                   ffn=FFNConfig(d_model, d_ff, dtype=jnp.float32),
+                   dtype=jnp.float32)
+    model = TransformerLM(cfg)
+    opt = OptimizerConfig(name="adamw", zero1=False)
+    state = tree_init(train_state_spec(model, opt), jax.random.PRNGKey(0))
+    loader = ShardedLoader(DataConfig("lm", batch=4, seq_len=64, vocab=vocab))
+    batch = loader.batch_at(0)
+    kw = dict(attn_impl="plain", scan_layers=False, remat=False)
+    full = jax.jit(make_train_step(model, opt, NULL_CTX, **kw))
+    t_full = timed(full, state, batch)
+    grads = jax.jit(jax.grad(lambda p, b: model.loss_fn(p, b, **kw)[0]))(
+        state["params"], batch)
+    wu = jax.jit(lambda p, g, o, s: apply_update(opt, p, g, o, s)[0])
+    t_wu = timed(wu, state["params"], grads, state["opt"], state["step"])
+    return t_wu / t_full, t_full
+
+
+def run():
+    rows = []
+    share_small, t_small = _measured_share(64, 128, 2)
+    share_big, t_big = _measured_share(256, 1024, 4)
+    rows.append(("fig7/measured/small_lm", t_small * 1e6,
+                 f"wu_share={share_small*100:.1f}%"))
+    rows.append(("fig7/measured/bigger_lm", t_big * 1e6,
+                 f"wu_share={share_big*100:.1f}%"))
+    # oracle projections at the paper's scale
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    for name, stats, B in [
+            ("vgg16", stats_for(__import__("repro.models.cnn",
+             fromlist=["VGGConfig"]).VGGConfig()), 1024),
+            ("qwen3-32b", stats_for(get_config("qwen3-32b").model, 4096), 256)]:
+        cfg = OracleConfig(B=B, D=B * 4)
+        proj = project("data", stats, tm, cfg, 64)
+        wu = sum(tm.wu(s) for s in stats) * proj.iterations
+        share = wu / proj.comp_s if proj.comp_s else 0.0
+        rows.append((f"fig7/projected/{name}", 0.0,
+                     f"wu_share={share*100:.1f}%"))
+    return rows
+
+
+def main():
+    note("Fig 7 — weight-update share of compute (measured + projected)")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Fig. 8 / §5.3.3: filter-parallel compute does not scale perfectly.
+
+The paper found conv kernels + split/concat overheads keep filter-parallel
+compute from scaling 1/p. We measure the filter-sharded step on host devices
+vs p=1, and report the efficiency the oracle would have assumed perfect.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.validation import measure_step
+from repro.models import LMConfig, TransformerLM
+from repro.nn import AttentionConfig, FFNConfig
+from repro.nn.module import NULL_CTX, tree_init
+from repro.optim.optimizers import OptimizerConfig
+from repro.training.steps import make_train_step, train_state_spec
+
+from .common import emit, note, timed
+
+
+def run():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    p = 1
+    for v in mesh.shape.values():
+        p *= v
+    cfg = LMConfig(name="b", vocab=256, d_model=128, n_layers=4,
+                   attn=AttentionConfig(128, 8, 8, 16, dtype=jnp.float32),
+                   ffn=FFNConfig(128, 512, dtype=jnp.float32),
+                   dtype=jnp.float32)
+    model = TransformerLM(cfg)
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (8, 128), 0, 256)}
+    opt = OptimizerConfig(name="sgd", zero1=False)
+    kw = dict(attn_impl="plain", scan_layers=False, remat=False)
+    serial = jax.jit(make_train_step(model, opt, NULL_CTX, **kw))
+    state = tree_init(train_state_spec(model, opt), key)
+    t1 = timed(serial, state, batch)
+    tp = measure_step(model, cfg, batch, mesh, "filter")
+    # on time-shared virtual devices ideal tp == t1 (compute conserved);
+    # overhead factor isolates the split/concat + collective cost (Fig 8)
+    overhead = tp / t1
+    return [("fig8/filter/serial", t1 * 1e6, "baseline"),
+            (f"fig8/filter/p{p}", tp * 1e6,
+             f"overhead_vs_ideal={overhead:.2f}x")]
+
+
+def main():
+    note("Fig 8 — filter-parallel compute overhead (measured, host devices)")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference wall time.
+
+interpret-mode timings are NOT TPU performance (the kernels target TPU; this
+box is CPU) — the derived column reports the ref wall time and the FLOPs the
+kernel would execute, which the roofline converts to TPU projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (attention_ref, conv2d_gemm, conv2d_ref,
+                           flash_attention, rmsnorm, rmsnorm_ref, ssd_chunk,
+                           ssd_ref)
+
+from .common import emit, note, timed
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    # flash attention
+    B, H, S, D = 1, 4, 512, 64
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, H, S, D))
+               for i in range(3))
+    t_ref = timed(lambda: attention_ref(q, k, v))
+    flops = 4 * B * H * S * S * D / 2
+    rows.append((f"kernels/flash_attention/ref/S{S}", t_ref * 1e6,
+                 f"flops={flops:.3e};tpu_proj_us={flops/197e12*1e6:.2f}"))
+    # ssd
+    Bs, Ss, Hs, P, N = 1, 512, 4, 16, 32
+    x = jax.random.normal(key, (Bs, Ss, Hs, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(key, (Bs, Ss, Hs)))
+    A = -jnp.exp(jax.random.normal(key, (Hs,)) * 0.3)
+    Bm = jax.random.normal(key, (Bs, Ss, Hs, N)) * 0.5
+    Cm = jax.random.normal(key, (Bs, Ss, Hs, N)) * 0.5
+    t_ref = timed(lambda: ssd_ref(x, dt, A, Bm, Cm))
+    rows.append((f"kernels/ssd/naive_ref/S{Ss}", t_ref * 1e6, "recurrence"))
+    t_k = timed(lambda: ssd_chunk(x, dt, A, Bm, Cm, chunk=64, interpret=True))
+    rows.append((f"kernels/ssd/chunk_interpret/S{Ss}", t_k * 1e6,
+                 f"speedup_vs_naive={t_ref/t_k:.2f}x"))
+    # conv
+    xc = jax.random.normal(key, (4, 32, 32, 64))
+    wc = jax.random.normal(key, (3, 3, 64, 128)) * 0.1
+    t_ref = timed(lambda: conv2d_ref(xc, wc))
+    flops = 2 * 4 * 32 * 32 * 64 * 128 * 9
+    rows.append(("kernels/conv2d/ref/32x32x64x128", t_ref * 1e6,
+                 f"flops={flops:.3e};tpu_proj_us={flops/197e12*1e6:.2f}"))
+    # rmsnorm
+    xr = jax.random.normal(key, (4096, 1024))
+    sc = jnp.ones((1024,))
+    t_ref = timed(lambda: rmsnorm_ref(xr, sc))
+    rows.append(("kernels/rmsnorm/ref/4096x1024", t_ref * 1e6,
+                 f"bytes={xr.size*4*2:.3e};"
+                 f"tpu_proj_us={xr.size*4*2/819e9*1e6:.2f}"))
+    return rows
+
+
+def main():
+    note("kernel micro-benchmarks (CPU wall; TPU projections in derived)")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

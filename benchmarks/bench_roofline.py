@@ -1,0 +1,43 @@
+"""§Roofline table (beyond paper): per (arch × shape × mesh) terms from the
+dry-run artifacts in experiments/dryrun/."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit, note
+
+DRYRUN = Path("experiments/dryrun")
+
+
+def run():
+    rows = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(f.read_text())
+        rl = rec.get("roofline", {})
+        if not rl:
+            continue
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("tag"):
+            name += f"/{rec['tag']}"
+        rows.append((
+            name, rl["step_time_bound_s"] * 1e6,
+            f"compute_ms={rl['compute_s']*1e3:.2f};"
+            f"memory_ms={rl['memory_s']*1e3:.2f};"
+            f"collective_ms={rl['collective_s']*1e3:.2f};"
+            f"dominant={rl['dominant']};useful={rl['useful_ratio']:.2f};"
+            f"frac={rl['roofline_fraction']:.3f};"
+            f"fits_hbm={rl['fits_hbm']}"))
+    if not rows:
+        rows.append(("roofline/missing", 0.0,
+                     "run: PYTHONPATH=src python -m repro.launch.dryrun --all"))
+    return rows
+
+
+def main():
+    note("Roofline terms per (arch x shape x mesh) from dry-run artifacts")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

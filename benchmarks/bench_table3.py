@@ -1,0 +1,50 @@
+"""Paper Table 3: per-strategy analytical projections for the paper's models.
+
+Emits the oracle's comp/comm/memory per strategy for ResNet-50, VGG16 and
+CosmoFlow on the paper's V100 cluster model, at the paper's scales.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (OracleConfig, PAPER_V100_CLUSTER, TimeModel, project,
+                        stats_for)
+from repro.models.cnn import CosmoFlowConfig, RESNET50, VGGConfig
+
+from .common import emit, note
+
+MODELS = {
+    "resnet50": (RESNET50, 1_281_167, 2048),
+    "vgg16": (VGGConfig(), 1_281_167, 1024),
+    "cosmoflow": (CosmoFlowConfig(img=128), 1584, 64),
+}
+STRATS = ("data", "spatial", "pipeline", "filter", "channel", "df")
+
+
+def run():
+    rows = []
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    for name, (mc, D, B) in MODELS.items():
+        stats = stats_for(mc)
+        cfg = OracleConfig(B=B, D=D)
+        for strat in STRATS:
+            p = 64
+            t0 = time.perf_counter()
+            kw = dict(p1=16, p2=4) if strat in ("df", "ds") else {}
+            proj = project(strat, stats, tm, cfg, p, **kw)
+            us = (time.perf_counter() - t0) * 1e6
+            it = proj.per_iteration()
+            rows.append((
+                f"table3/{name}/{strat}/p{p}", us,
+                f"comp_ms={it['comp_s']*1e3:.2f};comm_ms={it['comm_s']*1e3:.2f};"
+                f"mem_GiB={proj.mem_bytes/2**30:.2f};feasible={proj.feasible}"))
+    return rows
+
+
+def main():
+    note("Table 3 — analytical per-iteration projections, paper V100 cluster")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

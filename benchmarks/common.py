@@ -1,0 +1,27 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(rows):
+    """rows: iterable of (name, us_per_call, derived). Prints the CSV."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+def note(msg: str):
+    print(f"# {msg}")
+
+
+def timed(fn, *args, iters=3, warmup=1):
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters

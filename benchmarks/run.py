@@ -1,0 +1,48 @@
+import os
+
+# benchmarks measure on 8 virtual host devices (the dry-run uses its own
+# process with 512); must be set before any jax import.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Benchmark harness — one module per paper table/figure (+ roofline).
+
+Prints ``name,us_per_call,derived`` CSV (commentary lines prefixed '#').
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_fig3_accuracy, bench_fig4_cosmoflow,
+                   bench_fig5_scaling, bench_fig6_contention,
+                   bench_fig7_weight_update, bench_fig8_filter_breakdown,
+                   bench_kernels, bench_roofline, bench_table3)
+    benches = [
+        ("table3", bench_table3),
+        ("fig3_accuracy", bench_fig3_accuracy),
+        ("fig4_cosmoflow", bench_fig4_cosmoflow),
+        ("fig5_scaling", bench_fig5_scaling),
+        ("fig6_contention", bench_fig6_contention),
+        ("fig7_weight_update", bench_fig7_weight_update),
+        ("fig8_filter_breakdown", bench_fig8_filter_breakdown),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in benches:
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"# [{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"# [{name}] FAILED: {e!r}")
+            traceback.print_exc(limit=3, file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the ParaDL oracle on the paper's headline question.
+
+"Which parallel strategy should train ResNet-50 / VGG16 on a 1024-GPU
+cluster?" (paper §5) — and the same question for qwen3-32b on a TPU v5e pod.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.core import (OracleConfig, PAPER_V100_CLUSTER, TPU_V5E_POD,
+                        TimeModel, advise, breakdown_table, stats_for)
+from repro.models.cnn import RESNET50, VGGConfig
+
+
+def headline(title, stats, tm, cfg, p, mem_cap):
+    rec = advise(stats, tm, cfg, p, mem_cap=mem_cap)
+    print(f"\n=== {title} (p={p}) ===")
+    print(breakdown_table(rec.ranked))
+    if rec.best:
+        it = rec.best.per_iteration()
+        print(f"--> best: {rec.best.strategy} (p1={rec.best.p1}, "
+              f"p2={rec.best.p2}); {it['total_s']*1e3:.1f} ms/iter")
+    for proj, why in rec.rejected[:4]:
+        print(f"    rejected {proj.strategy:8s} p1={proj.p1:<4d} "
+              f"p2={proj.p2:<4d} — {why}")
+
+
+def main():
+    tm_gpu = TimeModel(PAPER_V100_CLUSTER)
+    # paper scales: weak scaling, V100 memory cap 16 GB
+    for p in (64, 256, 1024):
+        headline("ResNet-50 / ImageNet / V100 cluster",
+                 stats_for(RESNET50), tm_gpu,
+                 OracleConfig(B=2 * p, D=1_281_167), p, 16e9)
+    headline("VGG16 / ImageNet / V100 cluster", stats_for(VGGConfig()),
+             tm_gpu, OracleConfig(B=1024, D=1_281_167), 1024, 16e9)
+
+    # beyond paper: the same oracle on a TPU v5e pod for an assigned arch
+    lm = get_config("qwen3-32b").model
+    headline("qwen3-32b / 4k seq / TPU v5e pod",
+             stats_for(lm, 4096), TimeModel(TPU_V5E_POD),
+             OracleConfig(B=256, D=256 * 100, zero1=True, remat=True,
+                          zero3=True, seq_parallel=True), 256, 16e9)
+
+
+if __name__ == "__main__":
+    main()

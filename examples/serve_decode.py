@@ -1,0 +1,26 @@
+"""Batched serving example: prefill + greedy decode with KV caches.
+
+Uses the reduced qwen3 config and both KV-cache layouts (classic per-head vs
+sequence-sharded flash-decoding) to show the serving path end-to-end.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    print("--- classic per-head KV cache ---")
+    serve_main(["--arch", "qwen3-32b", "--smoke", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"])
+    print("--- sequence-sharded (flash-decoding) KV cache ---")
+    serve_main(["--arch", "qwen3-32b", "--smoke", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16", "--kv-shards", "2",
+                "--strategy", "serve_seqkv"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from dry-run artifacts.
+
+Usage: PYTHONPATH=src python experiments/make_report.py
+"""
+import json
+import pathlib
+
+HDR = ("| arch | shape | mesh | strategy | comp ms | mem ms | coll ms | dom |"
+       " useful | frac | args GiB | temp GiB |\n"
+       "|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def row(r):
+    rl = r["roofline"]
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['strategy']}"
+            f"{('/' + r['tag']) if r.get('tag') else ''} | "
+            f"{rl['compute_s']*1e3:,.1f} | {rl['memory_s']*1e3:,.1f} | "
+            f"{rl['collective_s']*1e3:,.1f} | {rl['dominant'][:4]} | "
+            f"{rl['useful_ratio']:.2f} | {rl['roofline_fraction']:.3f} | "
+            f"{r['memory']['args_gib']:.1f} | {r['memory']['temp_gib']:.1f} |")
+
+
+def main():
+    here = pathlib.Path(__file__).parent
+    recs = [json.loads(f.read_text()) for f in sorted((here / "dryrun").glob("*.json"))]
+    base = [r for r in recs if not r.get("tag")]
+    opt = [r for r in recs if r.get("tag")]
+    out = ["### Baseline cells (required matrix)", "", HDR]
+    out += [row(r) for r in base]
+    out += ["", "### Hillclimb / variant cells (tagged)", "", HDR]
+    out += [row(r) for r in opt]
+    table = "\n".join(out)
+
+    exp = here.parent / "EXPERIMENTS.md"
+    t = exp.read_text()
+    start = t.index("### Baseline cells (required matrix)")
+    end = t.index("\n### Per-cell observations")
+    exp.write_text(t[:start] + table + t[end:])
+    print(f"refreshed: {len(base)} baseline + {len(opt)} variant cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Checkpointing: sharded pytree save/restore with a manifest + atomicity.
+
+Layout:  <dir>/step_<n>/
+           manifest.json    (step, tree structure, shapes/dtypes, config hash)
+           arrays.npz       (leaves, addressable data)
+           .complete        (commit marker — written last; readers ignore
+                             checkpoints without it, so a crash mid-write
+                             never corrupts restore)
+
+``save`` can run in a background thread (async checkpointing: the train loop
+donates nothing and continues while the host thread serializes), and
+``latest_step``/``restore`` implement the fault-tolerant restart contract
+used by runtime/fault_tolerance.py.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}/{i}")
+    elif tree is None:
+        return
+    else:
+        yield prefix, tree
+
+
+def _unflatten_into(skeleton, leaves: dict, prefix=""):
+    if isinstance(skeleton, dict):
+        return {k: _unflatten_into(skeleton[k], leaves, f"{prefix}/{k}")
+                for k in sorted(skeleton)}
+    if isinstance(skeleton, (list, tuple)):
+        out = [_unflatten_into(v, leaves, f"{prefix}/{i}")
+               for i, v in enumerate(skeleton)]
+        return type(skeleton)(out) if isinstance(skeleton, tuple) else out
+    if skeleton is None:
+        return None
+    return leaves[prefix]
+
+
+def config_hash(obj) -> str:
+    return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 config_tag: str = ""):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.config_tag = config_tag
+        self._thread: threading.Thread | None = None
+
+    # -- write ------------------------------------------------------------
+    def save(self, state, step: int, blocking: bool = True) -> Path:
+        leaves = {p: np.asarray(jax.device_get(v))
+                  for p, v in _flatten(state)}
+        manifest = {
+            "step": int(step),
+            "config_tag": self.config_tag,
+            "leaves": {p: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for p, v in leaves.items()},
+        }
+
+        def write():
+            path = self.dir / f"step_{step:08d}"
+            tmp = self.dir / f".tmp_step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "arrays.npz",
+                     **{p.replace("/", "|"): v for p, v in leaves.items()})
+            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+            (tmp / ".complete").write_text("ok")
+            if path.exists():
+                shutil.rmtree(path)
+            tmp.rename(path)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        return self.dir / f"step_{step:08d}"
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.completed_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- read -------------------------------------------------------------
+    def completed_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / ".complete").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.completed_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, skeleton, step: int | None = None, shardings=None):
+        """Restore into the structure of ``skeleton``; optionally re-shard
+        (elastic restart onto a different mesh)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        if self.config_tag and manifest["config_tag"] and \
+                manifest["config_tag"] != self.config_tag:
+            raise ValueError(
+                f"checkpoint config_tag {manifest['config_tag']} != "
+                f"{self.config_tag}: refusing to restore a mismatched model")
+        npz = np.load(path / "arrays.npz")
+        leaves = {k.replace("|", "/"): npz[k] for k in npz.files}
+        tree = _unflatten_into(skeleton, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree, step

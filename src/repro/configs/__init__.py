@@ -1,0 +1,9 @@
+from . import cnn_archs, lm_archs  # noqa: F401  (populate the registry)
+from .base import SHAPES, ArchConfig, ShapeSpec, get_config, list_archs
+
+ASSIGNED_ARCHS = (
+    "mamba2-780m", "qwen3-32b", "command-r-35b", "qwen1.5-4b", "deepseek-67b",
+    "whisper-medium", "deepseek-v3-671b", "grok-1-314b", "recurrentgemma-9b",
+    "paligemma-3b",
+)
+PAPER_CNNS = ("resnet50", "resnet152", "vgg16", "cosmoflow")

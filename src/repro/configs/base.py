@@ -1,0 +1,86 @@
+"""Config plumbing: arch descriptors, input shapes, and the registry."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned (input-shape) cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """A registered architecture: full config + reduced smoke config.
+
+    ``family``: lm | encdec | vlm | cnn.
+    ``sub_quadratic``: True when long_500k is runnable (SSM / hybrid window).
+    ``strategy``: default parallel strategy for the dry-run (see
+    parallel/strategies.py); per-shape overrides in ``shape_strategy``.
+    """
+
+    name: str
+    family: str
+    model: Any
+    smoke_model: Any
+    source: str                    # provenance tag from the assignment
+    sub_quadratic: bool = False
+    strategy: str = "df_zero3"
+    shape_strategy: dict = field(default_factory=dict)
+    serve_kv_shards: int = 1   # sequence-sharded KV layout when kv heads
+                               # cannot shard over the model axis (§Perf)
+    notes: str = ""
+
+    def strategy_for(self, shape: str) -> str:
+        return self.shape_strategy.get(shape, self.strategy)
+
+    def shapes(self) -> list[str]:
+        if self.family == "cnn":
+            return []
+        out = ["train_4k", "prefill_32k", "decode_32k"]
+        if self.sub_quadratic:
+            out.append("long_500k")
+        return out
+
+    def skipped_shapes(self) -> dict[str, str]:
+        if self.family == "cnn":
+            return {}
+        if not self.sub_quadratic:
+            return {"long_500k": "full attention is O(S²); 500k-token decode "
+                                 "requires sub-quadratic mixing (DESIGN.md "
+                                 "§Arch-applicability)"}
+        return {}
+
+
+_REGISTRY: dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,6 @@
+"""Config for --arch grok-1-314b (see lm_archs.py for the definition)."""
+from .base import get_config
+
+
+def config():
+    return get_config("grok-1-314b")

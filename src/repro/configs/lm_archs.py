@@ -1,0 +1,247 @@
+"""The ten assigned architectures, exact configs from the assignment block.
+
+Each ``<id>.py``-style factory lives here (one function per arch, registered
+under its assigned id; separate files re-export for the configs/<id>.py layout
+the deliverables ask for). Sources are tagged as given: [hf]/[arXiv]/[unverified].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..models.encdec import EncDecConfig
+from ..models.transformer import LMConfig
+from ..models.vlm import VLMConfig
+from ..nn.attention import AttentionConfig, MLAConfig
+from ..nn.ffn import FFNConfig, MoEConfig
+from ..nn.rglru import RGLRUConfig
+from ..nn.ssm import SSMConfig
+from .base import ArchConfig, register
+
+BF16 = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# mamba2-780m — SSD, attention-free [arXiv:2405.21060; unverified]
+# ---------------------------------------------------------------------------
+@register("mamba2-780m")
+def mamba2_780m() -> ArchConfig:
+    def mk(d_model, n_layers, vocab, d_state, chunk=256):
+        return LMConfig(
+            name="mamba2-780m", vocab=vocab, d_model=d_model, n_layers=n_layers,
+            pattern=("ssm",),
+            ssm=SSMConfig(d_model, d_state=d_state, head_dim=64, expand=2,
+                          chunk=chunk, dtype=BF16),
+            tie_embeddings=True, dtype=BF16)
+    return ArchConfig(
+        name="mamba2-780m", family="lm",
+        model=mk(1536, 48, 50280, 128),
+        smoke_model=mk(64, 4, 512, 16, chunk=16),
+        source="[arXiv:2405.21060; unverified]", sub_quadratic=True,
+        strategy="df_zero1",
+        notes="attention-free; sequence parallelism inapplicable to the scan "
+              "(DESIGN.md §Arch-applicability); d_inner heads shard as filters")
+
+
+# ---------------------------------------------------------------------------
+# qwen3-32b — dense GQA + qk_norm [hf:Qwen/Qwen3-8B; hf]
+# ---------------------------------------------------------------------------
+@register("qwen3-32b")
+def qwen3_32b() -> ArchConfig:
+    def mk(d, L, H, KV, hd, ff, vocab):
+        return LMConfig(
+            name="qwen3-32b", vocab=vocab, d_model=d, n_layers=L,
+            attn=AttentionConfig(d, H, KV, hd, qk_norm=True, rope_base=1e6,
+                                 dtype=BF16),
+            ffn=FFNConfig(d, ff, activation="silu", glu=True, dtype=BF16),
+            dtype=BF16)
+    return ArchConfig(
+        name="qwen3-32b", family="lm",
+        model=mk(5120, 64, 64, 8, 128, 25600, 151936),
+        smoke_model=mk(64, 2, 4, 2, 16, 128, 512),
+        source="[hf:Qwen/Qwen3-8B; hf]")
+
+
+# ---------------------------------------------------------------------------
+# command-r-35b — dense GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01]
+# ---------------------------------------------------------------------------
+@register("command-r-35b")
+def command_r_35b() -> ArchConfig:
+    def mk(d, L, H, KV, hd, ff, vocab):
+        return LMConfig(
+            name="command-r-35b", vocab=vocab, d_model=d, n_layers=L,
+            attn=AttentionConfig(d, H, KV, hd, rope_base=8e6, dtype=BF16),
+            ffn=FFNConfig(d, ff, activation="silu", glu=True, dtype=BF16),
+            norm="layernorm_nobias", tie_embeddings=True, dtype=BF16)
+    return ArchConfig(
+        name="command-r-35b", family="lm",
+        model=mk(8192, 40, 64, 8, 128, 22528, 256000),
+        smoke_model=mk(64, 2, 4, 2, 16, 128, 512),
+        source="[hf:CohereForAI/c4ai-command-r-v01; unverified]")
+
+
+# ---------------------------------------------------------------------------
+# qwen1.5-4b — dense, QKV bias, kv=heads (MHA) [hf:Qwen/Qwen1.5-0.5B; hf]
+# ---------------------------------------------------------------------------
+@register("qwen1.5-4b")
+def qwen15_4b() -> ArchConfig:
+    def mk(d, L, H, KV, hd, ff, vocab):
+        return LMConfig(
+            name="qwen1.5-4b", vocab=vocab, d_model=d, n_layers=L,
+            attn=AttentionConfig(d, H, KV, hd, use_bias=True, dtype=BF16),
+            ffn=FFNConfig(d, ff, activation="silu", glu=True, dtype=BF16),
+            dtype=BF16)
+    return ArchConfig(
+        name="qwen1.5-4b", family="lm",
+        model=mk(2560, 40, 20, 20, 128, 6912, 151936),
+        smoke_model=mk(64, 2, 4, 4, 16, 128, 512),
+        source="[hf:Qwen/Qwen1.5-0.5B; hf]",
+        shape_strategy={"decode_32k": "serve_seqkv"}, serve_kv_shards=16,
+        notes="kv=20 heads: filter-parallel scaling limit p<=20 on attention "
+              "(paper Table 3 last column); heads fall back to partial shard")
+
+
+# ---------------------------------------------------------------------------
+# deepseek-67b — dense llama-arch, 95 layers [arXiv:2401.02954; hf]
+# ---------------------------------------------------------------------------
+@register("deepseek-67b")
+def deepseek_67b() -> ArchConfig:
+    def mk(d, L, H, KV, hd, ff, vocab):
+        return LMConfig(
+            name="deepseek-67b", vocab=vocab, d_model=d, n_layers=L,
+            attn=AttentionConfig(d, H, KV, hd, dtype=BF16),
+            ffn=FFNConfig(d, ff, activation="silu", glu=True, dtype=BF16),
+            dtype=BF16)
+    return ArchConfig(
+        name="deepseek-67b", family="lm",
+        model=mk(8192, 95, 64, 8, 128, 22016, 102400),
+        smoke_model=mk(64, 3, 4, 2, 16, 128, 512),
+        source="[arXiv:2401.02954; hf]",
+        notes="95 layers: the best pipeline-parallel candidate (paper §3.4)")
+
+
+# ---------------------------------------------------------------------------
+# whisper-medium — enc-dec, conv frontend stubbed [arXiv:2212.04356]
+# ---------------------------------------------------------------------------
+@register("whisper-medium")
+def whisper_medium() -> ArchConfig:
+    full = EncDecConfig(
+        name="whisper-medium", vocab=51865, d_model=1024, n_enc_layers=24,
+        n_dec_layers=24, n_heads=16, d_ff=4096, max_source_positions=1500,
+        max_target_positions=4096, dtype=BF16)
+    smoke = EncDecConfig(
+        name="whisper-medium", vocab=512, d_model=64, n_enc_layers=2,
+        n_dec_layers=2, n_heads=4, d_ff=128, max_source_positions=32,
+        max_target_positions=64, dtype=BF16)
+    return ArchConfig(
+        name="whisper-medium", family="encdec", model=full, smoke_model=smoke,
+        source="[arXiv:2212.04356; unverified]",
+        notes="conv frontend is a stub: input_specs() provides frame "
+              "embeddings; decoder positions clamp at the learned table edge "
+              "for the 32k serve shapes")
+
+
+# ---------------------------------------------------------------------------
+# deepseek-v3-671b — MLA + 256-expert MoE + MTP [arXiv:2412.19437; hf]
+# ---------------------------------------------------------------------------
+@register("deepseek-v3-671b")
+def deepseek_v3_671b() -> ArchConfig:
+    def mk(d, L, H, vocab, n_exp, d_ff_moe, d_ff_dense, q_rank, kv_rank,
+           first_dense, groups):
+        return LMConfig(
+            name="deepseek-v3-671b", vocab=vocab, d_model=d, n_layers=L,
+            pattern=("moe",),
+            mla=MLAConfig(d, H, q_lora_rank=q_rank, kv_lora_rank=kv_rank,
+                          qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+                          dtype=BF16),
+            ffn=FFNConfig(d, d_ff_dense, activation="silu", glu=True, dtype=BF16),
+            moe=MoEConfig(d, d_ff_moe, n_experts=n_exp, top_k=8, n_shared=1,
+                          shared_d_ff=d_ff_moe, capacity_factor=1.25,
+                          router_softmax=False, n_groups=groups, dtype=BF16),
+            first_k_dense=first_dense, mtp_heads=1, dtype=BF16)
+    return ArchConfig(
+        name="deepseek-v3-671b", family="lm",
+        model=mk(7168, 61, 128, 129280, 256, 2048, 18432, 1536, 512, 3, 4096),
+        smoke_model=LMConfig(
+            name="deepseek-v3-671b", vocab=512, d_model=64, n_layers=3,
+            pattern=("moe",),
+            mla=MLAConfig(64, 4, q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                          qk_rope_dim=8, v_head_dim=16, dtype=BF16),
+            ffn=FFNConfig(64, 128, dtype=BF16),
+            moe=MoEConfig(64, 32, n_experts=4, top_k=2, n_shared=1,
+                          shared_d_ff=32, capacity_factor=2.0,
+                          router_softmax=False, n_groups=2, dtype=BF16),
+            first_k_dense=1, mtp_heads=1, dtype=BF16),
+        source="[arXiv:2412.19437; hf]", strategy="ep_df",
+        notes="MLA latent decode cache; expert parallelism (beyond-paper "
+              "strategy) carries the MoE FFN; MTP head depth 1")
+
+
+# ---------------------------------------------------------------------------
+# grok-1-314b — 8-expert top-2 MoE [hf:xai-org/grok-1; unverified]
+# ---------------------------------------------------------------------------
+@register("grok-1-314b")
+def grok_1_314b() -> ArchConfig:
+    def mk(d, L, H, KV, hd, ff, vocab, n_exp, groups):
+        return LMConfig(
+            name="grok-1-314b", vocab=vocab, d_model=d, n_layers=L,
+            pattern=("moe",),
+            attn=AttentionConfig(d, H, KV, hd, logit_softcap=30.0, dtype=BF16),
+            ffn=FFNConfig(d, ff, activation="gelu", glu=True, dtype=BF16),
+            moe=MoEConfig(d, ff, n_experts=n_exp, top_k=2,
+                          capacity_factor=1.25, activation="gelu", glu=True,
+                          n_groups=groups, dtype=BF16),
+            final_logit_softcap=30.0, embed_scale=True, tie_embeddings=True,
+            dtype=BF16)
+    return ArchConfig(
+        name="grok-1-314b", family="lm",
+        model=mk(6144, 64, 48, 8, 128, 32768, 131072, 8, 4096),
+        smoke_model=mk(64, 2, 4, 2, 16, 128, 512, 4, 2),
+        source="[hf:xai-org/grok-1; unverified]", strategy="ep_df",
+        notes="8 experts: expert-parallel limit p<=8 on the model axis "
+              "(paper Table 3 scaling-limit analog); EP8xTP2 folding")
+
+
+# ---------------------------------------------------------------------------
+# recurrentgemma-9b — RG-LRU + local attention 1:2 [arXiv:2402.19427]
+# ---------------------------------------------------------------------------
+@register("recurrentgemma-9b")
+def recurrentgemma_9b() -> ArchConfig:
+    def mk(d, L, H, KV, hd, ff, vocab, lru, window, nb):
+        return LMConfig(
+            name="recurrentgemma-9b", vocab=vocab, d_model=d, n_layers=L,
+            pattern=("rec", "rec", "local_attn"),
+            local_attn=AttentionConfig(d, H, KV, hd, window=window, dtype=BF16),
+            rglru=RGLRUConfig(d, lru, n_blocks=nb, dtype=BF16),
+            ffn=FFNConfig(d, ff, activation="gelu_tanh", glu=True, dtype=BF16),
+            tie_embeddings=True, embed_scale=True, dtype=BF16)
+    return ArchConfig(
+        name="recurrentgemma-9b", family="lm",
+        model=mk(4096, 38, 16, 1, 256, 12288, 256000, 4096, 2048, 16),
+        smoke_model=mk(64, 5, 4, 1, 16, 128, 512, 64, 16, 4),
+        source="[arXiv:2402.19427; unverified]", sub_quadratic=True,
+        notes="window-2048 ring cache + O(1) RG-LRU state make long_500k "
+              "runnable; recurrence serializes seq (no sequence parallelism)")
+
+
+# ---------------------------------------------------------------------------
+# paligemma-3b — SigLIP stub + gemma backbone [arXiv:2407.07726; hf]
+# ---------------------------------------------------------------------------
+@register("paligemma-3b")
+def paligemma_3b() -> ArchConfig:
+    def mk_lm(d, L, H, KV, hd, ff, vocab):
+        return LMConfig(
+            name="paligemma-3b", vocab=vocab, d_model=d, n_layers=L,
+            attn=AttentionConfig(d, H, KV, hd, dtype=BF16),
+            ffn=FFNConfig(d, ff, activation="gelu_tanh", glu=True, dtype=BF16),
+            tie_embeddings=True, embed_scale=True, dtype=BF16)
+    return ArchConfig(
+        name="paligemma-3b", family="vlm",
+        model=VLMConfig(lm=mk_lm(2048, 18, 8, 1, 256, 16384, 257216),
+                        d_vision=1152, n_patches=256),
+        smoke_model=VLMConfig(lm=mk_lm(64, 2, 4, 1, 16, 128, 512),
+                              d_vision=48, n_patches=8),
+        source="[arXiv:2407.07726; hf]",
+        shape_strategy={"decode_32k": "serve_seqkv"}, serve_kv_shards=16,
+        notes="SigLIP tower stubbed: input_specs() supplies patch embeddings; "
+              "MQA (kv=1) → KV replicated across the model axis, cost modeled "
+              "by the oracle")

@@ -1,0 +1,6 @@
+"""Config for --arch mamba2-780m (see lm_archs.py for the definition)."""
+from .base import get_config
+
+
+def config():
+    return get_config("mamba2-780m")

@@ -1,0 +1,6 @@
+"""Config for --arch qwen1.5-4b (see lm_archs.py for the definition)."""
+from .base import get_config
+
+
+def config():
+    return get_config("qwen1.5-4b")

@@ -1,0 +1,6 @@
+"""Config for --arch qwen3-32b (see lm_archs.py for the definition)."""
+from .base import get_config
+
+
+def config():
+    return get_config("qwen3-32b")

@@ -1,0 +1,6 @@
+"""Config for --arch recurrentgemma-9b (see lm_archs.py for the definition)."""
+from .base import get_config
+
+
+def config():
+    return get_config("recurrentgemma-9b")

@@ -1,0 +1,79 @@
+"""Strategy advisor — the oracle front-end (paper §4.1 use case 1).
+
+Given (model stats, system, batch, PE budget, memory cap), enumerate the
+strategies × group splits, drop infeasible points (scaling limits, memory),
+and rank the rest by projected per-iteration time. Also emits the breakdown
+table the paper's Fig. 3 plots.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .hardware import SystemModel
+from .layer_stats import LayerStat
+from .oracle import OracleConfig, Projection, TimeModel, project
+
+
+@dataclass
+class Recommendation:
+    best: Projection | None
+    ranked: list[Projection]
+    rejected: list[tuple[Projection, str]]
+
+
+def _split_candidates(p: int):
+    """Candidate (p1 data-groups, p2 model-width) factorizations."""
+    out = []
+    p1 = 1
+    while p1 <= p:
+        if p % p1 == 0:
+            out.append((p1, p // p1))
+        p1 *= 2
+    return out
+
+
+def advise(stats: list[LayerStat], tm: TimeModel, cfg: OracleConfig, p: int,
+           mem_cap: float | None = None,
+           strategies=("data", "spatial", "pipeline", "filter", "channel",
+                       "df", "ds", "ep")) -> Recommendation:
+    mem_cap = mem_cap or tm.system.mem_capacity
+    ranked, rejected = [], []
+    for s in strategies:
+        cands = [(None, None)]
+        if s in ("df", "ds", "ep"):
+            cands = _split_candidates(p)
+        for p1, p2 in cands:
+            try:
+                proj = project(s, stats, tm, cfg, p, p1=p1, p2=p2)
+            except ValueError:
+                continue
+            if not proj.feasible:
+                rejected.append((proj, f"scaling limit: {proj.limit}"))
+                continue
+            if proj.mem_bytes > mem_cap:
+                rejected.append(
+                    (proj, f"memory {proj.mem_bytes/2**30:.1f}GiB > "
+                           f"cap {mem_cap/2**30:.1f}GiB"))
+                continue
+            ranked.append(proj)
+    ranked.sort(key=lambda r: r.total_s)
+    # keep only the best split per strategy in the headline ranking
+    seen, dedup = set(), []
+    for r in ranked:
+        if r.strategy not in seen:
+            dedup.append(r)
+            seen.add(r.strategy)
+    return Recommendation(dedup[0] if dedup else None, dedup, rejected)
+
+
+def breakdown_table(recs: list[Projection]) -> str:
+    """Fig-3-style text table: per-iteration comp/comm per strategy."""
+    lines = [f"{'strategy':10s} {'p1xp2':>9s} {'comp_ms':>9s} {'comm_ms':>9s} "
+             f"{'total_ms':>9s} {'mem_GiB':>8s}"]
+    for r in recs:
+        it = r.per_iteration()
+        lines.append(
+            f"{r.strategy:10s} {r.p1:>4d}x{r.p2:<4d} {it['comp_s']*1e3:9.2f} "
+            f"{it['comm_s']*1e3:9.2f} {it['total_s']*1e3:9.2f} "
+            f"{r.mem_bytes/2**30:8.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,120 @@
+"""System models for the oracle (paper §4.2–4.4).
+
+The paper parametrizes a cluster by Hockney α–β per interconnect level plus
+per-PE compute throughput; levels here map to the TPU reality (ICI axes
+intra-pod, DCI across pods) or to the CPU host used for the measured
+validation runs. ``contention``(φ) divides a level's bandwidth by the number
+of logical flows sharing it (paper §4.3 contention modeling, self-contention
+only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Level:
+    """One interconnect level with Hockney parameters."""
+
+    name: str
+    alpha: float          # startup seconds per message
+    beta: float           # seconds per byte (1 / bandwidth)
+
+    def p2p(self, nbytes: float, phi: float = 1.0) -> float:
+        return self.alpha + nbytes * self.beta * phi
+
+    def allreduce_ring(self, p: int, nbytes: float, phi: float = 1.0) -> float:
+        """T_ar = 2(p−1)(α + (m/p)·δβ·φ) — paper §4.3."""
+        if p <= 1:
+            return 0.0
+        return 2 * (p - 1) * (self.alpha + nbytes / p * self.beta * phi)
+
+    def allgather_ring(self, p: int, nbytes: float, phi: float = 1.0) -> float:
+        """T_ag = (p−1)(α + (m/p)·δβ·φ); m = full gathered size."""
+        if p <= 1:
+            return 0.0
+        return (p - 1) * (self.alpha + nbytes / p * self.beta * phi)
+
+    def reduce_scatter_ring(self, p: int, nbytes: float, phi: float = 1.0) -> float:
+        if p <= 1:
+            return 0.0
+        return (p - 1) * (self.alpha + nbytes / p * self.beta * phi)
+
+    def alltoall(self, p: int, nbytes: float, phi: float = 1.0) -> float:
+        if p <= 1:
+            return 0.0
+        return (p - 1) * (self.alpha + nbytes / p * self.beta * phi)
+
+    def allreduce_tree(self, p: int, nbytes: float, k: int = 4,
+                       phi: float = 1.0) -> float:
+        """Small-message tree: 2(log p + k)(α + m/2k·β) — paper footnote 4."""
+        import math
+        if p <= 1:
+            return 0.0
+        return 2 * (math.log2(p) + k) * (self.alpha + nbytes / (2 * k) * self.beta * phi)
+
+    def allreduce(self, p: int, nbytes: float, phi: float = 1.0) -> float:
+        """Ring for large messages, tree for small (NCCL/ICI practice)."""
+        if nbytes < 65536:
+            return min(self.allreduce_tree(p, nbytes, phi=phi),
+                       self.allreduce_ring(p, nbytes, phi))
+        return self.allreduce_ring(p, nbytes, phi)
+
+
+@dataclass(frozen=True)
+class SystemModel:
+    """A machine: per-PE compute + interconnect levels keyed by mesh axis."""
+
+    name: str
+    peak_flops: float               # per-PE peak (bf16 for TPU)
+    hbm_bw: float                   # per-PE memory bandwidth
+    mem_capacity: float             # per-PE memory bytes
+    compute_efficiency: float       # fraction of peak for dense matmul
+    levels: tuple                   # ((axis_name, Level), ...)
+
+    def level(self, axis: str) -> Level:
+        for name, lvl in self.levels:
+            if name == axis:
+                return lvl
+        # default to the slowest level
+        return self.levels[-1][1]
+
+    def flops_time(self, flops: float) -> float:
+        return flops / (self.peak_flops * self.compute_efficiency)
+
+
+# TPU v5e pod: ICI 2D torus ~50 GB/s/link per axis, DCI between pods.
+TPU_V5E_POD = SystemModel(
+    name="tpu-v5e-256",
+    peak_flops=197e12, hbm_bw=819e9, mem_capacity=16e9,
+    compute_efficiency=0.55,
+    levels=(
+        ("model", Level("ici-x", alpha=1e-6, beta=1 / 45e9)),
+        ("data", Level("ici-y", alpha=1e-6, beta=1 / 45e9)),
+        ("pod", Level("dci", alpha=10e-6, beta=1 / 25e9)),
+    ))
+
+# The paper's own system (ABCI-like: V100s, NVLink intra-node, IB inter-node)
+PAPER_V100_CLUSTER = SystemModel(
+    name="v100-abci",
+    peak_flops=125e12, hbm_bw=900e9, mem_capacity=16e9,
+    compute_efficiency=0.35,
+    levels=(
+        ("model", Level("nvlink", alpha=5e-6, beta=1 / 20e9)),
+        ("data", Level("ib-edr", alpha=15e-6, beta=1 / 12.5e9)),
+        ("pod", Level("ib-rack", alpha=25e-6, beta=1 / 4.2e9)),
+    ))
+
+
+def cpu_host_model(alpha: float = 3e-5, beta: float = 1 / 8e9,
+                   flops: float = 5e10, efficiency: float = 1.0) -> SystemModel:
+    """The measured-validation target: virtual host devices on this CPU.
+
+    Defaults are placeholders — core/calibration.py measures the real values
+    (paper §4.4 empirical parametrization).
+    """
+    lvl = Level("shm", alpha=alpha, beta=beta)
+    return SystemModel(
+        name="cpu-host", peak_flops=flops, hbm_bw=30e9, mem_capacity=8e9,
+        compute_efficiency=efficiency,
+        levels=(("model", lvl), ("data", lvl), ("pod", lvl)))

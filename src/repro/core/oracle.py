@@ -1,0 +1,286 @@
+"""ParaDL oracle: the paper's Table-3 analytical model, generalized.
+
+Projects per-epoch (and per-iteration) computation time, communication time
+and per-PE memory for each parallel strategy, from per-layer stats
+(layer_stats.py) + a system model (hardware.py). Every formula carries its
+paper provenance; rows marked *beyond-paper* extend the taxonomy (ZeRO,
+expert parallelism, sequence-parallel residual streams) with the same α–β
+methodology.
+
+Compute times FW_l/BW_l/WU_l come from either
+  * projection mode — FLOPs / (peak × efficiency)   (TPU projections), or
+  * calibrated mode — a measured per-layer table     (paper §4.4; used by the
+    Fig-3 reproduction on host devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .hardware import SystemModel
+from .layer_stats import LayerStat
+
+STRATEGY_NAMES = ("serial", "data", "spatial", "pipeline", "filter", "channel",
+                  "df", "ds", "ep")
+
+
+@dataclass(frozen=True)
+class TimeModel:
+    """Source of FW/BW/WU times (paper §4.4 empirical parametrization)."""
+
+    system: SystemModel
+    calibrated: dict | None = None     # name -> (fw_s, bw_s, wu_s) per sample
+    wu_bytes_per_param: float = 16.0   # adam: m+v+p fp32 read/write amortized
+
+    def fw(self, st: LayerStat) -> float:
+        if self.calibrated and st.name in self.calibrated:
+            return self.calibrated[st.name][0]
+        return self.system.flops_time(st.flops_fwd)
+
+    def bw(self, st: LayerStat) -> float:
+        if self.calibrated and st.name in self.calibrated:
+            return self.calibrated[st.name][1]
+        return self.system.flops_time(st.flops_bwd)
+
+    def wu(self, st: LayerStat) -> float:
+        if self.calibrated and st.name in self.calibrated:
+            return self.calibrated[st.name][2]
+        return st.w * self.wu_bytes_per_param / self.system.hbm_bw
+
+
+@dataclass
+class Projection:
+    """Oracle output for one (strategy, p) point. Times are PER EPOCH;
+    ``per_iteration()`` divides by D/B."""
+
+    strategy: str
+    p: int
+    p1: int                      # data-parallel groups (hybrids)
+    p2: int                      # model-parallel width (hybrids)
+    comp_s: float
+    comm_ge_s: float             # gradient exchange (paper GE)
+    comm_fb_s: float             # layer-wise collectives in FB (filter/channel)
+    comm_halo_s: float           # spatial halo exchange
+    comm_p2p_s: float            # pipeline stage-boundary traffic
+    mem_bytes: float
+    feasible: bool
+    limit: str
+    iterations: float
+    phases: dict = field(default_factory=dict)
+
+    @property
+    def comm_s(self) -> float:
+        return self.comm_ge_s + self.comm_fb_s + self.comm_halo_s + self.comm_p2p_s
+
+    @property
+    def total_s(self) -> float:
+        return self.comp_s + self.comm_s
+
+    def per_iteration(self) -> dict:
+        it = max(self.iterations, 1.0)
+        return {"comp_s": self.comp_s / it, "comm_s": self.comm_s / it,
+                "total_s": self.total_s / it}
+
+
+@dataclass(frozen=True)
+class OracleConfig:
+    B: int                        # global mini-batch (weak scaling: B = b·p)
+    D: int                        # dataset samples per epoch
+    delta: float = 2.0            # bytes per element (bf16)
+    gamma: float = 0.6            # memory reuse factor (paper §4.2, [20,28])
+    phi_hybrid: float = 2.0       # contention coefficient for df (paper §5.2)
+    segments: int = 8             # pipeline micro-batch segments S
+    zero1: bool = False           # shard WU across DP ranks ([52], §5.3.3)
+    # beyond-paper memory-model extensions (each documented in DESIGN.md):
+    remat: bool = False           # activation checkpointing: keep |x_l| only
+    zero3: bool = False           # params sharded over DP too (ZeRO-3 / [38])
+    seq_parallel: bool = False    # residual stream sharded over model axis
+    opt_bytes_per_param: float = 8.0  # adam m+v fp32
+
+
+def _sum_w(stats):   # total weight elements
+    return float(sum(s.w for s in stats))
+
+
+def _limits(stats, strategy):
+    if strategy == "data":
+        return "p <= B (micro-batch >= 1 sample)"
+    if strategy == "spatial":
+        return "p <= min spatial extent; inapplicable to recurrent-seq layers"
+    if strategy == "pipeline":
+        return "p <= G layers"
+    if strategy == "filter":
+        return "p <= min F_l"
+    if strategy == "channel":
+        return "p <= min C_l"
+    return ""
+
+
+def project(strategy: str, stats: list[LayerStat], tm: TimeModel,
+            cfg: OracleConfig, p: int, p1: int | None = None,
+            p2: int | None = None) -> Projection:
+    """One Table-3 row evaluated at p PEs."""
+    sysm = tm.system
+    B, D, delta, gamma = cfg.B, cfg.D, cfg.delta, cfg.gamma
+    iters = D / B
+    lvl_model = sysm.level("model")
+    lvl_data = sysm.level("data")
+    FW = sum(tm.fw(s) for s in stats)
+    BW = sum(tm.bw(s) for s in stats)
+    WU = sum(tm.wu(s) for s in stats)
+    Wbytes = _sum_w(stats) * delta
+    bi = sum(getattr(s, "bias", 0) for s in stats)
+    feasible, limit = True, _limits(stats, strategy)
+    p2_eff = p2 or (p if strategy in ("filter", "channel", "spatial") else 1)
+
+    def mem(act_div=1.0, w_div=1.0, stats_subset=None, dp=1):
+        """Per-PE memory. Paper Table-3 expression, extended with remat/
+        ZeRO-3/seq-parallel switches and optimizer state (beyond-paper)."""
+        ss = stats_subset or stats
+        act = sum(B * (s.x if cfg.remat else 2 * (s.x + s.y)) / act_div
+                  for s in ss)
+        if cfg.seq_parallel and p2_eff > 1:
+            act /= p2_eff
+        wdiv = w_div * (dp if cfg.zero3 else 1)
+        w_elems = sum(s.w for s in ss)
+        wmem = 2 * w_elems / wdiv * delta           # params + grads
+        opt = w_elems * cfg.opt_bytes_per_param / (
+            w_div * (dp if (cfg.zero1 or cfg.zero3) else 1))
+        return gamma * delta * act + wmem + opt
+
+    if strategy == "serial":
+        return Projection("serial", 1, 1, 1, D * (FW + BW) + iters * WU,
+                          0, 0, 0, 0, mem(), True, "p = 1", iters)
+
+    if strategy == "data":
+        feasible = p <= B
+        comp = D / p * (FW + BW) + iters * WU
+        if cfg.zero1:
+            comp = D / p * (FW + BW) + iters * WU / p
+        ge = iters * lvl_data.allreduce(p, Wbytes)
+        return Projection("data", p, p, 1, comp, ge, 0, 0, 0,
+                          mem(act_div=p, dp=p), feasible,
+                          "p <= B" + ("" if feasible else f" violated (B={B})"),
+                          iters)
+
+    if strategy == "spatial":
+        sp_min = min((s.spatial for s in stats
+                      if s.kind in ("conv", "attn") and s.spatial > 1),
+                     default=1)
+        feasible = p <= sp_min and not any(s.seq_recurrent for s in stats)
+        comp = D / p * (FW + BW) + iters * WU
+        ge = iters * lvl_data.allreduce(p, Wbytes)
+        halo = iters * sum(
+            2 * (2 * lvl_model.alpha + 2 * B * s.halo * delta * lvl_model.beta)
+            for s in stats if s.halo)
+        return Projection("spatial", p, 1, p, comp, ge, 0, halo, 0,
+                          mem(act_div=p), feasible,
+                          f"p <= min spatial ({sp_min})"
+                          + ("" if feasible else " or recurrent-seq violated"),
+                          iters)
+
+    if strategy == "pipeline":
+        G = len(stats)
+        feasible = p <= G
+        S = cfg.segments
+        # balanced grouping: max stage ≈ total/p (workload-balancing caveat
+        # recorded by the paper §5.3.3)
+        fw_max = FW / p
+        bw_max = BW / p
+        wu_max = WU / p
+        comp = D * (p + S - 1) / S * (fw_max + bw_max) + iters * wu_max
+        bound_y = max((s.y for s in stats), default=0)
+        p2p = 2 * D * (p + S - 2) / B * (lvl_model.alpha
+                                         + B / S * bound_y * delta * lvl_model.beta)
+        m = gamma * delta * max(
+            sum(2 * B * (s.x + s.y) + 2 * s.w for s in stats) / p, 1.0)
+        return Projection("pipeline", p, 1, p, comp, 0, 0, 0, p2p, m,
+                          feasible, f"p <= G ({G})", iters)
+
+    if strategy in ("filter", "channel"):
+        lim = min((s.F if strategy == "filter" else s.C)
+                  for s in stats if s.kind in ("conv", "fc", "attn", "ffn",
+                                               "moe", "ssm", "rec"))
+        feasible = p <= lim
+        comp = D / p * (FW + BW) + iters * WU / p
+        fb = 3 * iters * sum(
+            (p - 1) * (lvl_model.alpha + B * s.y * delta / p * lvl_model.beta)
+            for s in stats[:-1])
+        return Projection(strategy, p, 1, p, comp, 0, fb, 0, 0,
+                          mem(w_div=p), feasible,
+                          f"p <= min {'F' if strategy == 'filter' else 'C'}_l "
+                          f"({lim})", iters)
+
+    if strategy == "df":
+        p1 = p1 or max(p // 16, 1)
+        p2 = p2 or p // p1
+        lim = min(s.F for s in stats if s.kind in ("conv", "fc", "attn", "ffn",
+                                                   "moe", "ssm", "rec"))
+        feasible = p1 * p2 == p and p2 <= lim and p1 <= B
+        comp = D / p * (FW + BW) + iters * WU / p2
+        if cfg.zero1:
+            comp = D / p * (FW + BW) + iters * WU / p
+        fb = 3 * iters * sum(
+            (p2 - 1) * (lvl_model.alpha + B * s.y * delta / p * lvl_model.beta)
+            for s in stats[:-1])
+        ge = iters * lvl_data.allreduce(p1, Wbytes / p2, phi=cfg.phi_hybrid)
+        return Projection("df", p, p1, p2, comp, ge, fb, 0, 0,
+                          mem(act_div=p1, w_div=p2, dp=p1),
+                          feasible, f"p = p1·p2 <= B·min F ({B}·{lim})", iters)
+
+    if strategy == "ds":
+        p1 = p1 or max(p // 16, 1)
+        p2 = p2 or p // p1
+        sp_min = min((s.spatial for s in stats
+                      if s.kind in ("conv", "attn") and s.spatial > 1),
+                     default=1)
+        feasible = p1 * p2 == p and p2 <= sp_min and p1 <= B and \
+            not any(s.seq_recurrent for s in stats)
+        comp = D / p * (FW + BW) + iters * WU
+        if cfg.zero1:
+            comp = D / p * (FW + BW) + iters * WU / p
+        halo = iters * sum(
+            2 * (2 * lvl_model.alpha
+                 + 2 * (B / p1) * s.halo * delta * lvl_model.beta)
+            for s in stats if s.halo)
+        ge = iters * lvl_data.allreduce(p, Wbytes, phi=cfg.phi_hybrid)
+        return Projection("ds", p, p1, p2, comp, ge, 0, halo, 0,
+                          mem(act_div=p, dp=p1), feasible,
+                          f"p2 <= min spatial ({sp_min}); recurrent-seq blocks",
+                          iters)
+
+    if strategy == "ep":  # beyond-paper: expert parallelism for MoE
+        p1 = p1 or max(p // 16, 1)
+        p2 = p2 or p // p1
+        moe_stats = [s for s in stats if s.kind == "moe"]
+        if not moe_stats:
+            return Projection("ep", p, p1, p2, 0, 0, 0, 0, 0, 0, False,
+                              "no MoE layers", iters)
+        lim = min(s.F for s in moe_stats)  # experts
+        feasible = p2 <= lim and p1 <= B
+        comp = D / p * (FW + BW) + iters * WU / p
+        # two all-to-alls per MoE layer per direction (dispatch + combine)
+        fb = 4 * iters * sum(
+            lvl_model.alltoall(p2, B * s.y * delta / p1)
+            for s in moe_stats)
+        ge = iters * lvl_data.allreduce(p1, Wbytes / p2, phi=cfg.phi_hybrid)
+        return Projection("ep", p, p1, p2, comp, ge, fb, 0, 0,
+                          mem(act_div=p1, w_div=p2, dp=p1),
+                          feasible, f"p2 <= n_experts ({lim})", iters)
+
+    raise ValueError(strategy)
+
+
+def project_all(stats, tm: TimeModel, cfg: OracleConfig, p: int,
+                strategies=STRATEGY_NAMES) -> list[Projection]:
+    out = []
+    for s in strategies:
+        if s == "serial" and p != 1:
+            continue
+        try:
+            out.append(project(s, stats, tm, cfg, p))
+        except ValueError:
+            pass
+    return out

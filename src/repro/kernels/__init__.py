@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots (validated in interpret mode).
+
+flash_attention/ - FlashAttention-2-style fused attention
+ssd_scan/        - Mamba-2 SSD chunk kernel
+conv2d_gemm/     - implicit-GEMM convolution (the paper's CNN hot spot)
+rmsnorm/         - fused RMSNorm
+"""
+from .flash_attention.ops import attention_ref, flash_attention
+from .ssd_scan.ops import ssd_chunk, ssd_ref
+from .conv2d_gemm.ops import conv2d_gemm, conv2d_ref
+from .rmsnorm.ops import rmsnorm, rmsnorm_ref

@@ -1,0 +1,53 @@
+"""Implicit-GEMM conv2d Pallas kernel (the paper's CNN compute hot spot).
+
+Hardware adaptation (DESIGN.md): cuDNN's implicit GEMM tiles for SMs/shared
+memory; on TPU the conv is re-expressed as kh·kw shifted (H·W, C) × (C, F)
+matmuls accumulated in fp32 — each contraction feeds the 128×128 MXU, the
+image tile + filter block live in VMEM. Grid: (batch, F/BF). Input is
+pre-padded in ops.py so the kernel body is branch-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, H: int, W: int, kh: int, kw: int,
+                 c: int, bf: int):
+    x = x_ref[...]                      # (H+kh-1, W+kw-1, C) padded tile
+    acc = jnp.zeros((H * W, bf), jnp.float32)
+    for di in range(kh):
+        for dj in range(kw):
+            patch = jax.lax.dynamic_slice(x, (di, dj, 0), (H, W, c))
+            mat = patch.reshape(H * W, c)
+            wk = w_ref[di, dj]          # (C, BF)
+            acc += jax.lax.dot(mat, wk, preferred_element_type=jnp.float32)
+    o_ref[...] = acc.reshape(H, W, bf).astype(o_ref.dtype)
+
+
+def conv2d_gemm(x, w, *, block_f: int = 128, interpret: bool = False):
+    """Stride-1 SAME conv. x: (B,H,W,C); w: (kh,kw,C,F) → (B,H,W,F)."""
+    B, H, W, C = x.shape
+    kh, kw, _, F = w.shape
+    bf = min(block_f, F)
+    while F % bf:
+        bf -= 1
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+
+    kernel = functools.partial(_conv_kernel, H=H, W=W, kh=kh, kw=kw, c=C, bf=bf)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, F // bf),
+        in_specs=[
+            pl.BlockSpec((None, H + kh - 1, W + kw - 1, C),
+                         lambda b, f: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, C, bf), lambda b, f: (0, 0, 0, f)),
+        ],
+        out_specs=pl.BlockSpec((None, H, W, bf), lambda b, f: (b, 0, 0, f)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, F), x.dtype),
+        interpret=interpret,
+    )(xp, w)

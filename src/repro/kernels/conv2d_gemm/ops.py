@@ -1,0 +1,16 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .conv2d_gemm import conv2d_gemm as _conv2d_gemm
+from .ref import conv2d_ref
+
+
+@partial(jax.jit, static_argnames=("block_f", "interpret"))
+def conv2d_gemm(x, w, *, block_f: int = 128, interpret: bool = False):
+    return _conv2d_gemm(x, w, block_f=block_f, interpret=interpret)
+
+
+__all__ = ["conv2d_gemm", "conv2d_ref"]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: stride-1 SAME 2-D convolution (channels-last)."""
+import jax
+
+
+def conv2d_ref(x, w):
+    """x: (B, H, W, C); w: (kh, kw, C, F) → (B, H, W, F)."""
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    return jax.lax.conv_general_dilated(x, w, (1, 1), "SAME",
+                                        dimension_numbers=dn)

@@ -1,0 +1,18 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .rmsnorm import rmsnorm as _rmsnorm
+from .ref import rmsnorm_ref
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    return _rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                    interpret=interpret)
+
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]

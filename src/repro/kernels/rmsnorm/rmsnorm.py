@@ -1,0 +1,43 @@
+"""Fused RMSNorm Pallas kernel: one HBM round-trip per row block.
+
+Grid over row blocks; each block loads (BR, D) into VMEM, reduces in fp32 on
+the VPU, scales, writes back. D is lane-aligned (multiple of 128) for every
+assigned arch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    """x: (..., D); scale: (D,)."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    br = min(block_rows, R)
+    while R % br:
+        br -= 1
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    return out.reshape(orig_shape)

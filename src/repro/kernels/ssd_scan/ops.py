@@ -1,0 +1,16 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ssd_scan import ssd_chunk as _ssd_chunk
+from .ref import ssd_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    return _ssd_chunk(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+__all__ = ["ssd_chunk", "ssd_ref"]

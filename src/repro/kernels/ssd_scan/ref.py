@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD chunk kernel: naive per-token recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Naive SSD recurrence.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm/Cm: (B,S,H,N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        dA = jnp.exp(dtt * A)                             # (B,H)
+        state = state * dA[:, :, None, None] + \
+            jnp.einsum("bh,bhn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), final

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunk computation.
+
+Per (batch, chunk) program: the quadratic intra-chunk term and the chunk
+state — the compute hot spot of the SSD algorithm [arXiv:2405.21060]. The
+inter-chunk (length S/Q) linear recurrence is left to an associative scan in
+ops.py: it is O(S/Q) tiny tensors and not kernel-worthy.
+
+VMEM budget per program (mamba2-780m, Q=128, H=48, P=64, N=128):
+x (Q,H·P) bf16 0.8 MiB + B/C (Q,H·N) 1.5 MiB + scores/L (H,Q,Q) fp32
+6 MiB — comfortably inside ~128 MiB, MXU-aligned contractions (N=128,
+Q multiples of 128 on target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, state_ref, decay_ref, *, q: int, h: int,
+                      p: int, n: int):
+    x = x_ref[...].astype(jnp.float32).reshape(q, h, p)
+    dt = dt_ref[...].astype(jnp.float32)                 # (Q, H)
+    A = a_ref[...].astype(jnp.float32)                   # (H,)
+    Bm = b_ref[...].astype(jnp.float32).reshape(q, h, n)
+    Cm = c_ref[...].astype(jnp.float32).reshape(q, h, n)
+
+    dA = dt * A                                          # (Q, H)
+    cum = jnp.cumsum(dA, axis=0)                         # (Q, H)
+
+    # scores (H, Qi, Qj) = C_i · B_j
+    Ch = Cm.transpose(1, 0, 2)                           # (H, Q, N)
+    Bh = Bm.transpose(1, 0, 2)
+    scores = jax.lax.dot_general(Ch, Bh, (((2,), (2,)), ((0,), (0,))))
+    diff = cum.T[:, :, None] - cum.T[:, None, :]         # (H, Qi, Qj)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(iota_i[None] >= iota_j[None], jnp.exp(diff), 0.0)
+    w = scores * L * dt.T[:, None, :]                    # (H, Qi, Qj)
+    xh = x.transpose(1, 0, 2)                            # (H, Q, P)
+    y = jax.lax.dot_general(w, xh, (((2,), (1,)), ((0,), (0,))))  # (H,Q,P)
+    y_ref[...] = y.transpose(1, 0, 2).reshape(q, h * p).astype(y_ref.dtype)
+
+    # chunk state (H, P, N) = Σ_j decay_end_j · dt_j · x_j ⊗ B_j
+    decay_end = jnp.exp(cum[-1][None, :] - cum)          # (Q, H)
+    xw = (xh * (decay_end * dt).T[:, :, None])           # (H, Q, P)
+    st = jax.lax.dot_general(xw, Bh, (((1,), (1,)), ((0,), (0,))))  # (H,P,N)
+    state_ref[...] = st.reshape(h, p * n).astype(state_ref.dtype)
+    decay_ref[...] = jnp.exp(cum[-1]).astype(decay_ref.dtype)       # (H,)
+
+
+def ssd_chunk(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """Chunked SSD via the Pallas kernel + associative inter-chunk scan.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,H,N) (groups pre-repeated).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nC = S // Q
+
+    kernel = functools.partial(_ssd_chunk_kernel, q=Q, h=H, p=P, n=N)
+    y, states, decays = pl.pallas_call(
+        kernel,
+        grid=(Bsz, nC),
+        in_specs=[
+            pl.BlockSpec((None, Q, H * P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, Q, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((None, Q, H * N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, Q, H * N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, Q, H * P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, None, H, P * N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((None, None, H), lambda b, c: (b, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, nC * Q, H * P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, nC, H, P * N), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, nC, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.reshape(Bsz, S, H * P), dt, A,
+      Bm.reshape(Bsz, S, H * N), Cm.reshape(Bsz, S, H * N))
+
+    y_intra = y.reshape(Bsz, nC, Q, H, P)
+    states = states.reshape(Bsz, nC, H, P, N)
+    # inter-chunk associative scan (host-side jnp; O(nC) small tensors)
+    dec = jnp.moveaxis(decays, 1, 0)                    # (nC, B, H)
+    st = jnp.moveaxis(states, 1, 0)
+
+    def assoc(a, b):
+        da, sa = a
+        db, sb = b
+        return da * db, sb + sa * db[..., None, None]
+
+    dec_c, st_c = jax.lax.associative_scan(assoc, (dec, st), axis=0)
+    prev = jnp.concatenate([jnp.zeros_like(st_c[:1]), st_c[:-1]], axis=0)
+    prev = jnp.moveaxis(prev, 0, 1)                     # (B, nC, H, P, N)
+
+    dt_c = dt.reshape(Bsz, nC, Q, H)
+    A_c = dt_c * A
+    in_decay = jnp.exp(jnp.cumsum(A_c, axis=2))
+    Cc = Cm.reshape(Bsz, nC, Q, H, N)
+    y_inter = jnp.einsum("bcjh,bcjhn,bchpn->bcjhp", in_decay, Cc, prev)
+    y_total = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y_total, jnp.moveaxis(st_c, 0, 1)[:, -1]

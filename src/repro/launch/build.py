@@ -1,0 +1,196 @@
+"""Cell builder: (arch × shape × mesh × strategy) → step fn + abstract inputs.
+
+Shared by the dry-run, the trainer, the server and the benchmarks — one
+source of truth for how a cell is assembled. ``input_specs`` produces
+ShapeDtypeStruct stand-ins (weak-type-correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, ArchConfig, ShapeSpec
+from ..models.cnn import CosmoFlow, CosmoFlowConfig, ResNet, ResNetConfig, VGG, VGGConfig
+from ..models.encdec import EncDecConfig, EncDecLM
+from ..models.transformer import LMConfig, TransformerLM
+from ..models.vlm import VLM, VLMConfig
+from ..nn.module import Rules, ShardingCtx, spec_to_pspec, tree_abstract
+from ..optim.optimizers import OptimizerConfig, zero1_rules
+from ..parallel.strategies import make_rules
+from ..training.steps import (make_decode_step, make_prefill_step,
+                              make_train_step, train_state_spec)
+
+
+def build_model(cfg: ArchConfig, smoke: bool = False):
+    mc = cfg.smoke_model if smoke else cfg.model
+    if isinstance(mc, LMConfig):
+        return TransformerLM(mc)
+    if isinstance(mc, EncDecConfig):
+        return EncDecLM(mc)
+    if isinstance(mc, VLMConfig):
+        return VLM(mc)
+    if isinstance(mc, ResNetConfig):
+        return ResNet(mc)
+    if isinstance(mc, VGGConfig):
+        return VGG(mc)
+    if isinstance(mc, CosmoFlowConfig):
+        return CosmoFlow(mc)
+    raise TypeError(type(mc))
+
+
+def _shard(mesh, rules, shape, axes, dtype):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    pspec = spec_to_pspec(axes, rules, mesh, shape)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, pspec))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh, rules: Rules,
+                smoke: bool = False) -> dict:
+    """Abstract training/prefill batch for this arch family."""
+    mc = cfg.smoke_model if smoke else cfg.model
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: _shard(mesh, rules, s, ("batch", None), jnp.int32)
+    if cfg.family == "lm":
+        return {"tokens": tok((B, S))}
+    if cfg.family == "encdec":
+        frames = _shard(mesh, rules, (B, mc.max_source_positions, mc.d_model),
+                        ("batch", None, None), jnp.float32)
+        return {"frames": frames,
+                "tokens": tok((B, min(S, mc.max_target_positions)))}
+    if cfg.family == "vlm":
+        patches = _shard(mesh, rules, (B, mc.n_patches, mc.d_vision),
+                         ("batch", None, None), jnp.float32)
+        return {"patches": patches, "tokens": tok((B, S - mc.n_patches))}
+    raise ValueError(f"batch_specs for family {cfg.family}")
+
+
+def cnn_batch_specs(cfg: ArchConfig, global_batch: int, mesh, rules: Rules,
+                    smoke: bool = False) -> dict:
+    mc = cfg.smoke_model if smoke else cfg.model
+    if isinstance(mc, CosmoFlowConfig):
+        img = _shard(mesh, rules, (global_batch, mc.img, mc.img, mc.img, mc.in_ch),
+                     ("batch", "spatial", None, None, None), jnp.float32)
+        tgt = _shard(mesh, rules, (global_batch, mc.n_targets),
+                     ("batch", None), jnp.float32)
+        return {"images": img, "targets": tgt}
+    img_size = getattr(mc, "img", 224)
+    img = _shard(mesh, rules, (global_batch, img_size, img_size, 3),
+                 ("batch", "spatial", None, None), jnp.float32)
+    lab = _shard(mesh, rules, (global_batch,), ("batch",), jnp.int32)
+    return {"images": img, "labels": lab}
+
+
+@dataclass
+class BuiltCell:
+    arch: str
+    shape: str
+    strategy: str
+    model: Any
+    ctx: ShardingCtx
+    step_fn: Any          # jittable
+    args: tuple           # abstract (or concrete) arguments for step_fn
+    kind: str             # train | prefill | decode
+    n_scan_groups: int    # for HLO cost extrapolation
+    meta: dict
+
+
+def _scan_groups(model) -> int:
+    if isinstance(model, TransformerLM):
+        _, g, _ = model._groups()
+        return g
+    if isinstance(model, EncDecLM):
+        return model.cfg.n_enc_layers  # == n_dec_layers for whisper
+    if isinstance(model, VLM):
+        _, g, _ = TransformerLM(model.cfg.lm)._groups()
+        return g
+    return 0
+
+
+def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = None,
+               *, smoke: bool = False, scan_layers: bool = True,
+               unroll_attn: bool = False, kv_shards: int = 1,
+               q_chunk: int = 1024, kv_chunk: int = 1024,
+               opt: OptimizerConfig | None = None, accum: int = 1,
+               override_layers: int | None = None) -> BuiltCell:
+    """Assemble one (arch × shape) cell under a strategy on a mesh."""
+    shape = SHAPES[shape_name]
+    strategy = strategy or cfg.strategy_for(shape_name)
+    rules = make_rules(strategy)
+    opt = opt or OptimizerConfig(zero1="zero1" in strategy)
+    mc = cfg.smoke_model if smoke else cfg.model
+    if override_layers is not None:
+        mc = _with_layers(mc, override_layers)
+        cfg = dataclasses.replace(cfg, model=mc, smoke_model=mc)
+    model = build_model(cfg, smoke=smoke)
+    ctx = ShardingCtx(mesh, rules)
+    kw = dict(scan_layers=scan_layers)
+    if cfg.family in ("lm", "vlm"):
+        kw.update(q_chunk=q_chunk, kv_chunk=kv_chunk)
+        if unroll_attn:
+            kw.update(unroll_attn=True)
+    meta = {"strategy": strategy, "family": cfg.family}
+
+    if shape.kind == "train":
+        if cfg.family in ("lm", "vlm") and unroll_attn:
+            kw["attn_impl"] = "chunked"
+        step = make_train_step(model, opt, ctx, accum=accum, **kw)
+        state_rules = zero1_rules(rules) if opt.zero1 else rules
+        sspec = train_state_spec(model, opt)
+        state = {
+            "params": tree_abstract(sspec["params"], mesh=mesh, rules=rules),
+            "opt": tree_abstract(sspec["opt"], mesh=mesh, rules=state_rules),
+            "step": tree_abstract(sspec["step"], mesh=mesh, rules=rules),
+        }
+        batch = batch_specs(cfg, shape, mesh, rules, smoke)
+        return BuiltCell(cfg.name, shape_name, strategy, model, ctx, step,
+                         (state, batch), "train", _scan_groups(model), meta)
+
+    # serving cells ---------------------------------------------------------
+    params = tree_abstract(model.params_spec(), mesh=mesh, rules=rules)
+    B, S = shape.global_batch, shape.seq_len
+    serve_kw = {k: v for k, v in kw.items() if k != "remat"}
+    if shape.kind == "prefill":
+        cache = tree_abstract(model.cache_spec(B, S, shards=kv_shards),
+                              mesh=mesh, rules=rules)
+        if cfg.family == "encdec":
+            serve_kw.pop("q_chunk", None)
+            serve_kw.pop("kv_chunk", None)
+        step = make_prefill_step(model, ctx, **serve_kw)
+        batch = batch_specs(cfg, shape, mesh, rules, smoke)
+        return BuiltCell(cfg.name, shape_name, strategy, model, ctx, step,
+                         (params, batch, cache), "prefill",
+                         _scan_groups(model), meta)
+
+    if shape.kind == "decode":
+        cache = tree_abstract(model.cache_spec(B, S, shards=kv_shards),
+                              mesh=mesh, rules=rules)
+        serve_kw2 = {"scan_layers": scan_layers}
+        step = make_decode_step(model, ctx, **serve_kw2)
+        rules_tok = rules
+        token = _shard(mesh, rules_tok, (B, 1), ("batch", None), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return BuiltCell(cfg.name, shape_name, strategy, model, ctx, step,
+                         (params, token, cache, pos), "decode",
+                         _scan_groups(model), meta)
+
+    raise ValueError(shape.kind)
+
+
+def _with_layers(mc, n: int):
+    """Clone a model config with a different layer count (cost extrapolation)."""
+    if isinstance(mc, LMConfig):
+        return dataclasses.replace(mc, n_layers=n, first_k_dense=0, mtp_heads=0)
+    if isinstance(mc, EncDecConfig):
+        return dataclasses.replace(mc, n_enc_layers=n, n_dec_layers=n)
+    if isinstance(mc, VLMConfig):
+        return dataclasses.replace(
+            mc, lm=dataclasses.replace(mc.lm, n_layers=n, first_k_dense=0,
+                                       mtp_heads=0))
+    raise TypeError(type(mc))

@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) and both production meshes
+(16×16 single-pod; 2×16×16 multi-pod), this driver:
+
+  1. lowers + compiles the full step with scan-over-layers
+     (proves sharding coherence; prints memory_analysis + cost_analysis),
+  2. compiles 1-group and 2-group unrolled variants under identical
+     shardings (exact per-layer-group HLO cost),
+  3. combines them (core/hlo_analysis.combine) and derives the roofline
+     terms (core/roofline), writing one JSON artifact per cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from ..configs import ASSIGNED_ARCHS, SHAPES, get_config
+from ..core.hlo_analysis import combine, cost_of
+from ..core.roofline import V5E, roofline
+from ..models.transformer import TransformerLM
+from ..models.vlm import VLM
+from ..models.encdec import EncDecLM
+from ..nn.module import tree_num_params
+from ..parallel.strategies import make_rules
+from .build import build_cell
+from .mesh import make_production_mesh
+
+
+def default_strategy(cfg, shape_name: str) -> str:
+    kind = SHAPES[shape_name].kind
+    if shape_name in cfg.shape_strategy:
+        return cfg.shape_strategy[shape_name]
+    if kind in ("decode", "prefill"):
+        return "ep_df" if cfg.strategy == "ep_df" else "serve_tp"
+    return cfg.strategy
+
+
+def _pattern_period(model) -> int:
+    if isinstance(model, TransformerLM):
+        return len(model.cfg.pattern)
+    if isinstance(model, VLM):
+        return len(model.cfg.lm.pattern)
+    return 1
+
+
+def model_flops_of(model, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train), 2·N·D (prefill), 2·N·B (decode);
+    N = active params for MoE. Enc-dec models don't fit the 6·N·D shorthand
+    (the encoder sees T_enc=1500 frames, not the 32k decoder positions), so
+    they use the oracle's per-layer stats instead."""
+    if isinstance(model, EncDecLM):
+        from ..core.layer_stats import encdec_stats
+        S = shape.seq_len if kind != "decode" else 1
+        S = min(S, model.cfg.max_target_positions) if kind == "train" else S
+        stats = encdec_stats(model.cfg, S if kind != "prefill" else 1)
+        fwd = sum(s.flops_fwd for s in stats)
+        B = shape.global_batch
+        return B * fwd * (3.0 if kind == "train" else 1.0)
+    n = tree_num_params(model.params_spec())
+    lm_cfg = getattr(model, "cfg", None)
+    moe = getattr(lm_cfg, "moe", None)
+    if moe is None and hasattr(lm_cfg, "lm"):
+        moe = lm_cfg.lm.moe
+    if moe is not None:
+        # subtract the inactive routed-expert fraction
+        expert_params = 0
+        per_expert = moe.d_ff * moe.d_model * (3 if moe.glu else 2)
+        n_moe_layers = 0
+        if isinstance(model, TransformerLM):
+            n_moe_layers = sum(1 for k in model.cfg.block_kinds() if k == "moe")
+        routed = per_expert * moe.n_experts * n_moe_layers
+        active = per_expert * moe.top_k * n_moe_layers
+        n = n - routed + active
+    B, S = shape.global_batch, shape.seq_len
+    if kind == "train":
+        return 6.0 * n * B * S
+    if kind == "prefill":
+        return 2.0 * n * B * S
+    return 2.0 * n * B  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             strategy: str | None = None, kv_shards: int | None = None,
+             tag: str = "", verbose: bool = True,
+             mesh_shape: str | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    strategy = strategy or default_strategy(cfg, shape_name)
+    if mesh_shape:
+        # oracle-guided logical refactorization of the same 256-chip pod
+        # (e.g. "64x4": DP=64 x TP=4) — §Perf optimized variants only;
+        # the required table uses the fixed production meshes.
+        dims = tuple(int(x) for x in mesh_shape.split("x"))
+        names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+        mesh = jax.make_mesh(dims, names,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        mesh_name = f"pod{mesh_shape}"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = int(np.prod(list(mesh.shape.values())))
+    if kv_shards is None:
+        kv_shards = cfg.serve_kv_shards if shape.kind in ("decode", "prefill") \
+            else 1
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "strategy": strategy, "kv_shards": kv_shards, "tag": tag,
+           "chips": chips}
+
+    # 1. full scanned step ---------------------------------------------------
+    cell = build_cell(cfg, shape_name, mesh, strategy, scan_layers=True,
+                      kv_shards=kv_shards)
+    # decode/prefill donate the cache (in-place KV update — serving reality);
+    # train donates the train state.
+    donate = {"train": (0,), "prefill": (2,), "decode": (2,)}[cell.kind]
+    lowered = jax.jit(cell.step_fn, donate_argnums=donate).lower(*cell.args)
+    compiled = lowered.compile()
+    full = cost_of(compiled, dict(mesh.shape))
+    ma = compiled.memory_analysis()
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] strategy={strategy}")
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB")
+        print(f"  cost_analysis(full-scan): flops/chip={full.flops:.3e} "
+              f"bytes/chip={full.bytes_accessed:.3e}")
+
+    # 2. 1-group / 2-group unrolled variants ---------------------------------
+    period = _pattern_period(cell.model)
+    n_groups = cell.n_scan_groups
+    if n_groups > 1:
+        g_cells = []
+        for k in (1, 2):
+            c = build_cell(cfg, shape_name, mesh, strategy, scan_layers=False,
+                           unroll_attn=True, kv_shards=kv_shards,
+                           override_layers=k * period)
+            g_cells.append(cost_of(jax.jit(c.step_fn).lower(*c.args).compile(),
+                                   dict(mesh.shape)))
+        total = combine(full, g_cells[0], g_cells[1], n_groups)
+    else:
+        total = full
+
+    # 3. roofline -------------------------------------------------------------
+    mf = model_flops_of(cell.model, shape, cell.kind)
+    rl = roofline(total, chips, mf, kind=cell.kind)
+    rec.update(
+        kind=cell.kind,
+        n_params=tree_num_params(cell.model.params_spec()),
+        compile_s=round(time.time() - t0, 1),
+        memory={"args_gib": ma.argument_size_in_bytes / 2**30,
+                "temp_gib": ma.temp_size_in_bytes / 2**30,
+                "out_gib": ma.output_size_in_bytes / 2**30},
+        cost=total.to_json(),
+        cost_full_scan_only=full.to_json(),
+        roofline=rl.to_json())
+    if verbose:
+        print(f"  roofline: compute={rl.compute_s*1e3:.2f}ms "
+              f"memory={rl.memory_s*1e3:.2f}ms "
+              f"collective={rl.collective_s*1e3:.2f}ms "
+              f"dominant={rl.dominant} useful={rl.useful_ratio:.2f} "
+              f"frac={rl.roofline_fraction:.3f}  ({rec['compile_s']}s)")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--strategy", default=None)
+    ap.add_argument("--kv-shards", type=int, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override mesh, e.g. 64x4 (oracle-guided variants)")
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    cells = []
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else cfg.shapes()
+        for shape in shapes:
+            if shape in cfg.skipped_shapes():
+                print(f"SKIP {arch} × {shape}: {cfg.skipped_shapes()[shape]}")
+                continue
+            meshes = [args.multi_pod]
+            if args.both_meshes or args.all:
+                meshes = [False, True]
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    failures = []
+    for arch, shape, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        suffix = f"__{args.tag}" if args.tag else ""
+        if args.skip_existing and \
+                (out / f"{arch}__{shape}__{mesh_name}{suffix}.json").exists():
+            continue
+        try:
+            run_cell(arch, shape, mp, out, strategy=args.strategy,
+                     kv_shards=args.kv_shards, tag=args.tag,
+                     mesh_shape=args.mesh_shape)
+        except Exception as e:  # noqa: BLE001 — report, continue, fail at end
+            failures.append((arch, shape, mp, repr(e)))
+            print(f"FAIL {arch} × {shape} multi_pod={mp}: {e}")
+            traceback.print_exc(limit=3)
+    print(f"\n{len(cells) - len(failures)}/{len(cells)} cells passed")
+    if failures:
+        for f in failures:
+            print("  FAILED:", f[:3])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

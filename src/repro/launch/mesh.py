@@ -1,0 +1,29 @@
+"""Production mesh construction (deliverable e.1).
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state. The dry-run entry point
+(dryrun.py) sets XLA_FLAGS before any jax import; real launches rely on the
+actual TPU topology.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_devices: int | None = None,
+                   model: int | None = None) -> jax.sharding.Mesh:
+    """Small mesh over the available (possibly virtual) host devices —
+    used by measured benchmarks, tests and the CPU training examples."""
+    n = n_devices or len(jax.devices())
+    model = model or (2 if n % 2 == 0 and n > 1 else 1)
+    data = n // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

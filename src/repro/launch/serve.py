@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill + greedy decode loop with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..nn.module import ShardingCtx, tree_abstract, tree_init
+from ..parallel.strategies import make_rules
+from ..training.steps import make_decode_step, make_prefill_step
+from .build import build_model
+from .mesh import make_host_mesh
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--strategy", default="serve_tp")
+    ap.add_argument("--kv-shards", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if cfg.family not in ("lm", "vlm"):
+        raise SystemExit(f"serving demo supports lm/vlm archs, not {cfg.family}")
+    model = build_model(cfg, smoke=args.smoke)
+    mc = cfg.smoke_model if args.smoke else cfg.model
+    lm_cfg = mc.lm if cfg.family == "vlm" else mc
+    mesh = make_host_mesh()
+    ctx = ShardingCtx(mesh, make_rules(args.strategy))
+
+    key = jax.random.PRNGKey(args.seed)
+    params = tree_init(model.params_spec(), key)
+    max_len = args.prompt_len + args.gen
+    cache = jax.tree.map(
+        jnp.zeros_like,
+        tree_init(model.cache_spec(args.batch, max_len, shards=args.kv_shards),
+                  key))
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                lm_cfg.vocab)
+
+    prefill = jax.jit(make_prefill_step(model, ctx, scan_layers=True,
+                                        q_chunk=min(256, args.prompt_len)))
+    decode = jax.jit(make_decode_step(model, ctx, scan_layers=True))
+
+    t0 = time.time()
+    if cfg.family == "vlm":
+        patches = jax.random.normal(
+            key, (args.batch, mc.n_patches, mc.d_vision))
+        logits, cache = prefill(params, {"patches": patches, "tokens": prompt},
+                                cache)
+        pos0 = mc.n_patches + args.prompt_len
+    else:
+        logits, cache = prefill(params, {"tokens": prompt}, cache)
+        pos0 = args.prompt_len
+    t_prefill = time.time() - t0
+
+    toks = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        lg, cache = decode(params, toks[-1][:, None], cache,
+                           jnp.int32(pos0 + i))
+        toks.append(jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32))
+    jax.block_until_ready(toks[-1])
+    t_decode = time.time() - t0
+    out = jnp.stack(toks, axis=1)
+    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f}ms; "
+          f"decode {args.gen-1} steps in {t_decode*1e3:.1f}ms "
+          f"({(args.gen-1)*args.batch/max(t_decode,1e-9):.1f} tok/s)")
+    print("generated token ids (first row):", np.asarray(out[0]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .transformer import Block, LMConfig, TransformerLM
+from .encdec import EncDecConfig, EncDecLM
+from .vlm import VLM, VLMConfig
+from .cnn import (RESNET50, RESNET152, CosmoFlow, CosmoFlowConfig, ResNet,
+                  ResNetConfig, VGG, VGGConfig)

@@ -1,0 +1,251 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, T_frames, d_model); everything
+after that (encoder stack, decoder stack with cross-attention, serve path)
+is real. Whisper idioms: pre-LN with biases, learned absolute positions,
+GELU FFN (non-GLU), MHA (kv == heads).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.attention import Attention, AttentionConfig
+from ..nn.ffn import FFN, FFNConfig
+from ..nn.layers import Embedding, LayerNorm
+from ..nn.module import (NULL_CTX, ShardingCtx, fan_in_init, param,
+                         tree_num_params)
+from .transformer import _stack_spec, _xent
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_enc_layers: int
+    n_dec_layers: int
+    n_heads: int
+    d_ff: int
+    max_source_positions: int = 1500
+    max_target_positions: int = 448
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    def attn_cfg(self, causal: bool) -> AttentionConfig:
+        return AttentionConfig(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv_heads=self.n_heads,
+            head_dim=self.head_dim, use_bias=True, out_bias=True, rope=False,
+            causal=causal, dtype=self.dtype)
+
+    def ffn_cfg(self) -> FFNConfig:
+        return FFNConfig(self.d_model, self.d_ff, activation="gelu", glu=False,
+                         use_bias=True, dtype=self.dtype)
+
+
+@dataclass(frozen=True)
+class EncDecLM:
+    cfg: EncDecConfig
+
+    # ------------------------------------------------------------------
+    def _enc_block_spec(self):
+        c = self.cfg
+        return {
+            "ln1": LayerNorm(c.d_model).params_spec(),
+            "attn": Attention(c.attn_cfg(causal=False)).params_spec(),
+            "ln2": LayerNorm(c.d_model).params_spec(),
+            "ffn": FFN(c.ffn_cfg()).params_spec(),
+        }
+
+    def _dec_block_spec(self):
+        c = self.cfg
+        return {
+            "ln1": LayerNorm(c.d_model).params_spec(),
+            "self_attn": Attention(c.attn_cfg(causal=True)).params_spec(),
+            "ln_x": LayerNorm(c.d_model).params_spec(),
+            "cross_attn": Attention(c.attn_cfg(causal=False)).params_spec(),
+            "ln2": LayerNorm(c.d_model).params_spec(),
+            "ffn": FFN(c.ffn_cfg()).params_spec(),
+        }
+
+    def params_spec(self):
+        c = self.cfg
+        return {
+            "enc_pos": param((c.max_source_positions, c.d_model), (None, "embed"),
+                             init=fan_in_init((1,)), dtype=c.dtype),
+            "enc_stack": _stack_spec(self._enc_block_spec(), c.n_enc_layers),
+            "enc_ln": LayerNorm(c.d_model).params_spec(),
+            "embed": Embedding(c.vocab, c.d_model, dtype=c.dtype).params_spec(),
+            "dec_pos": param((c.max_target_positions, c.d_model), (None, "embed"),
+                             init=fan_in_init((1,)), dtype=c.dtype),
+            "dec_stack": _stack_spec(self._dec_block_spec(), c.n_dec_layers),
+            "dec_ln": LayerNorm(c.d_model).params_spec(),
+        }
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames, ctx: ShardingCtx = NULL_CTX,
+               attn_impl="chunked", scan_layers=True, remat=True):
+        """frames: (B, T, d_model) stub embeddings → encoder output."""
+        c = self.cfg
+        ln = LayerNorm(c.d_model)
+        att = Attention(c.attn_cfg(causal=False))
+        ffn = FFN(c.ffn_cfg())
+        T = frames.shape[1]
+        h = frames.astype(c.dtype) + params["enc_pos"][:T][None]
+        h = ctx.constrain(h, ("batch", "seq", "act_embed"))
+
+        def block(h, w):
+            h = h + att.apply(w["attn"], ln.apply(w["ln1"], h), ctx,
+                              impl=attn_impl)
+            h = h + ffn.apply(w["ffn"], ln.apply(w["ln2"], h), ctx)
+            return ctx.constrain(h, ("batch", "seq", "act_embed"))
+
+        if scan_layers:
+            def body(h, w):
+                fn = jax.checkpoint(block) if remat else block
+                return fn(h, w), ()
+            h, _ = jax.lax.scan(body, h, params["enc_stack"])
+        else:
+            for i in range(c.n_enc_layers):
+                h = block(h, jax.tree.map(lambda x: x[i], params["enc_stack"]))
+        return ln.apply(params["enc_ln"], h)
+
+    def decode_train(self, params, tokens, enc_out, ctx: ShardingCtx = NULL_CTX,
+                     attn_impl="chunked", scan_layers=True, remat=True):
+        """Teacher-forced decoder forward → logits."""
+        c = self.cfg
+        ln = LayerNorm(c.d_model)
+        satt = Attention(c.attn_cfg(causal=True))
+        xatt = Attention(c.attn_cfg(causal=False))
+        ffn = FFN(c.ffn_cfg())
+        emb = Embedding(c.vocab, c.d_model, dtype=c.dtype)
+        S = tokens.shape[1]
+        h = emb.apply(params["embed"], tokens) + params["dec_pos"][:S][None]
+        h = ctx.constrain(h.astype(c.dtype), ("batch", "seq", "act_embed"))
+
+        def block(h, w):
+            h = h + satt.apply(w["self_attn"], ln.apply(w["ln1"], h), ctx,
+                               impl=attn_impl)
+            k, v = xatt.kv(w["cross_attn"], enc_out, ctx)
+            h = h + xatt.apply_cross(w["cross_attn"], ln.apply(w["ln_x"], h),
+                                     k, v, ctx, impl=attn_impl)
+            h = h + ffn.apply(w["ffn"], ln.apply(w["ln2"], h), ctx)
+            return ctx.constrain(h, ("batch", "seq", "act_embed"))
+
+        if scan_layers:
+            def body(h, w):
+                fn = jax.checkpoint(block) if remat else block
+                return fn(h, w), ()
+            h, _ = jax.lax.scan(body, h, params["dec_stack"])
+        else:
+            for i in range(c.n_dec_layers):
+                h = block(h, jax.tree.map(lambda x: x[i], params["dec_stack"]))
+        h = ln.apply(params["dec_ln"], h)
+        logits = emb.attend(params["embed"], h)  # tied head (whisper)
+        return ctx.constrain(logits, ("batch", "seq", "vocab"))
+
+    def loss_fn(self, params, batch, ctx: ShardingCtx = NULL_CTX, **kw):
+        """batch: frames (B,T,D), tokens (B,S)."""
+        enc = self.encode(params, batch["frames"], ctx, **kw)
+        logits = self.decode_train(params, batch["tokens"], enc, ctx, **kw)
+        targets = batch.get("targets")
+        if targets is None:
+            targets = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+        ce = jnp.mean(_xent(logits, targets))
+        return ce, {"ce": ce}
+
+    # -- serving -----------------------------------------------------------
+    def cache_spec(self, batch, max_len, shards=1, dtype=jnp.bfloat16):
+        c = self.cfg
+        att = Attention(c.attn_cfg(causal=True))
+        self_spec = _stack_spec(att.cache_spec(batch, max_len, shards, dtype),
+                                c.n_dec_layers)
+        # cross K/V: (L, B, T_enc, H, hd) computed at prefill
+        xkv = {
+            "k": param((c.n_dec_layers, batch, c.max_source_positions, c.n_heads,
+                        c.head_dim), ("layers", "batch", "seq", "act_kv", None),
+                       init=lambda k, s, d: jnp.zeros(s, d), dtype=dtype),
+            "v": param((c.n_dec_layers, batch, c.max_source_positions, c.n_heads,
+                        c.head_dim), ("layers", "batch", "seq", "act_kv", None),
+                       init=lambda k, s, d: jnp.zeros(s, d), dtype=dtype),
+        }
+        return {"self": self_spec, "cross": xkv}
+
+    def prefill(self, params, frames, cache, ctx: ShardingCtx = NULL_CTX,
+                scan_layers=True):
+        """Encode audio and precompute cross K/V. Returns (enc_out, cache)."""
+        c = self.cfg
+        enc = self.encode(params, frames, ctx, scan_layers=scan_layers,
+                          remat=False)
+        xatt = Attention(c.attn_cfg(causal=False))
+
+        def per_layer(w):
+            return xatt.kv(w["cross_attn"], enc, ctx)
+
+        if scan_layers:
+            def body(_, w):
+                return (), per_layer(w)
+            _, (ks, vs) = jax.lax.scan(body, (), params["dec_stack"])
+        else:
+            kvs = [per_layer(jax.tree.map(lambda x: x[i], params["dec_stack"]))
+                   for i in range(c.n_dec_layers)]
+            ks = jnp.stack([k for k, _ in kvs])
+            vs = jnp.stack([v for _, v in kvs])
+        cache = dict(cache)
+        cache["cross"] = {"k": ks.astype(cache["cross"]["k"].dtype),
+                          "v": vs.astype(cache["cross"]["v"].dtype)}
+        return enc, cache
+
+    def decode_step(self, params, token, cache, pos, ctx: ShardingCtx = NULL_CTX,
+                    scan_layers=True):
+        c = self.cfg
+        ln = LayerNorm(c.d_model)
+        satt = Attention(c.attn_cfg(causal=True))
+        xatt = Attention(c.attn_cfg(causal=False))
+        ffn = FFN(c.ffn_cfg())
+        emb = Embedding(c.vocab, c.d_model, dtype=c.dtype)
+        # clamp learned position at the table edge for long-decode stress shapes
+        p = jnp.minimum(pos, c.max_target_positions - 1)
+        h = emb.apply(params["embed"], token) + params["dec_pos"][p][None, None]
+        h = h.astype(c.dtype)
+
+        def block(h, w, sc, xk, xv):
+            y, sc = satt.decode(w["self_attn"], ln.apply(w["ln1"], h), sc, pos, ctx)
+            h = h + y
+            h = h + xatt.apply_cross(w["cross_attn"], ln.apply(w["ln_x"], h),
+                                     xk, xv, ctx)
+            h = h + ffn.apply(w["ffn"], ln.apply(w["ln2"], h), ctx)
+            return h, sc
+
+        new_cache = dict(cache)
+        if scan_layers:
+            def body(h, xs):
+                w, sc, xk, xv = xs
+                h, sc = block(h, w, sc, xk, xv)
+                return h, sc
+            h, self_new = jax.lax.scan(
+                body, h, (params["dec_stack"], cache["self"],
+                          cache["cross"]["k"], cache["cross"]["v"]))
+        else:
+            outs = []
+            for i in range(c.n_dec_layers):
+                w = jax.tree.map(lambda x: x[i], params["dec_stack"])
+                sc = jax.tree.map(lambda x: x[i], cache["self"])
+                h, sc = block(h, w, sc, cache["cross"]["k"][i],
+                              cache["cross"]["v"][i])
+                outs.append(sc)
+            self_new = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache["self"] = self_new
+        h = ln.apply(params["dec_ln"], h)
+        return emb.attend(params["embed"], h), new_cache
+
+    def num_params(self):
+        return tree_num_params(self.params_spec())

@@ -1,0 +1,652 @@
+"""Decoder-only LM covering all assigned families via a layer *pattern*.
+
+A model is ``n_layers`` arranged as repetitions of a pattern of sub-block
+kinds, e.g.::
+
+    dense GQA   : ("attn",)                      qwen3 / command-r / deepseek-67b
+    MoE         : ("moe",)                        grok-1; deepseek-v3 adds
+                                                  ``first_k_dense`` dense layers
+    SSM         : ("ssm",)                        mamba2 (attention-free)
+    hybrid      : ("rec", "rec", "attn")          recurrentgemma 1:2
+
+Layers within one pattern position are *stacked* and evaluated with
+``lax.scan`` (small HLO, exact memory analysis) or unrolled (exact
+``cost_analysis`` FLOPs) — the dry-run uses both, see DESIGN.md §5.
+
+Three step kinds are exposed as pure functions over (params, batch):
+``loss_fn`` (training forward), ``prefill`` (build KV caches + logits) and
+``decode_step`` (one token, cache in/out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn.attention import Attention, AttentionConfig, MLAttention, MLAConfig
+from ..nn.ffn import FFN, FFNConfig, MoE, MoEConfig
+from ..nn.layers import Embedding, LayerNorm, RMSNorm
+from ..nn.module import (NULL_CTX, ShardingCtx, fan_in_init, param, tree_init,
+                         tree_num_params)
+from ..nn.rglru import RecurrentBlock, RGLRUConfig
+from ..nn.ssm import SSDBlock, SSMConfig
+
+KINDS = ("attn", "local_attn", "mla", "moe", "ssm", "rec")
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    pattern: tuple[str, ...] = ("attn",)
+    attn: AttentionConfig | None = None
+    local_attn: AttentionConfig | None = None
+    mla: MLAConfig | None = None
+    ffn: FFNConfig | None = None
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    rglru: RGLRUConfig | None = None
+    first_k_dense: int = 0           # deepseek-v3: leading dense layers
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = False
+    pos_embedding: str | None = None  # "learned" → whisper/absolute
+    max_position: int = 8192          # only for learned positions
+    final_logit_softcap: float | None = None
+    mtp_heads: int = 0               # deepseek-v3 multi-token prediction
+    embed_scale: bool = False        # gemma-style sqrt(d) embedding scaling
+    dtype: Any = jnp.bfloat16
+
+    def block_kinds(self) -> list[str]:
+        """Resolved per-layer kind list of length n_layers."""
+        kinds = []
+        for i in range(self.n_layers):
+            k = self.pattern[i % len(self.pattern)]
+            if k == "moe" and i < self.first_k_dense:
+                k = "attn"  # dense replacement uses the ffn config
+            kinds.append(k)
+        return kinds
+
+
+def _norm(cfg: LMConfig):
+    if cfg.norm == "rmsnorm":
+        return RMSNorm(cfg.d_model)
+    if cfg.norm == "layernorm_nobias":
+        return LayerNorm(cfg.d_model, use_bias=False)
+    return LayerNorm(cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# One block (pre-norm residual around a mixer and optionally an FFN/MoE)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Block:
+    cfg: LMConfig
+    kind: str
+
+    def _mixer(self):
+        c = self.cfg
+        if self.kind in ("attn",):
+            # "attn" is also the dense-replacement kind for first_k_dense
+            # layers of MoE models; those may be MLA-based (deepseek-v3).
+            return Attention(c.attn) if c.attn is not None else MLAttention(c.mla)
+        if self.kind == "local_attn":
+            return Attention(c.local_attn)
+        if self.kind == "mla":
+            return MLAttention(c.mla)
+        if self.kind == "ssm":
+            return SSDBlock(c.ssm)
+        if self.kind == "rec":
+            return RecurrentBlock(c.rglru)
+        if self.kind == "moe":
+            return MLAttention(c.mla) if c.mla else Attention(c.attn)
+        raise ValueError(self.kind)
+
+    def _ffn(self):
+        c = self.cfg
+        if self.kind == "ssm":
+            return None  # mamba2 blocks have no separate FFN (d_ff = 0)
+        if self.kind == "moe":
+            return MoE(c.moe)
+        return FFN(c.ffn)
+
+    def params_spec(self):
+        c = self.cfg
+        spec = {"norm1": _norm(c).params_spec(), "mixer": self._mixer().params_spec()}
+        ffn = self._ffn()
+        if ffn is not None:
+            spec["norm2"] = _norm(c).params_spec()
+            spec["ffn"] = ffn.params_spec()
+        return spec
+
+    def apply(self, params, h, ctx: ShardingCtx, attn_impl="chunked",
+              q_chunk=1024, kv_chunk=1024, unroll=False):
+        c = self.cfg
+        norm = _norm(c)
+        mixer = self._mixer()
+        aux = jnp.zeros((), jnp.float32)
+        x = norm.apply(params["norm1"], h)
+        if self.kind in ("attn", "local_attn", "mla", "moe"):
+            kw = dict(impl=attn_impl, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                      unroll=unroll)
+            h = h + mixer.apply(params["mixer"], x, ctx, **kw)
+        else:
+            h = h + mixer.apply(params["mixer"], x, ctx)
+        ffn = self._ffn()
+        if ffn is not None:
+            x = norm.apply(params["norm2"], h)
+            if self.kind == "moe":
+                y, aux = ffn.apply(params["ffn"], x, ctx)
+            else:
+                y = ffn.apply(params["ffn"], x, ctx)
+            h = h + y
+        h = ctx.constrain(h, ("batch", "seq", "act_embed"))
+        from ..nn.module import grad_barrier
+        h = grad_barrier(h)
+        return h, aux
+
+    # -- caches -----------------------------------------------------------
+    def cache_spec(self, batch, max_len, shards=1, dtype=jnp.bfloat16):
+        c = self.cfg
+        if self.kind == "ssm":
+            return SSDBlock(c.ssm).cache_spec(batch, dtype=jnp.float32)
+        if self.kind == "rec":
+            return RecurrentBlock(c.rglru).cache_spec(batch, dtype=jnp.float32)
+        if self.kind in ("mla", "moe", "attn") and c.mla is not None \
+                and (self.kind == "mla" or c.attn is None):
+            return MLAttention(c.mla).cache_spec(batch, max_len, dtype=dtype)
+        acfg = c.local_attn if self.kind == "local_attn" else c.attn
+        att = Attention(acfg)
+        span = min(max_len, acfg.window) if acfg.window else max_len
+        span = max(span, 1)
+        sh = shards if span % max(shards, 1) == 0 else 1
+        return att.cache_spec(batch, span, shards=sh, dtype=dtype)
+
+    def decode(self, params, h, cache, pos, ctx: ShardingCtx):
+        c = self.cfg
+        norm = _norm(c)
+        mixer = self._mixer()
+        x = norm.apply(params["norm1"], h)
+        y, cache = mixer.decode(params["mixer"], x, cache, pos, ctx)
+        h = h + y
+        ffn = self._ffn()
+        if ffn is not None:
+            x = norm.apply(params["norm2"], h)
+            if self.kind == "moe":
+                y, _ = ffn.apply(params["ffn"], x, ctx)
+            else:
+                y = ffn.apply(params["ffn"], x, ctx)
+            h = h + y
+        return h, cache
+
+    def prefill(self, params, h, cache, ctx: ShardingCtx, attn_impl="chunked",
+                q_chunk=1024, kv_chunk=1024, unroll=False):
+        """Forward over the full prompt, filling the cache."""
+        c = self.cfg
+        norm = _norm(c)
+        x = norm.apply(params["norm1"], h)
+        mixer = self._mixer()
+        if self.kind in ("ssm", "rec"):
+            # recompute final state via the chunked path: cheapest correct way
+            # is decode-free state extraction; we reuse apply + a state pass.
+            y, cache = _recurrent_prefill(mixer, params["mixer"], x, cache, ctx)
+            h = h + y
+        else:
+            y, cache = _attn_prefill(mixer, params["mixer"], x, cache, ctx,
+                                     attn_impl, q_chunk, kv_chunk, unroll)
+            h = h + y
+        ffn = self._ffn()
+        if ffn is not None:
+            x2 = norm.apply(params["norm2"], h)
+            if self.kind == "moe":
+                y2, _ = ffn.apply(params["ffn"], x2, ctx)
+            else:
+                y2 = ffn.apply(params["ffn"], x2, ctx)
+            h = h + y2
+        h = ctx.constrain(h, ("batch", "seq", "act_embed"))
+        return h, cache
+
+
+def _attn_prefill(mixer, params, x, cache, ctx, attn_impl, q_chunk, kv_chunk,
+                  unroll=False):
+    """Attention prefill: run full attention AND write K/V (or latents) to cache."""
+    from ..nn.attention import Attention, MLAttention
+    B, S, _ = x.shape
+    if isinstance(mixer, MLAttention):
+        c = mixer.cfg
+        positions = jnp.arange(S)[None, :]
+        q_nope, q_rope, c_kv, k_rope = mixer._project(params, x, positions)
+        T = cache["c_kv"].shape[1]
+        cache = {
+            "c_kv": jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)),
+            "k_rope": jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, 0, 0)),
+        }
+        y = mixer.apply(params, x, ctx, impl=attn_impl, q_chunk=q_chunk,
+                        kv_chunk=kv_chunk, unroll=unroll)
+        return y, cache
+    c = mixer.cfg
+    positions = jnp.arange(S)[None, :]
+    q, k, v = mixer._qkv(params, x, positions, ctx)
+    shards, span = cache["k"].shape[1], cache["k"].shape[2]
+    total = shards * span
+
+    if c.window is not None and S >= total:
+        # ring layout: slot s holds token (S - total) + ((s - S) % total)
+        start = S - total
+        slots = jnp.arange(total)
+        tok = start + ((slots - start) % total)
+        k_w = jnp.take(k, tok, axis=1).reshape(k.shape[0], shards, span, *k.shape[2:])
+        v_w = jnp.take(v, tok, axis=1).reshape(v.shape[0], shards, span, *v.shape[2:])
+        cache = {"k": k_w.astype(cache["k"].dtype), "v": v_w.astype(cache["v"].dtype)}
+    else:
+        kr = k.reshape(k.shape[0], -1, span, *k.shape[2:]) if S % span == 0 and S // span <= shards \
+            else None
+        if kr is not None:
+            nsh = S // span
+            cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], kr.astype(cache["k"].dtype), (0, 0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.reshape(v.shape[0], nsh, span, *v.shape[2:]
+                                          ).astype(cache["v"].dtype), (0, 0, 0, 0, 0)),
+            }
+        else:
+            flat_k = cache["k"].reshape(cache["k"].shape[0], total, *cache["k"].shape[3:])
+            flat_v = cache["v"].reshape(cache["v"].shape[0], total, *cache["v"].shape[3:])
+            flat_k = jax.lax.dynamic_update_slice(
+                flat_k, k.astype(flat_k.dtype), (0, 0, 0, 0))
+            flat_v = jax.lax.dynamic_update_slice(
+                flat_v, v.astype(flat_v.dtype), (0, 0, 0, 0))
+            cache = {"k": flat_k.reshape(cache["k"].shape),
+                     "v": flat_v.reshape(cache["v"].shape)}
+    y = mixer.apply(params, x, ctx, impl=attn_impl, q_chunk=q_chunk,
+                    kv_chunk=kv_chunk, unroll=unroll)
+    return y, cache
+
+
+def _recurrent_prefill(mixer, params, x, cache, ctx):
+    """SSM / RG-LRU prefill: forward + final-state extraction."""
+    from ..nn.rglru import RecurrentBlock
+    from ..nn.ssm import SSDBlock
+    if isinstance(mixer, SSDBlock):
+        c = mixer.cfg
+        B_, S, _ = x.shape
+        z, xs, Bm, Cm, dt = mixer._project(params, x, ctx)
+        tail = slice(S - (c.d_conv - 1), S)
+        conv_x, conv_B, conv_C = xs[:, tail], Bm[:, tail], Cm[:, tail]
+        xs = mixer._causal_conv(xs, params["conv_x"], params["conv_b_x"])
+        Bm = mixer._causal_conv(Bm, params["conv_B"], params["conv_b_B"])
+        Cm = mixer._causal_conv(Cm, params["conv_C"], params["conv_b_C"])
+        xs = xs.reshape(B_, S, c.n_heads, c.head_dim)
+        Bm = Bm.reshape(B_, S, c.n_groups, c.d_state)
+        Cm = Cm.reshape(B_, S, c.n_groups, c.d_state)
+        dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+        A = -jnp.exp(params["a_log"])
+        y, final = mixer._ssd(xs.astype(jnp.float32), dtf, A,
+                              Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                              init_state=cache["state"].astype(jnp.float32))
+        y = y + xs.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+        y = y.reshape(B_, S, c.d_inner).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        from ..nn.layers import RMSNorm
+        y = RMSNorm(c.d_inner, axis_name="mlp").apply(params["norm"], y)
+        y = y @ params["out_proj"]
+        cache = {"state": final.astype(cache["state"].dtype),
+                 "conv_x": conv_x.astype(cache["conv_x"].dtype),
+                 "conv_B": conv_B.astype(cache["conv_B"].dtype),
+                 "conv_C": conv_C.astype(cache["conv_C"].dtype)}
+        return ctx.constrain(y, ("batch", "seq", "act_embed")), cache
+    if isinstance(mixer, RecurrentBlock):
+        c = mixer.cfg
+        xr = x @ params["w_rec"]
+        conv_tail = xr[:, x.shape[1] - (c.d_conv - 1):, :]
+        xr = mixer._conv(params, xr)
+        a, gated = mixer._gates(params, xr)
+
+        def assoc(p, q):
+            ap, hp = p
+            aq, hq = q
+            return ap * aq, hq + hp * aq
+
+        a_c, h = jax.lax.associative_scan(assoc, (a, gated), axis=1)
+        h = h + a_c * cache["h"].astype(a_c.dtype)[:, None, :]
+        gate = jax.nn.gelu(x @ params["w_gate_branch"])
+        y = (h.astype(x.dtype) * gate) @ params["w_out"]
+        cache = {"h": h[:, -1].astype(cache["h"].dtype),
+                 "conv": conv_tail.astype(cache["conv"].dtype)}
+        return ctx.constrain(y, ("batch", "seq", "act_embed")), cache
+    raise TypeError(type(mixer))
+
+
+# ---------------------------------------------------------------------------
+# The LM
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TransformerLM:
+    cfg: LMConfig
+
+    # -- structure ---------------------------------------------------------
+    def _groups(self):
+        """(period, n_groups, remainder_kinds). Layers = groups×pattern + rem."""
+        c = self.cfg
+        period = len(c.pattern)
+        main = c.n_layers - c.first_k_dense
+        n_groups = main // period
+        rem = main - n_groups * period
+        return period, n_groups, list(c.pattern[:rem])
+
+    def blocks(self):
+        return {k: Block(self.cfg, k) for k in set(self.cfg.block_kinds())}
+
+    def params_spec(self):
+        c = self.cfg
+        period, n_groups, rem = self._groups()
+        spec: dict = {
+            "embed": Embedding(c.vocab, c.d_model, dtype=c.dtype).params_spec(),
+            "final_norm": _norm(c).params_spec(),
+        }
+        if not c.tie_embeddings:
+            spec["head"] = param((c.d_model, c.vocab), ("embed", "vocab"),
+                                 init=fan_in_init((0,)), dtype=c.dtype)
+        if c.pos_embedding == "learned":
+            spec["pos"] = param((c.max_position, c.d_model), (None, "embed"),
+                                init=fan_in_init((1,)), dtype=c.dtype)
+        # leading dense layers (deepseek-v3 style), unstacked
+        if c.first_k_dense:
+            dense_block = Block(dataclasses.replace(c), "attn")
+            spec["lead"] = [dense_block.params_spec() for _ in range(c.first_k_dense)]
+        # pattern-position stacks: each is a ParamSpec tree with a "layers" axis
+        stacks = []
+        for pos_i, kind in enumerate(self.cfg.pattern):
+            bspec = Block(c, kind).params_spec()
+            stacks.append(_stack_spec(bspec, n_groups))
+        spec["stacks"] = stacks
+        if rem:
+            spec["tail"] = [Block(c, k).params_spec() for k in rem]
+        if c.mtp_heads:
+            spec["mtp"] = {
+                "proj": param((2 * c.d_model, c.d_model), ("mlp", "embed"),
+                              init=fan_in_init((0,)), dtype=c.dtype),
+                "block": Block(c, c.pattern[-1]).params_spec(),
+                "norm": _norm(c).params_spec(),
+            }
+        return spec
+
+    # -- forward -----------------------------------------------------------
+    def _embed(self, params, tokens, ctx, embeddings=None):
+        c = self.cfg
+        emb = Embedding(c.vocab, c.d_model, dtype=c.dtype)
+        h = emb.apply(params["embed"], tokens) if embeddings is None else embeddings
+        if c.embed_scale:
+            h = h * np.sqrt(c.d_model)
+        if c.pos_embedding == "learned":
+            S = h.shape[1]
+            h = h + params["pos"][:S][None]
+        return ctx.constrain(h.astype(c.dtype), ("batch", "seq", "act_embed"))
+
+    def _logits(self, params, h, ctx):
+        c = self.cfg
+        h = _norm(c).apply(params["final_norm"], h)
+        if c.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["table"],
+                                preferred_element_type=jnp.float32)
+        else:
+            # fp32 ACCUMULATION with bf16 operands: a plain bf16 matmul
+            # followed by .astype(f32) lets XLA fold the convert into the
+            # dot, all-gathering an fp32-converted weight (2x wire bytes) —
+            # EXPERIMENTS.md §Perf qwen3 iteration 2.
+            logits = jnp.einsum("bsd,dv->bsv", h, params["head"],
+                                preferred_element_type=jnp.float32)
+        if c.final_logit_softcap:
+            logits = c.final_logit_softcap * jnp.tanh(
+                logits / c.final_logit_softcap)
+        return ctx.constrain(logits, ("batch", "seq", "vocab"))
+
+    def apply(self, params, tokens, ctx: ShardingCtx = NULL_CTX, **kw):
+        """Full forward → (logits, aux_loss)."""
+        h, aux = self._forward(params, tokens, ctx, **kw)
+        return self._logits(params, h, ctx), aux
+
+    def _forward(self, params, tokens, ctx: ShardingCtx = NULL_CTX,
+                 embeddings=None, attn_impl="chunked", q_chunk=1024,
+                 kv_chunk=1024, scan_layers=True, remat=True,
+                 unroll_attn=False):
+        """Body forward → (hidden (B,S,D), aux_loss)."""
+        c = self.cfg
+        period, n_groups, rem = self._groups()
+        h = self._embed(params, tokens, ctx, embeddings)
+        aux_total = jnp.zeros((), jnp.float32)
+        kw = dict(attn_impl=attn_impl, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                  unroll=unroll_attn)
+
+        def run_block(kind):
+            blk = Block(c, kind)
+
+            def run(bp, hh):
+                return blk.apply(bp, hh, ctx, **kw)
+
+            return jax.checkpoint(run) if remat else run
+
+        for i in range(c.first_k_dense):
+            h, aux = run_block("attn")(params["lead"][i], h)
+            aux_total += aux
+
+        def group_apply(h, group_params):
+            aux = jnp.zeros((), jnp.float32)
+            for pos_i, kind in enumerate(c.pattern):
+                h, a = run_block(kind)(group_params[pos_i], h)
+                aux += a
+            return h, aux
+
+        if scan_layers and n_groups > 0:
+            def body(h, gp):
+                h, aux = group_apply(h, gp)
+                return h, aux
+            h, auxs = jax.lax.scan(body, h, params["stacks"])
+            aux_total += jnp.sum(auxs)
+        else:
+            for g in range(n_groups):
+                gp = [jax.tree.map(lambda x: x[g], params["stacks"][pos_i])
+                      for pos_i in range(period)]
+                h, aux = group_apply(h, gp)
+                aux_total += aux
+        for j, kind in enumerate(rem):
+            blk = Block(c, kind)
+            h, aux = blk.apply(params["tail"][j], h, ctx, **kw)
+            aux_total += aux
+        return h, aux_total
+
+    # -- loss ---------------------------------------------------------------
+    def loss_fn(self, params, batch, ctx: ShardingCtx = NULL_CTX,
+                mtp_weight: float = 0.3, **kw):
+        """batch: dict(tokens (B,S) int32, optional embeddings/targets/mask)."""
+        c = self.cfg
+        tokens = batch["tokens"]
+        targets = batch.get("targets")
+        if targets is None:
+            targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        h, aux = self._forward(params, tokens, ctx,
+                               embeddings=batch.get("embeddings"), **kw)
+        logits = self._logits(params, h, ctx)
+        mask = batch.get("mask", jnp.ones(tokens.shape, jnp.float32))
+        ce = _xent(logits, targets)
+        loss = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        metrics = {"ce": loss, "aux": aux}
+        if c.mtp_heads:
+            # DeepSeek-V3 multi-token prediction (depth 1): combine the trunk
+            # hidden at position i with the embedding of token i+1, run one
+            # extra block, predict token i+2 with the shared head.
+            norm = _norm(c)
+            nh = norm.apply(params["mtp"]["norm"], h)
+            emb_next = self._embed(params, jnp.pad(tokens[:, 1:], ((0, 0), (0, 1))),
+                                   ctx)
+            hm = jnp.concatenate([nh, emb_next], axis=-1) @ params["mtp"]["proj"]
+            blk = Block(c, c.pattern[-1])
+            hm, aux2 = blk.apply(params["mtp"]["block"], hm, ctx)
+            mtp_logits = self._logits(params, hm, ctx)
+            mtp_targets = jnp.pad(targets[:, 1:], ((0, 0), (0, 1)))
+            mtp_mask = mask * jnp.pad(mask[:, 1:], ((0, 0), (0, 1)))
+            mtp_ce = jnp.sum(_xent(mtp_logits, mtp_targets) * mtp_mask) / \
+                jnp.maximum(jnp.sum(mtp_mask), 1.0)
+            loss = loss + mtp_weight * mtp_ce
+            aux = aux + aux2
+            metrics["mtp_ce"] = mtp_ce
+        return loss + aux, metrics
+
+    # -- caches / serving ---------------------------------------------------
+    def cache_spec(self, batch, max_len, shards=1, dtype=jnp.bfloat16):
+        c = self.cfg
+        period, n_groups, rem = self._groups()
+        spec = {}
+        if c.first_k_dense:
+            spec["lead"] = [Block(c, "attn").cache_spec(batch, max_len, shards, dtype)
+                            for _ in range(c.first_k_dense)]
+        spec["stacks"] = [
+            _stack_spec(Block(c, kind).cache_spec(batch, max_len, shards, dtype),
+                        n_groups)
+            for kind in c.pattern]
+        if rem:
+            spec["tail"] = [Block(c, k).cache_spec(batch, max_len, shards, dtype)
+                            for k in rem]
+        return spec
+
+    def prefill(self, params, tokens, cache, ctx: ShardingCtx = NULL_CTX,
+                embeddings=None, attn_impl="chunked", q_chunk=1024,
+                kv_chunk=1024, scan_layers=True, unroll_attn=False):
+        """Prompt pass: returns (last-position logits, filled cache)."""
+        c = self.cfg
+        period, n_groups, rem = self._groups()
+        h = self._embed(params, tokens, ctx, embeddings)
+        kw = dict(attn_impl=attn_impl, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                  unroll=unroll_attn)
+        new_cache = {"stacks": None}
+        if c.first_k_dense:
+            lead = []
+            for i in range(c.first_k_dense):
+                h, ci = Block(c, "attn").prefill(
+                    params["lead"][i], h, cache["lead"][i], ctx, **kw)
+                lead.append(ci)
+            new_cache["lead"] = lead
+
+        def group_prefill(h, gp, gc):
+            new = []
+            for pos_i, kind in enumerate(c.pattern):
+                h, ci = Block(c, kind).prefill(gp[pos_i], h, gc[pos_i], ctx, **kw)
+                new.append(ci)
+            return h, new
+
+        if scan_layers and n_groups > 0:
+            def body(h, xs):
+                gp, gc = xs
+                h, new = group_prefill(h, gp, gc)
+                return h, new
+            h, stacks = jax.lax.scan(body, h, (params["stacks"], cache["stacks"]))
+            new_cache["stacks"] = stacks
+        else:
+            outs = []
+            for g in range(n_groups):
+                gp = [jax.tree.map(lambda x: x[g], params["stacks"][p])
+                      for p in range(period)]
+                gc = [jax.tree.map(lambda x: x[g], cache["stacks"][p])
+                      for p in range(period)]
+                h, new = group_prefill(h, gp, gc)
+                outs.append(new)
+            new_cache["stacks"] = [
+                jax.tree.map(lambda *xs: jnp.stack(xs), *[o[p] for o in outs])
+                for p in range(period)]
+        if rem:
+            tail = []
+            for j, kind in enumerate(rem):
+                h, ci = Block(c, kind).prefill(params["tail"][j], h,
+                                               cache["tail"][j], ctx, **kw)
+                tail.append(ci)
+            new_cache["tail"] = tail
+        logits = self._logits(params, h[:, -1:], ctx)
+        return logits, new_cache
+
+    def decode_step(self, params, token, cache, pos, ctx: ShardingCtx = NULL_CTX,
+                    embeddings=None, scan_layers=True):
+        """token: (B, 1) int32; pos: scalar. Returns (logits (B,1,V), cache)."""
+        c = self.cfg
+        period, n_groups, rem = self._groups()
+        h = self._embed(params, token, ctx, embeddings)
+        new_cache = dict(cache)
+        if c.first_k_dense:
+            lead = []
+            for i in range(c.first_k_dense):
+                h, ci = Block(c, "attn").decode(params["lead"][i], h,
+                                                cache["lead"][i], pos, ctx)
+                lead.append(ci)
+            new_cache["lead"] = lead
+
+        def group_decode(h, gp, gc):
+            new = []
+            for pos_i, kind in enumerate(c.pattern):
+                h, ci = Block(c, kind).decode(gp[pos_i], h, gc[pos_i], pos, ctx)
+                new.append(ci)
+            return h, new
+
+        if scan_layers and n_groups > 0:
+            def body(h, xs):
+                gp, gc = xs
+                h, new = group_decode(h, gp, gc)
+                return h, new
+            h, stacks = jax.lax.scan(body, h, (params["stacks"], cache["stacks"]))
+            new_cache["stacks"] = stacks
+        else:
+            outs = []
+            for g in range(n_groups):
+                gp = [jax.tree.map(lambda x: x[g], params["stacks"][p])
+                      for p in range(period)]
+                gc = [jax.tree.map(lambda x: x[g], cache["stacks"][p])
+                      for p in range(period)]
+                h, new = group_decode(h, gp, gc)
+                outs.append(new)
+            new_cache["stacks"] = [
+                jax.tree.map(lambda *xs: jnp.stack(xs), *[o[p] for o in outs])
+                for p in range(period)]
+        if rem:
+            tail = []
+            for j, kind in enumerate(rem):
+                h, ci = Block(c, kind).decode(params["tail"][j], h,
+                                              cache["tail"][j], pos, ctx)
+                tail.append(ci)
+            new_cache["tail"] = tail
+        return self._logits(params, h, ctx), new_cache
+
+    def num_params(self) -> int:
+        return tree_num_params(self.params_spec())
+
+
+def _stack_spec(spec_tree, n: int):
+    """Prepend a 'layers' axis of size n to every ParamSpec in the tree."""
+    from ..nn.module import ParamSpec
+
+    def one(s: ParamSpec):
+        init = s.init
+
+        def stacked_init(key, shape, dtype):
+            base = init or fan_in_init()
+            keys = jax.random.split(key, shape[0])
+            return jnp.stack([base(k, shape[1:], dtype) for k in keys])
+
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                         stacked_init, s.dtype)
+
+    return jax.tree.map(one, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _xent(logits, targets):
+    """Token cross-entropy in fp32. logits: (B,S,V); targets: (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse - picked

@@ -1,0 +1,90 @@
+"""PaliGemma-style VLM: stub SigLIP frontend + Gemma LM backbone.
+
+Per the assignment the vision tower is a STUB: ``input_specs()`` provides
+precomputed patch embeddings (B, n_patches, d_vision). The real parts are the
+multimodal projector and the LM (prefix = projected patches, suffix = text,
+loss on text only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.module import (NULL_CTX, ShardingCtx, fan_in_init, param,
+                         tree_num_params)
+from .transformer import LMConfig, TransformerLM, _xent
+
+
+@dataclass(frozen=True)
+class VLMConfig:
+    lm: LMConfig
+    d_vision: int = 1152          # SigLIP-So400m width
+    n_patches: int = 256          # 224px / patch 14 → 16×16
+
+
+@dataclass(frozen=True)
+class VLM:
+    cfg: VLMConfig
+
+    def params_spec(self):
+        c = self.cfg
+        return {
+            "proj": param((c.d_vision, c.lm.d_model), ("mlp", "embed"),
+                          init=fan_in_init((0,)), dtype=c.lm.dtype),
+            "lm": TransformerLM(c.lm).params_spec(),
+        }
+
+    def _embeddings(self, params, patches, tokens, ctx):
+        c = self.cfg
+        lm = TransformerLM(c.lm)
+        vis = (patches.astype(c.lm.dtype) @ params["proj"])
+        txt = lm._embed(params["lm"], tokens, ctx)
+        if c.lm.embed_scale:
+            # _embed already scales text; scale vision identically
+            vis = vis * jnp.sqrt(jnp.asarray(c.lm.d_model, jnp.float32)).astype(vis.dtype)
+        return jnp.concatenate([vis, txt], axis=1)
+
+    def loss_fn(self, params, batch, ctx: ShardingCtx = NULL_CTX, **kw):
+        """batch: patches (B, P, d_vision), tokens (B, S_text)."""
+        c = self.cfg
+        lm = TransformerLM(c.lm)
+        patches, tokens = batch["patches"], batch["tokens"]
+        B, S_txt = tokens.shape
+        emb = self._embeddings(params, patches, tokens, ctx)
+        full_tokens = jnp.concatenate(
+            [jnp.zeros((B, c.n_patches), tokens.dtype), tokens], axis=1)
+        logits, aux = lm.apply(params["lm"], full_tokens, ctx,
+                               embeddings=emb, **kw)
+        # predict next text token; mask out image positions
+        targets = jnp.pad(full_tokens[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.concatenate(
+            [jnp.zeros((B, c.n_patches), jnp.float32),
+             jnp.ones((B, S_txt), jnp.float32)], axis=1)
+        mask = mask.at[:, -1].set(0.0)
+        ce = jnp.sum(_xent(logits, targets) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def cache_spec(self, batch, max_len, shards=1, dtype=jnp.bfloat16):
+        return TransformerLM(self.cfg.lm).cache_spec(batch, max_len, shards, dtype)
+
+    def prefill(self, params, batch, cache, ctx: ShardingCtx = NULL_CTX, **kw):
+        c = self.cfg
+        lm = TransformerLM(c.lm)
+        emb = self._embeddings(params, batch["patches"], batch["tokens"], ctx)
+        B = batch["tokens"].shape[0]
+        full_tokens = jnp.concatenate(
+            [jnp.zeros((B, c.n_patches), batch["tokens"].dtype), batch["tokens"]],
+            axis=1)
+        return lm.prefill(params["lm"], full_tokens, cache, ctx,
+                          embeddings=emb, **kw)
+
+    def decode_step(self, params, token, cache, pos, ctx: ShardingCtx = NULL_CTX,
+                    **kw):
+        return TransformerLM(self.cfg.lm).decode_step(params["lm"], token, cache,
+                                                      pos, ctx, **kw)
+
+    def num_params(self):
+        return tree_num_params(self.params_spec())

@@ -1,0 +1,11 @@
+from .module import (LOGICAL_AXES, NULL_CTX, ParamSpec, Rules, ShardingCtx,
+                     fan_in_init, ones_init, param, spec_to_pspec, tree_abstract,
+                     tree_init, tree_num_bytes, tree_num_params, tree_shardings,
+                     zeros_init)
+from .layers import (BatchNorm, Conv, Dense, Embedding, LayerNorm, RMSNorm,
+                     avg_pool, global_avg_pool, max_pool)
+from .attention import (Attention, AttentionConfig, MLAttention, MLAConfig,
+                        flash_attention, plain_attention)
+from .ffn import FFN, FFNConfig, MoE, MoEConfig
+from .ssm import SSDBlock, SSMConfig
+from .rglru import RecurrentBlock, RGLRUConfig

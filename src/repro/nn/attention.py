@@ -1,0 +1,522 @@
+"""Attention: GQA/MQA (+qk-norm, bias, logit softcap, sliding window) and MLA.
+
+Three execution paths:
+  * ``plain``       — full score matrix; reference + small shapes.
+  * ``chunked``     — flash-style online softmax over (q-chunk, kv-chunk)
+                      blocks. ``unroll=True`` emits a static Python loop that
+                      *skips fully-masked causal blocks* (exact flash FLOPs in
+                      the lowered HLO — used by the dry-run cost extraction);
+                      ``unroll=False`` uses ``lax.scan`` (small HLO — used by
+                      the full-step compile and real training).
+  * ``decode``      — single-token attention against a KV cache. The cache
+                      carries a leading ``shards`` dim so it can be laid out
+                      either per-kv-head (shards=1) or sequence-sharded
+                      (flash-decoding style, shards=mesh model size) with a
+                      log-sum-exp merge — the §Perf decode optimization.
+
+The per-head semantics follow the paper's filter-parallel scheme: heads are
+the "filters" of the attention layer; sharding heads over the model axis is
+exactly paper-§3.3 filter parallelism applied to attention.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import RMSNorm
+from .module import NULL_CTX, ShardingCtx, fan_in_init, param
+from .rotary import apply_rope
+
+NEG_INF = -2.0e38  # large negative for masking in fp32
+
+
+def _softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    use_bias: bool = False          # qwen1.5: bias on QKV only
+    out_bias: bool = False
+    qk_norm: bool = False           # qwen3
+    rope: bool = True
+    rope_base: float = 10000.0
+    window: int | None = None       # sliding-window (recurrentgemma local attn)
+    logit_softcap: float | None = None  # grok-1 style
+    causal: bool = True
+    dtype: Any = None
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (shared by all paths)
+# ---------------------------------------------------------------------------
+
+def _block_attn(q, k, v, qpos, kpos, scale, causal, window, softcap):
+    """One (q-block, kv-block) flash step. q:(B,H,Q,D) k:(B,H,K,D) v:(B,H,K,D).
+
+    Returns un-normalized outputs plus row max/sum for online softmax merge:
+    (o_unnorm (B,H,Q,D) fp32, m (B,H,Q) fp32, s (B,H,Q) fp32).
+    """
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    s = _softcap(s, softcap)
+    mask = jnp.ones(s.shape[-2:], bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(jnp.isfinite(m)[..., None], p, 0.0)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v).astype(jnp.float32)
+    return o, m, jnp.sum(p, axis=-1)
+
+
+def _merge_blocks(partials):
+    """LSE-merge of flash partials along a leading block axis."""
+    o, m, s = partials  # o:(T,B,H,Q,D) m,s:(T,B,H,Q)
+    m_all = jnp.max(m, axis=0)
+    scale = jnp.exp(m - m_all[None])
+    scale = jnp.where(jnp.isfinite(m), scale, 0.0)
+    s_all = jnp.sum(s * scale, axis=0)
+    o_all = jnp.sum(o * scale[..., None], axis=0)
+    return o_all / jnp.maximum(s_all, 1e-30)[..., None]
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    q_chunk=1024, kv_chunk=1024, unroll=False, base_pos=0):
+    """Chunked flash attention. q,k,v: (B, S, H, D) / (B, Skv, H, D).
+
+    ``unroll=True``: static loops + causal block skipping (exact FLOPs in
+    HLO, used by dry-run cost bodies). ``unroll=False``: lax.scan over q
+    blocks with an inner scan over kv blocks.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    Dv = v.shape[-1]
+    def _fit(chunk, S):
+        chunk = min(chunk, S)
+        while S % chunk:
+            chunk -= 1
+        return chunk
+
+    q_chunk = _fit(q_chunk, Sq)
+    kv_chunk = _fit(kv_chunk, Skv)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    kv_off = Skv - Sq  # decode-style alignment: query i sits at kv pos kv_off+i
+    # pre-blocked views (n_blocks, B, H, chunk, D): static indexing instead of
+    # dynamic_slice — fuses cleanly and keeps HLO byte accounting honest.
+    qb = q.reshape(B, nq, q_chunk, H, D).transpose(1, 0, 3, 2, 4)
+    kb = k.reshape(B, nk, kv_chunk, H, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, kv_chunk, H, Dv).transpose(1, 0, 3, 2, 4)
+
+    if unroll:
+        outs = []
+        for iq in range(nq):
+            qpos = base_pos + kv_off + iq * q_chunk + jnp.arange(q_chunk)
+            parts = []
+            for ik in range(nk):
+                k_start = ik * kv_chunk
+                # static causal/window block skipping — flash FLOP parity
+                if causal and k_start > kv_off + (iq + 1) * q_chunk - 1:
+                    continue
+                if window is not None and \
+                        k_start + kv_chunk - 1 < kv_off + iq * q_chunk - window + 1:
+                    continue
+                kpos = base_pos + k_start + jnp.arange(kv_chunk)
+                parts.append(_block_attn(qb[iq], kb[ik], vb[ik], qpos, kpos,
+                                         scale, causal, window, softcap))
+            stacked = tuple(jnp.stack(x) for x in zip(*parts))
+            outs.append(_merge_blocks(stacked))
+        o = jnp.stack(outs)  # (nq,B,H,qc,Dv)
+    else:
+        def q_step(_, inp):
+            qi, iq = inp
+            qpos = base_pos + kv_off + iq * q_chunk + jnp.arange(q_chunk)
+
+            def kv_step(carry, kv_inp):
+                o_acc, m_acc, s_acc = carry
+                ki, vi, ik = kv_inp
+                kpos = base_pos + ik * kv_chunk + jnp.arange(kv_chunk)
+                o, m, s = _block_attn(qi, ki, vi, qpos, kpos, scale, causal,
+                                      window, softcap)
+                m_new = jnp.maximum(m_acc, m)
+                sc_old = jnp.where(jnp.isfinite(m_acc), jnp.exp(m_acc - m_new), 0.0)
+                sc_new = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+                return (o_acc * sc_old[..., None] + o * sc_new[..., None],
+                        m_new, s_acc * sc_old + s * sc_new), None
+
+            o0 = jnp.zeros(qi.shape[:-1] + (Dv,), jnp.float32)
+            m0 = jnp.full(qi.shape[:-1], NEG_INF, jnp.float32)
+            s0 = jnp.zeros(qi.shape[:-1], jnp.float32)
+            (o, m, s), _ = jax.lax.scan(kv_step, (o0, m0, s0),
+                                        (kb, vb, jnp.arange(nk)))
+            return None, o / jnp.maximum(s, 1e-30)[..., None]
+
+        _, o = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))  # (nq,B,H,qc,Dv)
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, Dv)
+    return o.astype(q.dtype)  # (B,S,H,Dv)
+
+
+def plain_attention(q, k, v, *, causal=True, window=None, softcap=None, base_pos=0):
+    """Reference full-matrix attention (tests / tiny shapes)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    kv_off = Skv - Sq
+    qpos = base_pos + kv_off + jnp.arange(Sq)
+    kpos = base_pos + jnp.arange(Skv)
+    o, m, s = _block_attn(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), qpos, kpos,
+                          1.0 / np.sqrt(D), causal, window, softcap)
+    o = o / jnp.maximum(s, 1e-30)[..., None]
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention module
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Attention:
+    cfg: AttentionConfig
+
+    def params_spec(self):
+        c = self.cfg
+        spec = {
+            "wq": param((c.d_model, c.n_heads, c.head_dim),
+                        ("embed", "heads", "head_dim"), init=fan_in_init((0,)),
+                        dtype=c.dtype),
+            "wk": param((c.d_model, c.n_kv_heads, c.head_dim),
+                        ("embed", "kv_heads", "head_dim"), init=fan_in_init((0,)),
+                        dtype=c.dtype),
+            "wv": param((c.d_model, c.n_kv_heads, c.head_dim),
+                        ("embed", "kv_heads", "head_dim"), init=fan_in_init((0,)),
+                        dtype=c.dtype),
+            "wo": param((c.n_heads, c.head_dim, c.d_model),
+                        ("heads", "head_dim", "embed"), init=fan_in_init((0, 1)),
+                        dtype=c.dtype),
+        }
+        if c.use_bias:
+            spec["bq"] = param((c.n_heads, c.head_dim), ("heads", "head_dim"),
+                               init=lambda k, s, d: jnp.zeros(s, d), dtype=c.dtype)
+            spec["bk"] = param((c.n_kv_heads, c.head_dim), ("kv_heads", "head_dim"),
+                               init=lambda k, s, d: jnp.zeros(s, d), dtype=c.dtype)
+            spec["bv"] = param((c.n_kv_heads, c.head_dim), ("kv_heads", "head_dim"),
+                               init=lambda k, s, d: jnp.zeros(s, d), dtype=c.dtype)
+        if c.out_bias:
+            spec["bo"] = param((c.d_model,), ("embed",),
+                               init=lambda k, s, d: jnp.zeros(s, d), dtype=c.dtype)
+        if c.qk_norm:
+            spec["q_norm"] = RMSNorm(c.head_dim, axis_name="head_dim").params_spec()
+            spec["k_norm"] = RMSNorm(c.head_dim, axis_name="head_dim").params_spec()
+        return spec
+
+    # -- shared projection helpers ---------------------------------------
+    def _qkv(self, params, x, positions, ctx: ShardingCtx):
+        c = self.cfg
+        # Megatron-SP: gather the (smaller) residual stream over the model
+        # axis once, then compute head-sharded projections locally.
+        x = ctx.constrain(x, ("batch", None, "act_embed"))
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if c.use_bias:
+            q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+        if c.qk_norm:
+            qn = RMSNorm(c.head_dim, axis_name="head_dim")
+            q = qn.apply(params["q_norm"], q)
+            k = qn.apply(params["k_norm"], k)
+        if c.rope:
+            q = apply_rope(q, positions, c.rope_base)
+            k = apply_rope(k, positions, c.rope_base)
+        q = ctx.constrain(q, ("batch", None, "act_heads", None))
+        k = ctx.constrain(k, ("batch", None, "act_kv", None))
+        v = ctx.constrain(v, ("batch", None, "act_kv", None))
+        return q, k, v
+
+    def _out(self, params, o, ctx: ShardingCtx):
+        y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+        if self.cfg.out_bias:
+            y = y + params["bo"]
+        return ctx.constrain(y, ("batch", "seq", "act_embed"))
+
+    def _expand_kv(self, k):
+        rep = self.cfg.n_heads // self.cfg.n_kv_heads
+        return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+    # -- training / prefill forward ---------------------------------------
+    def apply(self, params, x, ctx: ShardingCtx = NULL_CTX, positions=None,
+              impl: str = "chunked", q_chunk: int = 1024, kv_chunk: int = 1024,
+              unroll: bool = False):
+        c = self.cfg
+        B, S, _ = x.shape
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q, k, v = self._qkv(params, x, positions, ctx)
+        k, v = self._expand_kv(k), self._expand_kv(v)
+        kwargs = dict(causal=c.causal, window=c.window, softcap=c.logit_softcap)
+        if impl == "plain":
+            o = plain_attention(q, k, v, **kwargs)
+        else:
+            o = flash_attention(q, k, v, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                unroll=unroll, **kwargs)
+        return self._out(params, o, ctx)
+
+    # -- cross attention (enc-dec) ------------------------------------------
+    def kv(self, params, enc_out, ctx: ShardingCtx = NULL_CTX):
+        """Precompute cross-attention K/V from encoder output (no rope)."""
+        c = self.cfg
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+        if c.use_bias:
+            k, v = k + params["bk"], v + params["bv"]
+        k = ctx.constrain(k, ("batch", None, "act_kv", None))
+        v = ctx.constrain(v, ("batch", None, "act_kv", None))
+        return k, v
+
+    def apply_cross(self, params, x, k, v, ctx: ShardingCtx = NULL_CTX,
+                    impl: str = "chunked", q_chunk: int = 1024,
+                    kv_chunk: int = 1024, unroll: bool = False):
+        """Cross-attention: queries from x, given K/V (non-causal, no rope)."""
+        c = self.cfg
+        x = ctx.constrain(x, ("batch", None, "act_embed"))
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        if c.use_bias:
+            q = q + params["bq"]
+        q = ctx.constrain(q, ("batch", None, "act_heads", None))
+        k, v = self._expand_kv(k), self._expand_kv(v)
+        if impl == "plain" or q.shape[1] == 1:
+            o = plain_attention(q, k, v, causal=False)
+        else:
+            o = flash_attention(q, k, v, causal=False, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk, unroll=unroll)
+        return self._out(params, o, ctx)
+
+    # -- KV cache -----------------------------------------------------------
+    def cache_spec(self, batch: int, max_len: int, shards: int = 1, dtype=jnp.bfloat16):
+        """Cache as ParamSpec tree: (B, shards, max_len/shards, KV, HD).
+
+        shards=1 → classic per-head layout; shards=model-size → sequence-
+        sharded flash-decoding layout (each chip holds a slice of *all* heads).
+        """
+        c = self.cfg
+        if max_len % shards:
+            raise ValueError("max_len must divide shards")
+        shape = (batch, shards, max_len // shards, c.n_kv_heads, c.head_dim)
+        axes = ("batch", "seq", None, "act_kv", None)
+        return {
+            "k": param(shape, axes, init=lambda k, s, d: jnp.zeros(s, d), dtype=dtype),
+            "v": param(shape, axes, init=lambda k, s, d: jnp.zeros(s, d), dtype=dtype),
+        }
+
+    def decode(self, params, x, cache, pos, ctx: ShardingCtx = NULL_CTX):
+        """One decode step. x: (B, 1, d_model); pos: scalar int32 (current index).
+
+        Returns (y, new_cache). Window attention uses a ring-buffer write.
+        """
+        c = self.cfg
+        B = x.shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q, k_new, v_new = self._qkv(params, x, positions, ctx)
+        shards = cache["k"].shape[1]
+        span = cache["k"].shape[2]
+        total = shards * span
+        write = pos % total if c.window is not None else pos
+        sh, loc = write // span, write % span
+
+        # one-hot masked write instead of dynamic_update_slice: a traced
+        # index into a sharded dim forces the SPMD partitioner to re-gather
+        # the cache (§Perf iteration log); the mask is elementwise and keeps
+        # the cache fully sharded.
+        m = (jnp.arange(shards)[:, None] == sh) & \
+            (jnp.arange(span)[None, :] == loc)          # (shards, span)
+        m = m[None, :, :, None, None]
+
+        def upd(buf, new):
+            return jnp.where(m, new[:, None].astype(buf.dtype), buf)
+
+        cache = {"k": upd(cache["k"], k_new), "v": upd(cache["v"], v_new)}
+
+        # attend against every shard, LSE-merge (flash-decoding)
+        rep = c.n_heads // c.n_kv_heads
+        kc = cache["k"].astype(q.dtype)  # (B, shards, span, KV, D)
+        vc = cache["v"].astype(q.dtype)
+        if rep > 1:
+            kc = jnp.repeat(kc, rep, axis=3)
+            vc = jnp.repeat(vc, rep, axis=3)
+        scale = 1.0 / np.sqrt(c.head_dim)
+        qh = q.transpose(0, 2, 1, 3)  # (B,H,1,D)
+
+        # token index currently held by each cache slot (ring-aware when windowed)
+        slot = jnp.arange(total).reshape(shards, span)
+        if c.window is not None:
+            kpos = pos - ((pos - slot) % total)
+        else:
+            kpos = slot
+        valid = (kpos <= pos) & (kpos >= 0)
+        if c.window is not None:
+            valid &= kpos > pos - c.window
+
+        s = jnp.einsum("bhqd,bnkhd->bhqnk", qh, kc).astype(jnp.float32) * scale
+        s = _softcap(s, c.logit_softcap)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=(-2, -1), keepdims=True)
+        p = jnp.exp(s - m)
+        p = jnp.where(jnp.isfinite(m), p, 0.0)
+        o = jnp.einsum("bhqnk,bnkhd->bhqd", p.astype(q.dtype), vc).astype(jnp.float32)
+        o = o / jnp.maximum(jnp.sum(p, axis=(-2, -1)), 1e-30)[..., None]
+        o = o.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,1,H,D)
+        return self._out(params, o, ctx), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_base: float = 10000.0
+    dtype: Any = None
+
+    @property
+    def qk_head_dim(self):
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+@dataclass(frozen=True)
+class MLAttention:
+    """DeepSeek-V3 MLA: low-rank compressed Q and KV with decoupled RoPE keys.
+
+    Decode cache = per-token latent c_kv (kv_lora_rank) + rope key — the
+    memory win the paper's "Redundancy in Memory" section anticipates (§5.3.2:
+    split weights AND activations; MLA compresses the activation cache).
+    """
+
+    cfg: MLAConfig
+
+    def params_spec(self):
+        c = self.cfg
+        fi = fan_in_init((0,))
+        return {
+            "wq_a": param((c.d_model, c.q_lora_rank), ("embed", "qk_rank"), init=fi,
+                          dtype=c.dtype),
+            "q_norm": RMSNorm(c.q_lora_rank, axis_name="qk_rank").params_spec(),
+            "wq_b": param((c.q_lora_rank, c.n_heads, c.qk_head_dim),
+                          ("qk_rank", "heads", "head_dim"), init=fi, dtype=c.dtype),
+            "wkv_a": param((c.d_model, c.kv_lora_rank + c.qk_rope_dim),
+                           ("embed", "kv_rank"), init=fi, dtype=c.dtype),
+            "kv_norm": RMSNorm(c.kv_lora_rank, axis_name="kv_rank").params_spec(),
+            "wkv_b": param((c.kv_lora_rank, c.n_heads, c.qk_nope_dim + c.v_head_dim),
+                           ("kv_rank", "heads", "head_dim"), init=fi, dtype=c.dtype),
+            "wo": param((c.n_heads, c.v_head_dim, c.d_model),
+                        ("heads", "head_dim", "embed"), init=fan_in_init((0, 1)),
+                        dtype=c.dtype),
+        }
+
+    def _project(self, params, x, positions, ctx: ShardingCtx = NULL_CTX):
+        c = self.cfg
+        x = ctx.constrain(x, ("batch", None, "act_embed"))
+        q = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+        q = RMSNorm(c.q_lora_rank, axis_name="qk_rank").apply(params["q_norm"], q)
+        q = jnp.einsum("bsr,rhk->bshk", q, params["wq_b"])
+        q_nope, q_rope = q[..., :c.qk_nope_dim], q[..., c.qk_nope_dim:]
+        q_rope = apply_rope(q_rope, positions, c.rope_base)
+        kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+        c_kv, k_rope = kv[..., :c.kv_lora_rank], kv[..., c.kv_lora_rank:]
+        c_kv = RMSNorm(c.kv_lora_rank, axis_name="kv_rank").apply(params["kv_norm"], c_kv)
+        k_rope = apply_rope(k_rope[:, :, None, :], positions, c.rope_base)  # 1 shared head
+        return q_nope, q_rope, c_kv, k_rope[:, :, 0, :]
+
+    def apply(self, params, x, ctx: ShardingCtx = NULL_CTX, positions=None,
+              impl: str = "chunked", q_chunk: int = 1024, kv_chunk: int = 1024,
+              unroll: bool = False):
+        c = self.cfg
+        B, S, _ = x.shape
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q_nope, q_rope, c_kv, k_rope = self._project(params, x, positions, ctx)
+        kv = jnp.einsum("bsr,rhk->bshk", c_kv, params["wkv_b"])
+        k_nope, v = kv[..., :c.qk_nope_dim], kv[..., c.qk_nope_dim:]
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                    (B, S, c.n_heads, c.qk_rope_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        q = ctx.constrain(q, ("batch", None, "act_heads", None))
+        k = ctx.constrain(k, ("batch", None, "act_heads", None))
+        v = ctx.constrain(v, ("batch", None, "act_heads", None))
+        if impl == "plain":
+            o = plain_attention(q, k, v, causal=True)
+        else:
+            # pad v head dim up to qk dim not needed: flash handles D mismatch
+            o = flash_attention(q, k, v, causal=True, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk, unroll=unroll)
+        y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+        return ctx.constrain(y, ("batch", "seq", "act_embed"))
+
+    def cache_spec(self, batch: int, max_len: int, shards: int = 1,
+                   dtype=jnp.bfloat16):
+        c = self.cfg
+        return {
+            "c_kv": param((batch, max_len, c.kv_lora_rank),
+                          ("batch", "seq", None),
+                          init=lambda k, s, d: jnp.zeros(s, d), dtype=dtype),
+            "k_rope": param((batch, max_len, c.qk_rope_dim),
+                            ("batch", "seq", None),
+                            init=lambda k, s, d: jnp.zeros(s, d), dtype=dtype),
+        }
+
+    def decode(self, params, x, cache, pos, ctx: ShardingCtx = NULL_CTX):
+        """Latent-cache decode: attend in the compressed space (absorbed form)."""
+        c = self.cfg
+        B = x.shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q_nope, q_rope, c_kv_new, k_rope_new = self._project(params, x, positions, ctx)
+        cache = {
+            "c_kv": jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0)),
+            "k_rope": jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0)),
+        }
+        c_all = cache["c_kv"].astype(x.dtype)      # (B, T, R)
+        kr_all = cache["k_rope"].astype(x.dtype)   # (B, T, rope)
+        w_k = params["wkv_b"][..., :c.qk_nope_dim]   # (R, H, nope)
+        w_v = params["wkv_b"][..., c.qk_nope_dim:]   # (R, H, v)
+        # absorb: q_nope^T k_nope = (q_nope^T w_k) c_kv
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w_k)  # (B,1,H,R)
+        s = jnp.einsum("bshr,btr->bhst", q_abs, c_all)
+        s = s + jnp.einsum("bshk,btk->bhst", q_rope, kr_all)
+        s = s.astype(jnp.float32) / np.sqrt(c.qk_head_dim)
+        valid = jnp.arange(c_all.shape[1]) <= pos
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btr->bshr", p, c_all)        # (B,1,H,R)
+        o = jnp.einsum("bshr,rhk->bshk", o_lat, w_v)          # (B,1,H,v)
+        y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+        return ctx.constrain(y, ("batch", "seq", "act_embed")), cache

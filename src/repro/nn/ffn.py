@@ -1,0 +1,191 @@
+"""Feed-forward blocks: dense (GLU or plain) and Mixture-of-Experts.
+
+MoE uses the GShard/MaxText einsum dispatch formulation: tokens are grouped,
+routed with top-k + capacity, and dispatched/combined with one-hot einsums.
+Under expert parallelism ("experts" → model axis) + data parallelism
+("batch" → data axis) the SPMD partitioner materializes the all-to-all pair
+the paper's communication analysis would assign to a channel/filter-style
+horizontal split (paper §3.3) — experts are "filters at layer granularity".
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .module import NULL_CTX, ShardingCtx, fan_in_init, param
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+@dataclass(frozen=True)
+class FFNConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"
+    glu: bool = True
+    use_bias: bool = False
+    dtype: Any = None
+
+
+@dataclass(frozen=True)
+class FFN:
+    cfg: FFNConfig
+
+    def params_spec(self):
+        c = self.cfg
+        fi = fan_in_init((0,))
+        spec = {"w_in": param((c.d_model, c.d_ff), ("embed", "mlp"), init=fi,
+                              dtype=c.dtype),
+                "w_out": param((c.d_ff, c.d_model), ("mlp", "embed"), init=fi,
+                               dtype=c.dtype)}
+        if c.glu:
+            spec["w_gate"] = param((c.d_model, c.d_ff), ("embed", "mlp"), init=fi,
+                                   dtype=c.dtype)
+        if c.use_bias:
+            z = lambda k, s, d: jnp.zeros(s, d)
+            spec["b_in"] = param((c.d_ff,), ("mlp",), init=z, dtype=c.dtype)
+            spec["b_out"] = param((c.d_model,), ("embed",), init=z, dtype=c.dtype)
+        return spec
+
+    def apply(self, params, x, ctx: ShardingCtx = NULL_CTX):
+        c = self.cfg
+        act = _ACTS[c.activation]
+        x = ctx.constrain(x, ("batch", None, "act_embed"))
+        h = x @ params["w_in"]
+        if c.use_bias:
+            h = h + params["b_in"]
+        h = act(h)
+        if c.glu:
+            h = h * (x @ params["w_gate"])
+        h = ctx.constrain(h, ("batch", None, "act_mlp"))
+        y = h @ params["w_out"]
+        if c.use_bias:
+            y = y + params["b_out"]
+        return ctx.constrain(y, ("batch", "seq", "act_embed"))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                  # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0          # deepseek shared experts (always-on)
+    shared_d_ff: int | None = None
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    glu: bool = True
+    router_softmax: bool = True   # False → sigmoid+normalize (DeepSeek-V3)
+    aux_loss_coef: float = 0.001
+    n_groups: int = 1          # token groups for dispatch (per data shard)
+    dtype: Any = None
+
+
+@dataclass(frozen=True)
+class MoE:
+    cfg: MoEConfig
+
+    def params_spec(self):
+        c = self.cfg
+        fi = fan_in_init((1,))
+        spec = {
+            "router": param((c.d_model, c.n_experts), ("embed", None),
+                            init=fan_in_init((0,)), dtype=jnp.float32),
+            "w_in": param((c.n_experts, c.d_model, c.d_ff),
+                          ("experts", "embed", "mlp"), init=fi, dtype=c.dtype),
+            "w_out": param((c.n_experts, c.d_ff, c.d_model),
+                           ("experts", "mlp", "embed"), init=fi, dtype=c.dtype),
+        }
+        if c.glu:
+            spec["w_gate"] = param((c.n_experts, c.d_model, c.d_ff),
+                                   ("experts", "embed", "mlp"), init=fi,
+                                   dtype=c.dtype)
+        if c.n_shared:
+            shared = FFN(FFNConfig(c.d_model, (c.shared_d_ff or c.d_ff) * c.n_shared,
+                                   c.activation, c.glu, dtype=c.dtype))
+            spec["shared"] = shared.params_spec()
+        return spec
+
+    def _route(self, params, x):
+        """x: (T, d) → top-k expert ids, weights, aux loss."""
+        c = self.cfg
+        logits = (x.astype(jnp.float32) @ params["router"])  # (T, E)
+        if c.router_softmax:
+            probs = jax.nn.softmax(logits, axis=-1)
+        else:  # DeepSeek-V3 sigmoid scoring
+            probs = jax.nn.sigmoid(logits)
+        weights, ids = jax.lax.top_k(probs, c.top_k)  # (T, k)
+        weights = weights / jnp.maximum(jnp.sum(weights, -1, keepdims=True), 1e-9)
+        # Switch-style load-balance aux loss
+        pe = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)           # (E,)
+        fe = jnp.mean(jax.nn.one_hot(ids[:, 0], c.n_experts), axis=0)     # (E,)
+        aux = c.n_experts * jnp.sum(pe * fe) * c.aux_loss_coef
+        return ids, weights, aux
+
+    def apply(self, params, x, ctx: ShardingCtx = NULL_CTX):
+        """x: (B, S, d). Returns (y, aux_loss)."""
+        c = self.cfg
+        B, S, D = x.shape
+        T = B * S
+        # largest group count <= n_groups that divides the token count
+        # (decode steps have T == batch, much smaller than the train target)
+        G = math.gcd(T, c.n_groups)
+        tg = T // G
+        cap = int(np.ceil(c.top_k * tg / c.n_experts * c.capacity_factor))
+        cap = max(cap, 1)
+        xg = x.reshape(G, tg, D)
+        xg = ctx.constrain(xg, ("batch", None, "act_embed"))
+
+        ids, weights, aux = self._route(params, x.reshape(T, D))
+        ids = ids.reshape(G, tg, c.top_k)
+        weights = weights.reshape(G, tg, c.top_k)
+
+        # position of each (token, choice) within its expert's capacity buffer
+        onehot = jax.nn.one_hot(ids, c.n_experts, dtype=jnp.float32)  # (G,t,k,E)
+        flat = onehot.reshape(G, tg * c.top_k, c.n_experts)
+        ranks = jnp.cumsum(flat, axis=1) * flat  # 1-based rank within expert
+        pos_in_e = jnp.sum(ranks.reshape(G, tg, c.top_k, c.n_experts), -1) - 1.0
+        keep = (pos_in_e >= 0) & (pos_in_e < cap)  # (G,t,k)
+        pos_idx = jnp.clip(pos_in_e, 0, cap - 1).astype(jnp.int32)
+        pos_oh = jax.nn.one_hot(pos_idx, cap, dtype=jnp.float32) * keep[..., None]
+        # dispatch mask (G, t, E, C): 1 where token t goes to slot (E, C).
+        # Cast to the compute dtype and pin the sharding BEFORE the big
+        # dispatch einsums: without the constraint the SPMD partitioner
+        # replicate-reduces them as fp32 model-axis all-reduces
+        # (EXPERIMENTS.md §Perf, deepseek-v3 iteration log).
+        dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, pos_oh).astype(x.dtype)
+        combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, pos_oh,
+                             weights).astype(jnp.float32)
+        dispatch = ctx.constrain(dispatch, ("batch", None, "experts", None))
+        combine = ctx.constrain(combine, ("batch", None, "experts", None))
+
+        expert_in = jnp.einsum("gtec,gtd->egcd", dispatch, xg)
+        expert_in = ctx.constrain(expert_in, ("experts", "batch", None, "act_embed"))
+        act = _ACTS[c.activation]
+        h = jnp.einsum("egcd,edf->egcf", expert_in, params["w_in"])
+        h = act(h)
+        if c.glu:
+            h = h * jnp.einsum("egcd,edf->egcf", expert_in, params["w_gate"])
+        h = ctx.constrain(h, ("experts", "batch", None, "act_mlp"))
+        out = jnp.einsum("egcf,efd->egcd", h, params["w_out"])
+        out = ctx.constrain(out, ("experts", "batch", None, "act_embed"))
+        y = jnp.einsum("gtec,egcd->gtd", combine.astype(x.dtype), out)
+        y = y.reshape(B, S, D)
+        if c.n_shared:
+            shared = FFN(FFNConfig(c.d_model, (c.shared_d_ff or c.d_ff) * c.n_shared,
+                                   c.activation, c.glu, dtype=c.dtype))
+            y = y + shared.apply(params["shared"], x, ctx)
+        return ctx.constrain(y, ("batch", "seq", "act_embed")), aux

@@ -1,0 +1,305 @@
+"""Lightweight functional module system with logical-axis partitioning.
+
+No flax on this box, so the framework rolls its own parameter system, in the
+style of MaxText/T5X logical axes:
+
+* A module is a frozen dataclass holding config. It exposes
+  ``params_spec() -> tree of ParamSpec`` and pure ``apply(params, ...)``.
+* ``ParamSpec`` records shape, dtype, initializer and *logical* axis names
+  ("embed", "mlp", "heads", ...).
+* A parallelism strategy is a ``Rules`` table mapping logical axes to mesh
+  axes. ``tree_shardings`` turns a spec tree + mesh + rules into
+  ``NamedSharding``s; ``tree_init`` materializes parameters;
+  ``tree_abstract`` produces allocation-free ``ShapeDtypeStruct`` stand-ins
+  for the multi-pod dry-run.
+
+The logical→mesh indirection is what lets the same model definition run under
+every parallel strategy of the paper (data / spatial / filter / channel /
+pipeline / hybrids) by swapping a rules table instead of editing the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical axis vocabulary (documented; anything else is rejected early).
+# ---------------------------------------------------------------------------
+LOGICAL_AXES = frozenset(
+    {
+        # activations
+        "batch", "seq", "act_embed", "act_mlp", "act_heads", "act_kv",
+        # parameters
+        "embed", "mlp", "heads", "kv_heads", "head_dim", "vocab", "layers",
+        "experts", "state", "conv_k", "conv_in", "conv_out", "spatial",
+        "qk_rank", "kv_rank",  # MLA low-rank dims
+        "unsharded",
+    }
+)
+
+Initializer = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+def _normal(stddev: float) -> Initializer:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+    return init
+
+
+def fan_in_init(fan_axes: Sequence[int] | None = None) -> Initializer:
+    """LeCun-normal style: stddev = 1/sqrt(fan_in over the given axes)."""
+
+    def init(key, shape, dtype):
+        if fan_axes is None:
+            fan = shape[0] if len(shape) >= 1 else 1
+        else:
+            fan = int(np.prod([shape[a] for a in fan_axes]))
+        stddev = 1.0 / np.sqrt(max(fan, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+    return init
+
+
+def zeros_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + logical axes + initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: Initializer | None = None  # default: fan-in normal over axis 0
+    dtype: Any = None  # None -> use the tree-level default
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} rank mismatch")
+        for a in self.axes:
+            if a is not None and a not in LOGICAL_AXES:
+                raise ValueError(f"unknown logical axis {a!r}; add it to LOGICAL_AXES")
+
+
+def param(shape: Sequence[int], axes: Sequence[str | None],
+          init: Initializer | None = None, dtype: Any = None) -> ParamSpec:
+    return ParamSpec(tuple(int(s) for s in shape), tuple(axes), init, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rules: logical axis -> mesh axis (str | tuple[str, ...] | None)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Rules:
+    """Mapping from logical axes to mesh axes for one parallel strategy."""
+
+    table: tuple[tuple[str, Any], ...]
+
+    @staticmethod
+    def of(mapping: Mapping[str, Any]) -> "Rules":
+        for k in mapping:
+            if k not in LOGICAL_AXES:
+                raise ValueError(f"unknown logical axis {k!r} in rules")
+        return Rules(tuple(sorted(mapping.items())))
+
+    def get(self, axis: str | None):
+        if axis is None:
+            return None
+        for k, v in self.table:
+            if k == axis:
+                return v
+        return None
+
+    def merged(self, extra: Mapping[str, Any]) -> "Rules":
+        d = dict(self.table)
+        d.update(extra)
+        return Rules.of(d)
+
+
+def spec_to_pspec(spec_axes: Sequence[str | None], rules: Rules, mesh: Mesh,
+                  shape: Sequence[int] | None = None) -> P:
+    """Resolve logical axes to a PartitionSpec.
+
+    Guarantees validity: a mesh axis is used at most once, and sharded dims
+    must divide evenly by the mesh-axis size (otherwise that dim falls back
+    to replication — the partitioner cannot handle uneven shards portably).
+    """
+    used: set[str] = set()
+    out = []
+    for i, ax in enumerate(spec_axes):
+        mesh_axes = rules.get(ax)
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        picked = []
+        size = 1
+        for m in mesh_axes:
+            if m in used or m not in mesh.shape:
+                continue
+            picked.append(m)
+            size *= mesh.shape[m]
+        if not picked:
+            out.append(None)
+            continue
+        if shape is not None and shape[i] % size != 0:
+            # try a prefix of the requested axes that divides
+            picked2, size2 = [], 1
+            for m in picked:
+                if shape[i] % (size2 * mesh.shape[m]) == 0:
+                    picked2.append(m)
+                    size2 *= mesh.shape[m]
+            picked = picked2
+            if not picked:
+                out.append(None)
+                continue
+        used.update(picked)
+        out.append(tuple(picked) if len(picked) > 1 else picked[0])
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities
+# ---------------------------------------------------------------------------
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _path_key(key: jax.Array, path: str) -> jax.Array:
+    """Deterministic per-parameter key derived from the tree path."""
+    digest = hashlib.sha256(path.encode()).digest()
+    fold = int.from_bytes(digest[:4], "little")
+    return jax.random.fold_in(key, fold)
+
+
+def _iter_paths(tree, prefix=""):
+    if _is_spec(tree):
+        yield prefix, tree
+    elif isinstance(tree, Mapping):
+        for k in sorted(tree):
+            yield from _iter_paths(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _iter_paths(v, f"{prefix}/{i}")
+    elif tree is None:
+        return
+    else:
+        raise TypeError(f"unexpected leaf {type(tree)} at {prefix}")
+
+
+def tree_map_spec(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=_is_spec)
+
+
+def tree_init(spec_tree, key: jax.Array, default_dtype=jnp.float32):
+    """Materialize a parameter tree (real arrays), keyed by tree path."""
+
+    def init_one(path: str, spec: ParamSpec):
+        dtype = spec.dtype or default_dtype
+        init = spec.init or fan_in_init()
+        return init(_path_key(key, path), spec.shape, dtype)
+
+    def go(tree, prefix):
+        if _is_spec(tree):
+            return init_one(prefix, tree)
+        if isinstance(tree, Mapping):
+            return {k: go(tree[k], f"{prefix}/{k}") for k in tree}
+        if isinstance(tree, (list, tuple)):
+            out = [go(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+            return type(tree)(out) if isinstance(tree, tuple) else out
+        if tree is None:
+            return None
+        raise TypeError(f"unexpected leaf {type(tree)} at {prefix}")
+
+    return go(spec_tree, "")
+
+
+def tree_abstract(spec_tree, default_dtype=jnp.float32, mesh: Mesh | None = None,
+                  rules: Rules | None = None):
+    """ShapeDtypeStruct stand-ins (no allocation) — dry-run entry point."""
+
+    def one(spec: ParamSpec):
+        dtype = spec.dtype or default_dtype
+        if mesh is not None and rules is not None:
+            pspec = spec_to_pspec(spec.axes, rules, mesh, spec.shape)
+            return jax.ShapeDtypeStruct(spec.shape, dtype,
+                                        sharding=NamedSharding(mesh, pspec))
+        return jax.ShapeDtypeStruct(spec.shape, dtype)
+
+    return tree_map_spec(one, spec_tree)
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Rules):
+    def one(spec: ParamSpec):
+        return NamedSharding(mesh, spec_to_pspec(spec.axes, rules, mesh, spec.shape))
+
+    return tree_map_spec(one, spec_tree)
+
+
+def tree_num_params(spec_tree) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in _iter_paths(spec_tree))
+
+
+def tree_num_bytes(spec_tree, default_dtype=jnp.float32) -> int:
+    total = 0
+    for _, s in _iter_paths(spec_tree):
+        dt = jnp.dtype(s.dtype or default_dtype)
+        total += int(np.prod(s.shape)) * dt.itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding helper
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShardingCtx:
+    """Mesh + rules, closed over by model apply fns for activation constraints."""
+
+    mesh: Mesh | None
+    rules: Rules
+
+    def constrain(self, x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        pspec = spec_to_pspec(tuple(axes), self.rules, self.mesh, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, pspec))
+
+
+NULL_CTX = ShardingCtx(mesh=None, rules=Rules.of({}))
+
+
+@jax.custom_vjp
+def grad_barrier(x):
+    """Identity whose COTANGENT is cast to x's dtype.
+
+    Applied at block boundaries so residual-stream gradients cross sharding
+    constraints in bf16 — without it, fp32 attention/softmax internals leak
+    fp32 cotangents into the per-layer model-axis all-reduces, doubling
+    their wire bytes (EXPERIMENTS.md §Perf, qwen3 iteration 1).
+    """
+    return x
+
+
+def _gb_fwd(x):
+    # residuals must be JAX types: carry the dtype as a zero-size array
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _gb_bwd(res, ct):
+    return (ct.astype(res.dtype),)
+
+
+grad_barrier.defvjp(_gb_fwd, _gb_bwd)

@@ -1,0 +1,140 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d + RG-LRU gated linear recurrence.
+
+RG-LRU [arXiv:2402.19427]:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)     (diagonal decay, c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) * (i_t * x_t)
+
+The recurrence is diagonal in the channel dim → paper-style *filter*
+parallelism applies cleanly (shard channels over the model axis); the seq dim
+serializes (no spatial/sequence parallelism), evaluated with an associative
+scan for training and O(1) state for decode.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .module import NULL_CTX, ShardingCtx, fan_in_init, param
+
+_C = 8.0  # RG-LRU decay sharpness constant
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    lru_width: int
+    d_conv: int = 4
+    n_blocks: int = 16  # block-diagonal gate layers (RecurrentGemma style)
+    dtype: Any = None
+
+
+@dataclass(frozen=True)
+class RecurrentBlock:
+    """linear→conv1d→RG-LRU branch ⊙ linear→GeLU branch → linear out."""
+
+    cfg: RGLRUConfig
+
+    def params_spec(self):
+        c = self.cfg
+        fi = fan_in_init((0,))
+        z = lambda k, s, d: jnp.zeros(s, d)
+
+        def lam_init(key, shape, dtype):
+            # a in [0.9, 0.999]:  Λ = softplus^-1(-log(a)/c)
+            u = jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+            val = -jnp.log(u) / _C
+            return jnp.log(jnp.expm1(val)).astype(dtype)
+
+        return {
+            "w_rec": param((c.d_model, c.lru_width), ("embed", "mlp"), init=fi,
+                           dtype=c.dtype),
+            "w_gate_branch": param((c.d_model, c.lru_width), ("embed", "mlp"),
+                                   init=fi, dtype=c.dtype),
+            "conv_w": param((c.d_conv, c.lru_width), ("conv_k", "mlp"),
+                            init=fan_in_init((0,)), dtype=c.dtype),
+            "conv_b": param((c.lru_width,), ("mlp",), init=z, dtype=c.dtype),
+            "w_a": param((c.n_blocks, c.lru_width // c.n_blocks,
+                          c.lru_width // c.n_blocks), ("mlp", None, None),
+                         init=fan_in_init((1,)), dtype=c.dtype),
+            "b_a": param((c.lru_width,), ("mlp",), init=z, dtype=jnp.float32),
+            "w_x": param((c.n_blocks, c.lru_width // c.n_blocks,
+                          c.lru_width // c.n_blocks), ("mlp", None, None),
+                         init=fan_in_init((1,)), dtype=c.dtype),
+            "b_x": param((c.lru_width,), ("mlp",), init=z, dtype=jnp.float32),
+            "lam": param((c.lru_width,), ("mlp",), init=lam_init, dtype=jnp.float32),
+            "w_out": param((c.lru_width, c.d_model), ("mlp", "embed"), init=fi,
+                           dtype=c.dtype),
+        }
+
+    def _conv(self, params, x):
+        c = self.cfg
+        pad = jnp.pad(x, ((0, 0), (c.d_conv - 1, 0), (0, 0)))
+        out = sum(pad[:, i:i + x.shape[1], :] * params["conv_w"][i]
+                  for i in range(c.d_conv))
+        return out + params["conv_b"]
+
+    def _blockdiag(self, x, w):
+        c = self.cfg
+        nb = c.n_blocks
+        xs = x.reshape(*x.shape[:-1], nb, c.lru_width // nb)
+        y = jnp.einsum("...nw,nwv->...nv", xs, w)
+        return y.reshape(*x.shape)
+
+    def _gates(self, params, x):
+        r = jax.nn.sigmoid(self._blockdiag(x, params["w_a"]).astype(jnp.float32)
+                           + params["b_a"])
+        i = jax.nn.sigmoid(self._blockdiag(x, params["w_x"]).astype(jnp.float32)
+                           + params["b_x"])
+        log_a = -_C * jax.nn.softplus(params["lam"]) * r   # (B,S,W) fp32
+        a = jnp.exp(log_a)
+        gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * x.astype(jnp.float32)
+        return a, gated
+
+    def apply(self, params, u, ctx: ShardingCtx = NULL_CTX):
+        c = self.cfg
+        u = ctx.constrain(u, ("batch", None, "act_embed"))
+        x = u @ params["w_rec"]
+        x = ctx.constrain(x, ("batch", None, "act_mlp"))
+        x = self._conv(params, x)
+        a, gated = self._gates(params, x)
+
+        def assoc(p, q):
+            ap, hp = p
+            aq, hq = q
+            return ap * aq, hq + hp * aq
+
+        _, h = jax.lax.associative_scan(assoc, (a, gated), axis=1)
+        h = h.astype(u.dtype)
+        gate = jax.nn.gelu(u @ params["w_gate_branch"])
+        y = (h * gate) @ params["w_out"]
+        return ctx.constrain(y, ("batch", "seq", "act_embed"))
+
+    def cache_spec(self, batch: int, dtype=jnp.float32):
+        c = self.cfg
+        z = lambda k, s, d: jnp.zeros(s, d)
+        return {
+            "h": param((batch, c.lru_width), ("batch", "act_mlp"), init=z,
+                       dtype=dtype),
+            "conv": param((batch, c.d_conv - 1, c.lru_width),
+                          ("batch", None, "act_mlp"), init=z, dtype=dtype),
+        }
+
+    def decode(self, params, u, cache, pos, ctx: ShardingCtx = NULL_CTX):
+        c = self.cfg
+        x = (u @ params["w_rec"])[:, 0]  # (B, W)
+        conv_buf = jnp.concatenate(
+            [cache["conv"], x[:, None].astype(cache["conv"].dtype)], axis=1)
+        x = jnp.einsum("bkc,kc->bc", conv_buf.astype(u.dtype),
+                       params["conv_w"]) + params["conv_b"]
+        a, gated = self._gates(params, x[:, None])
+        h = a[:, 0] * cache["h"] + gated[:, 0]
+        gate = jax.nn.gelu(u @ params["w_gate_branch"])
+        y = (h.astype(u.dtype)[:, None] * gate) @ params["w_out"]
+        new_cache = {"h": h.astype(cache["h"].dtype), "conv": conv_buf[:, 1:]}
+        return ctx.constrain(y, ("batch", "seq", "act_embed")), new_cache

@@ -1,0 +1,31 @@
+"""Rotary position embeddings (RoPE), partial-dim capable (MLA-style)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(dim: int, base: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies for a (possibly partial) rotary dim."""
+    if dim % 2:
+        raise ValueError(f"rotary dim must be even, got {dim}")
+    return 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, base: float = 10000.0,
+               rot_dim: int | None = None) -> jnp.ndarray:
+    """Rotate the first ``rot_dim`` features of ``x``.
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    Uses the split-half convention (first half/second half pairs), matching
+    Llama/Qwen reference implementations.
+    """
+    head_dim = x.shape[-1]
+    rot = rot_dim or head_dim
+    inv_freq = rope_frequencies(rot, base)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, rot/2)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)

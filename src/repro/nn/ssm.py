@@ -1,0 +1,262 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Chunked SSD algorithm [arXiv:2405.21060]: within a chunk the output is a
+masked (decay-weighted) attention-like quadratic form; across chunks a linear
+recurrence on the (heads, head_dim, state) tensor, evaluated with
+``lax.associative_scan``. The recurrence runs along *seq*, which is why
+sequence (paper: spatial) parallelism is inapplicable to this family
+(DESIGN.md §Arch-applicability); heads/d_inner shard like paper filters.
+
+The input projection is kept as separate z/x/B/C/dt matrices (mathematically
+identical to the fused in_proj of the reference implementation) so that
+filter-parallelism shards d_inner cleanly without slicing across shard
+boundaries of a fused output dim.
+
+Decode keeps O(1) state: (B, H, P, N) SSM state + (B, d_conv-1, ·) conv
+tails — the reason ``long_500k`` is feasible for this arch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import RMSNorm
+from .module import NULL_CTX, ShardingCtx, fan_in_init, param
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64          # P
+    expand: int = 2
+    d_conv: int = 4
+    n_groups: int = 1
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+    dtype: Any = None
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def bc_dim(self) -> int:
+        return self.n_groups * self.d_state
+
+
+@dataclass(frozen=True)
+class SSDBlock:
+    cfg: SSMConfig
+
+    def params_spec(self):
+        c = self.cfg
+        fi = fan_in_init((0,))
+        z = lambda k, s, d: jnp.zeros(s, d)
+
+        def dt_bias_init(key, shape, dtype):
+            u = jax.random.uniform(key, shape, jnp.float32)
+            dt = jnp.exp(u * (np.log(c.dt_max) - np.log(c.dt_min)) + np.log(c.dt_min))
+            return jnp.log(jnp.expm1(dt)).astype(dtype)  # inverse softplus
+
+        def a_log_init(key, shape, dtype):
+            return jnp.log(jnp.arange(1, shape[0] + 1, dtype=jnp.float32)).astype(dtype)
+
+        return {
+            "w_z": param((c.d_model, c.d_inner), ("embed", "mlp"), init=fi,
+                         dtype=c.dtype),
+            "w_x": param((c.d_model, c.d_inner), ("embed", "mlp"), init=fi,
+                         dtype=c.dtype),
+            "w_B": param((c.d_model, c.bc_dim), ("embed", "state"), init=fi,
+                         dtype=c.dtype),
+            "w_C": param((c.d_model, c.bc_dim), ("embed", "state"), init=fi,
+                         dtype=c.dtype),
+            "w_dt": param((c.d_model, c.n_heads), ("embed", "heads"), init=fi,
+                          dtype=c.dtype),
+            "conv_x": param((c.d_conv, c.d_inner), ("conv_k", "mlp"),
+                            init=fan_in_init((0,)), dtype=c.dtype),
+            "conv_B": param((c.d_conv, c.bc_dim), ("conv_k", "state"),
+                            init=fan_in_init((0,)), dtype=c.dtype),
+            "conv_C": param((c.d_conv, c.bc_dim), ("conv_k", "state"),
+                            init=fan_in_init((0,)), dtype=c.dtype),
+            "conv_b_x": param((c.d_inner,), ("mlp",), init=z, dtype=c.dtype),
+            "conv_b_B": param((c.bc_dim,), ("state",), init=z, dtype=c.dtype),
+            "conv_b_C": param((c.bc_dim,), ("state",), init=z, dtype=c.dtype),
+            "dt_bias": param((c.n_heads,), ("heads",), init=dt_bias_init,
+                             dtype=jnp.float32),
+            "a_log": param((c.n_heads,), ("heads",), init=a_log_init,
+                           dtype=jnp.float32),
+            "d_skip": param((c.n_heads,), ("heads",),
+                            init=lambda k, s, d: jnp.ones(s, d), dtype=jnp.float32),
+            "norm": RMSNorm(c.d_inner, axis_name="mlp").params_spec(),
+            "out_proj": param((c.d_inner, c.d_model), ("mlp", "embed"), init=fi,
+                              dtype=c.dtype),
+        }
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _causal_conv(x, w, b, act=True):
+        """Depthwise causal conv along seq. x: (B, S, C); w: (K, C)."""
+        K = w.shape[0]
+        pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+        out = out + b
+        return jax.nn.silu(out) if act else out
+
+    def _ssd(self, x, dt, A, Bm, Cm, init_state=None):
+        """Chunked SSD. x:(B,S,H,P) dt:(B,S,H) A:(H,) Bm/Cm:(B,S,G,N).
+
+        Returns (y (B,S,H,P), final_state (B,H,P,N)).
+        """
+        c = self.cfg
+        B_, S, H, P = x.shape
+        G, N = Bm.shape[2], Bm.shape[3]
+        Q = min(c.chunk, S)
+        if S % Q:
+            raise ValueError(f"seq {S} must divide chunk {Q}")
+        nC = S // Q
+        rep = H // G
+        xc = x.reshape(B_, nC, Q, H, P)
+        dtc = dt.reshape(B_, nC, Q, H)
+        Bc = jnp.repeat(Bm.reshape(B_, nC, Q, G, N), rep, axis=3)
+        Cc = jnp.repeat(Cm.reshape(B_, nC, Q, G, N), rep, axis=3)
+        dA = dtc * A                      # (B,nC,Q,H) log-decay (A negative)
+        cum = jnp.cumsum(dA, axis=2)
+
+        # intra-chunk (quadratic, attention-like)
+        diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        Lmask = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)
+        y_intra = jnp.einsum("bcijh,bcjh,bcijh,bcjhp->bcihp",
+                             scores, dtc, Lmask, xc)
+
+        # chunk states
+        decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+        states = jnp.einsum("bcjh,bcjh,bcjhn,bcjhp->bchpn",
+                            decay_to_end, dtc, Bc, xc)
+
+        # inter-chunk recurrence (associative scan over chunk axis)
+        chunk_decay = jnp.exp(cum[:, :, -1, :])
+        dec = jnp.moveaxis(chunk_decay, 1, 0)
+        st = jnp.moveaxis(states, 1, 0)
+
+        def assoc(a, b):
+            da, sa = a
+            db, sb = b
+            return da * db, sb + sa * db[..., None, None]
+
+        dec_c, st_c = jax.lax.associative_scan(assoc, (dec, st), axis=0)
+        if init_state is not None:
+            st_c = st_c + dec_c[..., None, None] * init_state[None]
+        prev = jnp.concatenate([
+            (init_state[None] if init_state is not None
+             else jnp.zeros_like(st_c[:1])), st_c[:-1]], axis=0)
+        prev = jnp.moveaxis(prev, 0, 1)
+
+        in_decay = jnp.exp(cum)
+        y_inter = jnp.einsum("bcjh,bcjhn,bchpn->bcjhp", in_decay, Cc, prev)
+        y = (y_intra + y_inter).reshape(B_, S, H, P)
+        final = jnp.moveaxis(st_c, 0, 1)[:, -1]
+        return y, final
+
+    # ------------------------------------------------------------------
+    def _project(self, params, u, ctx):
+        c = self.cfg
+        u = ctx.constrain(u, ("batch", None, "act_embed"))
+        z = u @ params["w_z"]
+        x = u @ params["w_x"]
+        Bm = u @ params["w_B"]
+        Cm = u @ params["w_C"]
+        dt = u @ params["w_dt"]
+        z = ctx.constrain(z, ("batch", None, "act_mlp"))
+        x = ctx.constrain(x, ("batch", None, "act_mlp"))
+        return z, x, Bm, Cm, dt
+
+    def apply(self, params, u, ctx: ShardingCtx = NULL_CTX):
+        """u: (B, S, d_model) → (B, S, d_model)."""
+        c = self.cfg
+        B_, S, _ = u.shape
+        z, x, Bm, Cm, dt = self._project(params, u, ctx)
+        x = self._causal_conv(x, params["conv_x"], params["conv_b_x"])
+        Bm = self._causal_conv(Bm, params["conv_B"], params["conv_b_B"])
+        Cm = self._causal_conv(Cm, params["conv_C"], params["conv_b_C"])
+        x = x.reshape(B_, S, c.n_heads, c.head_dim)
+        x = ctx.constrain(x, ("batch", None, "act_heads", None))
+        Bm = Bm.reshape(B_, S, c.n_groups, c.d_state)
+        Cm = Cm.reshape(B_, S, c.n_groups, c.d_state)
+        dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+        A = -jnp.exp(params["a_log"])
+        y, _ = self._ssd(x.astype(jnp.float32), dtf, A, Bm.astype(jnp.float32),
+                         Cm.astype(jnp.float32))
+        y = y + x.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+        y = y.reshape(B_, S, c.d_inner).astype(u.dtype)
+        y = y * jax.nn.silu(z)
+        y = RMSNorm(c.d_inner, axis_name="mlp").apply(params["norm"], y)
+        y = y @ params["out_proj"]
+        return ctx.constrain(y, ("batch", "seq", "act_embed"))
+
+    # ------------------------------------------------------------------
+    def cache_spec(self, batch: int, dtype=jnp.float32):
+        c = self.cfg
+        z = lambda k, s, d: jnp.zeros(s, d)
+        return {
+            "state": param((batch, c.n_heads, c.head_dim, c.d_state),
+                           ("batch", "act_heads", None, "state"), init=z,
+                           dtype=dtype),
+            "conv_x": param((batch, c.d_conv - 1, c.d_inner),
+                            ("batch", None, "act_mlp"), init=z, dtype=dtype),
+            "conv_B": param((batch, c.d_conv - 1, c.bc_dim),
+                            ("batch", None, None), init=z, dtype=dtype),
+            "conv_C": param((batch, c.d_conv - 1, c.bc_dim),
+                            ("batch", None, None), init=z, dtype=dtype),
+        }
+
+    @staticmethod
+    def _conv_step(buf, new, w, b, act=True):
+        """One-token depthwise conv using the (K-1)-tail buffer."""
+        full = jnp.concatenate([buf, new[:, None].astype(buf.dtype)], axis=1)
+        out = jnp.einsum("bkc,kc->bc", full.astype(new.dtype), w) + b
+        out = jax.nn.silu(out) if act else out
+        return out, full[:, 1:]
+
+    def decode(self, params, u, cache, pos, ctx: ShardingCtx = NULL_CTX):
+        """Single-token recurrent step. u: (B, 1, d_model)."""
+        c = self.cfg
+        B_ = u.shape[0]
+        z, x, Bm, Cm, dt = self._project(params, u, ctx)
+        x, conv_x = self._conv_step(cache["conv_x"], x[:, 0], params["conv_x"],
+                                    params["conv_b_x"])
+        Bm, conv_B = self._conv_step(cache["conv_B"], Bm[:, 0], params["conv_B"],
+                                     params["conv_b_B"])
+        Cm, conv_C = self._conv_step(cache["conv_C"], Cm[:, 0], params["conv_C"],
+                                     params["conv_b_C"])
+        x = x.reshape(B_, c.n_heads, c.head_dim).astype(jnp.float32)
+        Bm = Bm.reshape(B_, c.n_groups, c.d_state).astype(jnp.float32)
+        Cm = Cm.reshape(B_, c.n_groups, c.d_state).astype(jnp.float32)
+        rep = c.n_heads // c.n_groups
+        Bh = jnp.repeat(Bm, rep, axis=1)
+        Ch = jnp.repeat(Cm, rep, axis=1)
+        dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+        A = -jnp.exp(params["a_log"])
+        dA = jnp.exp(dt1 * A)
+        state = cache["state"] * dA[:, :, None, None] + \
+            jnp.einsum("bh,bhn,bhp->bhpn", dt1, Bh, x)
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, state)
+        y = y + x * params["d_skip"][None, :, None]
+        y = y.reshape(B_, 1, c.d_inner).astype(u.dtype)
+        y = y * jax.nn.silu(z)
+        y = RMSNorm(c.d_inner, axis_name="mlp").apply(params["norm"], y)
+        y = y @ params["out_proj"]
+        new_cache = {"state": state.astype(cache["state"].dtype),
+                     "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}
+        return ctx.constrain(y, ("batch", "seq", "act_embed")), new_cache

@@ -1,0 +1,56 @@
+"""Gradient compression for the DP all-reduce (beyond-paper trick).
+
+int8 quantization with per-tensor scale and error feedback (residual carried
+to the next step — 1-bit-SGD lineage, paper ref [43] Seide et al.). Halves →
+quarters the GE wire bytes the oracle's data-parallel row charges; the
+EXPERIMENTS.md §Perf log quantifies the effect on the collective term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g, residual=None):
+    """→ (q int8, scale, new_residual). Error feedback keeps the quantization
+    noise from biasing the update."""
+    gf = g.astype(jnp.float32)
+    if residual is not None:
+        gf = gf + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_res = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_res
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_mean(tree, axis_name: str, residuals=None):
+    """psum of int8-compressed gradients over ``axis_name`` (inside shard_map).
+
+    Accumulates in int32 (no overflow below ~2^23 summands), then rescales.
+    Returns (mean_tree, residual_tree).
+    """
+    n = jax.lax.axis_size(axis_name)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+        # agree on one scale across ranks, THEN quantize: the int32 sum is
+        # exact, so the only error is the (error-fed-back) rounding step
+        gmax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+        scale = jnp.maximum(gmax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        res = gf - q.astype(jnp.float32) * scale
+        tot = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return (tot.astype(jnp.float32) * scale / n).astype(g.dtype), res
+
+    if residuals is None:
+        residuals = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+    out = jax.tree.map(one, tree, residuals)
+    mean = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return mean, res

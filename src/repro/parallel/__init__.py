@@ -1,0 +1,3 @@
+from .strategies import STRATEGIES, list_strategies, make_rules
+from .pipeline import gpipe, make_stage_fn, stack_stages
+from .halo import halo_exchange, spatial_conv2d

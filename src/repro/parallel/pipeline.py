@@ -1,0 +1,92 @@
+"""Layer (pipeline) parallelism — paper §3.4, GPipe schedule [17].
+
+``gpipe`` runs a stage function over ``n_stages`` mesh shards with the
+classic (p + S − 1)-step fill/drain schedule the paper's Table-3 "Layer" row
+models:
+
+    T_comp ≈ D(p+S−1)/S · (max FW_Gi + max BW_Gi)
+    T_comm ≈ 2D(p+S−2)/B · max(α + B/S·|y_Gi|·δβ)
+
+Implementation: ``shard_map`` over the stage axis; each rank owns one stage's
+parameters (leading stage dim sharded); microbatch activations hop stages via
+``collective_permute`` (the paper's P2P transfers). Differentiable (scan +
+permute), so the same schedule serves forward and backward.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def gpipe(stage_fn, stage_params, microbatches, mesh: Mesh, axis: str = "model"):
+    """Run a GPipe pipeline.
+
+    stage_fn(params_for_one_stage, x) -> y (same shape as x)
+    stage_params: pytree with leading dim n_stages (sharded over ``axis``)
+    microbatches: (S, mb, ...) array (replicated)
+    Returns: (S, mb, ...) outputs of the final stage (replicated).
+    """
+    n_stages = mesh.shape[axis]
+    S = microbatches.shape[0]
+    T = S + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def spmd(params_local, mbs):
+        idx = jax.lax.axis_index(axis)
+        params_one = jax.tree.map(lambda x: x[0], params_local)
+
+        def step(carry, t):
+            state = carry  # activation entering this rank at step t
+            # stage 0 ingests microbatch t (only meaningful while t < S)
+            mb_t = jax.lax.dynamic_index_in_dim(
+                mbs, jnp.clip(t, 0, S - 1), axis=0, keepdims=False)
+            inp = jnp.where(idx == 0, mb_t.astype(state.dtype), state)
+            out = stage_fn(params_one, inp)
+            # ship to the next stage; what the last stage computed is emitted
+            nxt = jax.lax.ppermute(out, axis, perm)
+            return nxt, out
+
+        state0 = jnp.zeros(microbatches.shape[1:], microbatches.dtype)
+        _, outs = jax.lax.scan(step, state0, jnp.arange(T))
+        # rank r computed microbatch (t - r) at step t; final stage results
+        # live at steps n_stages-1 … T-1
+        final = jax.lax.dynamic_slice_in_dim(outs, n_stages - 1, S, axis=0)
+        mine = jnp.where(idx == n_stages - 1, final, jnp.zeros_like(final))
+        return jax.lax.psum(mine, axis)
+
+    pspec_params = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(spmd, mesh=mesh,
+                       in_specs=(pspec_params, P()), out_specs=P(),
+                       check_vma=False)
+    return fn(stage_params, microbatches)
+
+
+def stack_stages(layer_params_stacked, n_stages: int):
+    """(L, ...) stacked layer params → (n_stages, L/n_stages, ...)."""
+
+    def reshape(x):
+        L = x.shape[0]
+        if L % n_stages:
+            raise ValueError(f"{L} layers do not divide {n_stages} stages")
+        return x.reshape(n_stages, L // n_stages, *x.shape[1:])
+
+    return jax.tree.map(reshape, layer_params_stacked)
+
+
+def make_stage_fn(block_apply):
+    """Stage = scan over the layers owned by this stage.
+
+    block_apply(one_layer_params, x) -> y
+    """
+
+    def stage_fn(stage_params, x):
+        def body(h, lp):
+            return block_apply(lp, h), None
+
+        y, _ = jax.lax.scan(body, x, stage_params)
+        return y
+
+    return stage_fn

@@ -1,0 +1,102 @@
+"""Step builders: train_step / prefill_step / decode_step as pure jittables.
+
+``make_train_step`` returns (step_fn, state_spec): the state spec is a
+ParamSpec tree usable for real initialization (tree_init), abstract dry-run
+lowering (tree_abstract) and checkpoint layout — one source of truth.
+
+Gradient accumulation (microbatching) is a first-class option: the global
+batch is split into ``accum`` microbatches scanned sequentially with gradient
+averaging — the paper's weak-scaling knob when memory binds before compute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.module import ParamSpec, ShardingCtx, param, tree_map_spec
+from ..optim.optimizers import OptimizerConfig, apply_update, state_spec
+
+
+def train_state_spec(model, opt: OptimizerConfig):
+    pspec = model.params_spec()
+    return {
+        "params": pspec,
+        "opt": state_spec(opt, pspec),
+        "step": param((), (), init=lambda k, s, d: jnp.zeros(s, d),
+                      dtype=jnp.int32),
+    }
+
+
+def make_train_step(model, opt: OptimizerConfig, ctx: ShardingCtx,
+                    accum: int = 1, **fwd_kw) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_of(params, batch):
+        loss, metrics = model.loss_fn(params, batch, ctx, **fwd_kw)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+                return (acc,), (l, m)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+            (gsum,), (ls, ms) = jax.lax.scan(micro, (zeros,), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = jnp.mean(ls)
+            metrics = jax.tree.map(jnp.mean, ms)
+        new_params, new_opt, om = apply_update(opt, params, grads,
+                                               state["opt"], state["step"])
+        metrics = dict(metrics, loss=loss, **om)
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, ctx: ShardingCtx, **kw) -> Callable:
+    """(params, batch, cache) -> (logits, cache). batch carries the prompt."""
+
+    def prefill_step(params, batch, cache):
+        if hasattr(model, "prefill"):
+            if "frames" in batch:  # enc-dec
+                _, cache = model.prefill(params, batch["frames"], cache, ctx, **kw)
+                return jnp.zeros((batch["frames"].shape[0], 1)), cache
+            if "patches" in batch:  # vlm
+                return model.prefill(params, batch, cache, ctx, **kw)
+            return model.prefill(params, batch["tokens"], cache, ctx, **kw)
+        raise TypeError(f"{type(model)} has no prefill")
+
+    return prefill_step
+
+
+def make_decode_step(model, ctx: ShardingCtx, **kw) -> Callable:
+    """(params, token, cache, pos) -> (logits, cache). One new token."""
+
+    def decode_step(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos, ctx, **kw)
+
+    return decode_step
+
+
+def make_eval_step(model, ctx: ShardingCtx, **fwd_kw) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss_fn(params, batch, ctx, **fwd_kw)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests must see the default single host device (the dry-run sets its own
+# XLA_FLAGS in a separate process); never leak a device-count override here.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

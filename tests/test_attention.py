@@ -1,0 +1,116 @@
+"""Attention units: flash == plain across shapes/masks; decode caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import (Attention, AttentionConfig, MLAttention, MLAConfig,
+                      flash_attention, plain_attention)
+from repro.nn.module import tree_init
+
+
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("unroll", [False, True])
+@pytest.mark.parametrize("qc,kc", [(16, 16), (32, 8), (64, 64)])
+def test_flash_equals_plain(key, window, unroll, qc, kc):
+    B, S, H, D = 2, 64, 4, 16
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D))
+    ref = plain_attention(q, k, v, causal=True, window=window)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          q_chunk=qc, kv_chunk=kc, unroll=unroll)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_softcap_and_noncausal(key):
+    B, S, H, D = 1, 32, 2, 8
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D))
+               for i in range(3))
+    for causal in (False, True):
+        ref = plain_attention(q, k, v, causal=causal, softcap=10.0)
+        out = flash_attention(q, k, v, causal=causal, softcap=10.0,
+                              q_chunk=8, kv_chunk=8)
+        np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+def test_flash_auto_chunk_non_divisible(key):
+    # whisper encoder: S=1500 does not divide 1024 — auto-fit must handle
+    B, S, H, D = 1, 30, 2, 8
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D))
+               for i in range(3))
+    out = flash_attention(q, k, v, causal=False, q_chunk=16, kv_chunk=16)
+    ref = plain_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("shards", [1, 4])
+def test_gqa_decode_matches_full(key, shards):
+    B, S = 2, 32
+    cfg = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                          qk_norm=True, use_bias=True)
+    att = Attention(cfg)
+    p = tree_init(att.params_spec(), key)
+    x = jax.random.normal(key, (B, S, 32))
+    full = att.apply(p, x, impl="plain")
+    cache = jax.tree.map(jnp.zeros_like,
+                         tree_init(att.cache_spec(B, S, shards=shards,
+                                                  dtype=jnp.float32), key))
+    outs = []
+    for t in range(S):
+        y, cache = att.decode(p, x[:, t:t + 1], cache, t)
+        outs.append(y)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_windowed_ring_buffer_decode(key):
+    B, S, W = 2, 64, 16
+    cfg = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+                          window=W)
+    att = Attention(cfg)
+    p = tree_init(att.params_spec(), key)
+    x = jax.random.normal(key, (B, S, 32))
+    full = att.apply(p, x, impl="plain")
+    cache = jax.tree.map(jnp.zeros_like,
+                         tree_init(att.cache_spec(B, W, shards=2,
+                                                  dtype=jnp.float32), key))
+    outs = []
+    for t in range(S):
+        y, cache = att.decode(p, x[:, t:t + 1], cache, t)
+        outs.append(y)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_decode_matches_full(key):
+    B, S = 2, 32
+    cfg = MLAConfig(d_model=64, n_heads=4, q_lora_rank=32, kv_lora_rank=16,
+                    qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)
+    mla = MLAttention(cfg)
+    p = tree_init(mla.params_spec(), key)
+    x = jax.random.normal(key, (B, S, 64))
+    full = mla.apply(p, x, impl="plain")
+    cache = jax.tree.map(jnp.zeros_like,
+                         tree_init(mla.cache_spec(B, S, dtype=jnp.float32), key))
+    outs = []
+    for t in range(S):
+        y, cache = mla.decode(p, x[:, t:t + 1], cache, t)
+        outs.append(y)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_cross_attention(key):
+    cfg = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+                          use_bias=True, out_bias=True, rope=False,
+                          causal=False)
+    att = Attention(cfg)
+    p = tree_init(att.params_spec(), key)
+    x = jax.random.normal(key, (2, 8, 32))
+    enc = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, 32))
+    k, v = att.kv(p, enc)
+    y1 = att.apply_cross(p, x, k, v, impl="plain")
+    y2 = att.apply_cross(p, x, k, v, impl="chunked", q_chunk=4, kv_chunk=4)
+    assert y1.shape == (2, 8, 32)
+    np.testing.assert_allclose(y1, y2, rtol=3e-5, atol=3e-5)

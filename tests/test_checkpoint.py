@@ -1,0 +1,57 @@
+"""Checkpointing: bit-exact restore, atomicity, retention, config guard."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointing import Checkpointer
+
+
+def _state(key):
+    return {"params": {"w": jax.random.normal(key, (4, 4)),
+                       "layers": [jnp.arange(3.0), jnp.arange(5.0)]},
+            "step": jnp.int32(7)}
+
+
+def test_save_restore_bit_exact(tmp_path, key):
+    ck = Checkpointer(tmp_path)
+    state = _state(key)
+    ck.save(state, 10)
+    restored, step = ck.restore(state)
+    assert step == 10
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 state, restored)
+
+
+def test_async_save(tmp_path, key):
+    ck = Checkpointer(tmp_path)
+    ck.save(_state(key), 5, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+def test_incomplete_checkpoint_ignored(tmp_path, key):
+    ck = Checkpointer(tmp_path)
+    ck.save(_state(key), 10)
+    # simulate a crash mid-write: directory without .complete marker
+    bad = tmp_path / "step_00000020"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{}")
+    assert ck.latest_step() == 10
+
+
+def test_retention_gc(tmp_path, key):
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(_state(key), s)
+    assert ck.completed_steps() == [3, 4]
+
+
+def test_config_tag_guard(tmp_path, key):
+    ck = Checkpointer(tmp_path, config_tag="modelA")
+    ck.save(_state(key), 1)
+    ck2 = Checkpointer(tmp_path, config_tag="modelB")
+    with pytest.raises(ValueError):
+        ck2.restore(_state(key))

@@ -1,0 +1,43 @@
+"""Multi-device behaviour (8 virtual host devices via subprocess)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HELPER = os.path.join(os.path.dirname(__file__), "helpers",
+                      "multidevice_checks.py")
+
+
+def run_check(name: str, timeout: int = 420):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, HELPER, name], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert "CHECK-PASSED" in out.stdout, \
+        f"{name} failed:\nstdout:{out.stdout[-2000:]}\nstderr:{out.stderr[-3000:]}"
+
+
+@pytest.mark.slow
+def test_pipeline_parallel():
+    run_check("pipeline")
+
+
+@pytest.mark.slow
+def test_halo_spatial_conv():
+    run_check("halo")
+
+
+@pytest.mark.slow
+def test_dp_tp_numerics_match_single_device():
+    run_check("dp_numerics")
+
+
+@pytest.mark.slow
+def test_oracle_validation_harness():
+    run_check("oracle_validation")
+
+
+@pytest.mark.slow
+def test_compressed_gradient_allreduce():
+    run_check("compressed_allreduce")

@@ -1,0 +1,68 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (attention_ref, conv2d_gemm, conv2d_ref,
+                           flash_attention, rmsnorm, rmsnorm_ref, ssd_chunk,
+                           ssd_ref)
+
+
+@pytest.mark.parametrize("S,D,bq,bk", [(128, 32, 32, 32), (256, 64, 64, 128),
+                                       (64, 16, 64, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(key, S, D, bq, bk, dtype, causal):
+    B, H = 2, 2
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, H, S, D)
+                                 ).astype(dtype) for i in range(3))
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("S,H,P,N,chunk", [(64, 4, 8, 16, 16),
+                                           (128, 2, 16, 8, 32)])
+def test_ssd_chunk_sweep(key, S, H, P, N, chunk):
+    B = 2
+    x = jax.random.normal(key, (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(key, 3), (B, S, H, N)) * 0.5
+    Cm = jax.random.normal(jax.random.fold_in(key, 4), (B, S, H, N)) * 0.5
+    y, st = ssd_chunk(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    yr, sr = ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(y, yr, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(st, sr, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("HW,C,F,k", [((16, 12), 32, 64, 3), ((8, 8), 16, 16, 1),
+                                      ((12, 16), 8, 128, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv2d_gemm_sweep(key, HW, C, F, k, dtype):
+    H, W = HW
+    x = jax.random.normal(key, (2, H, W, C)).astype(dtype)
+    w = (jax.random.normal(jax.random.fold_in(key, 1), (k, k, C, F)) * 0.1
+         ).astype(dtype)
+    out = conv2d_gemm(x, w, interpret=True)
+    ref = conv2d_ref(x, w)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(4, 37, 128), (2, 256), (1, 8, 8, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(key, shape, dtype):
+    x = jax.random.normal(key, shape).astype(dtype)
+    sc = jax.random.normal(jax.random.fold_in(key, 1), (shape[-1],))
+    out = rmsnorm(x, sc, interpret=True)
+    ref = rmsnorm_ref(x, sc)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), rtol=tol, atol=tol)
