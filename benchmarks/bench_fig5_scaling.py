@@ -1,14 +1,19 @@
 """Paper Fig. 5: spatial+data (ds) scaling for CosmoFlow.
 
-Oracle projection of ds vs pure-spatial speedup at p = 4 … 1024 on the
-paper's cluster model — the paper's 'perfect scaling' curve. Derived value =
-speedup of ds over pure spatial at equal p (paper's labels).
+One vectorized sweep (core/sweep.py) over p = 4 … 1024 projects ds at EVERY
+divisor factorization p1·p2 against pure spatial at equal p on the paper's
+cluster model — the paper's 'perfect scaling' curve. Derived values = best
+ds split, its speedup over spatial, and the engine's crossover point (the
+smallest p where ds overtakes spatial).
 """
 from __future__ import annotations
 
 import time
 
-from repro.core import OracleConfig, PAPER_V100_CLUSTER, TimeModel, project, stats_for
+import numpy as np
+
+from repro.core import OracleConfig, PAPER_V100_CLUSTER, TimeModel, stats_for
+from repro.core.sweep import sweep
 from repro.models.cnn import CosmoFlowConfig
 
 from .common import emit, note
@@ -18,23 +23,44 @@ def run():
     stats = stats_for(CosmoFlowConfig(img=128))
     tm = TimeModel(PAPER_V100_CLUSTER)
     rows = []
+    n_points = 0
+    t0 = time.perf_counter()
     for p in (4, 16, 64, 256, 1024):
-        B = max(p // 4, 4)  # weak scaling: 0.25 samples/GPU (paper §5.1)
+        B = max(p // 4, 4)    # weak scaling: 0.25 samples/GPU (paper §5.1)
         cfg = OracleConfig(B=B, D=1584)
-        t0 = time.perf_counter()
-        spatial = project("spatial", stats, tm, cfg, min(p, 64))
-        ds = project("ds", stats, tm, cfg, p, p1=max(p // 4, 1), p2=min(p, 4))
-        us = (time.perf_counter() - t0) * 1e6
-        speedup = spatial.total_s / ds.total_s if ds.total_s else 0.0
-        rows.append((f"fig5/cosmoflow/ds/p{p}", us,
-                     f"ds_iter_ms={ds.per_iteration()['total_s']*1e3:.2f};"
+        # spatial saturates at min spatial extent; compare at equal batch
+        p_sp = min(p, 64)
+        res = sweep(stats, tm, cfg, sorted({p_sp, p}),
+                    strategies=("spatial", "ds"),
+                    mem_cap=tm.system.mem_capacity)
+        n_points += len(res)
+        spatial = res.best_per_p("spatial", require_ok=False)
+        sp_of = {int(q): float(t) for q, t in zip(spatial.p, spatial.total_s)}
+        ds = res.best_per_p("ds", require_ok=False)
+        i = int(np.flatnonzero(ds.p == p)[0])
+        speedup = sp_of[p_sp] / float(ds.total_s[i]) if ds.total_s[i] else 0.0
+        it = max(float(ds.iterations[i]), 1.0)
+        rows.append((f"fig5/cosmoflow/ds/p{p}", 0.0,
+                     f"ds_iter_ms={float(ds.total_s[i])/it*1e3:.2f};"
+                     f"split={int(ds.p1[i])}x{int(ds.p2[i])};"
                      f"speedup_vs_spatial={speedup:.2f};"
-                     f"feasible={ds.feasible}"))
+                     f"feasible={bool(ds.feasible[i])};"
+                     f"bottleneck={ds.bottleneck[i]}"))
+    us = (time.perf_counter() - t0) * 1e6
+    rows = [(name, us / max(n_points, 1), derived) for name, _, derived in rows]
+    # crossover under one weak-scaling lattice (B varies with p per §5.1)
+    batch_of = lambda p: max(p // 4, 4)   # noqa: E731
+    wk = sweep(stats, tm, OracleConfig(B=batch_of(1024), D=1584),
+               (4, 16, 64, 256, 1024), strategies=("spatial", "ds"),
+               batch_for_p=batch_of, mem_cap=tm.system.mem_capacity)
+    rows.append(("fig5/cosmoflow/crossover_spatial_to_ds", us,
+                 f"p={wk.crossover('spatial', 'ds')};"
+                 f"lattice_points={n_points + len(wk)}"))
     return rows
 
 
 def main():
-    note("Fig 5 — CosmoFlow ds scaling (weak scaling, oracle projection)")
+    note("Fig 5 — CosmoFlow ds scaling (weak scaling, vectorized sweep)")
     emit(run())
 
 

@@ -1,0 +1,70 @@
+"""Sweep engine: vectorized lattice evaluation vs the scalar project() loop.
+
+Two lattices for ResNet-50 on the paper's cluster model:
+  * pow2  — p ∈ {1, 2, …, 1024}, the classic Fig-5 grid;
+  * dense — EVERY p ∈ 1..1024 with every divisor split (the search space the
+    pow2-only path silently dropped; ~27k points).
+Both are evaluated with one sweep() call and with the equivalent per-point
+project() loop. Acceptance floor: vectorized ≥ 10× faster.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (OracleConfig, PAPER_V100_CLUSTER, STRATEGY_NAMES,
+                        TimeModel, project, stats_for)
+from repro.core.sweep import sweep
+from repro.models.cnn import RESNET50
+
+from .common import emit, note
+
+GRIDS = {
+    "pow2": tuple(2 ** k for k in range(11)),
+    "dense": tuple(range(1, 1025)),
+}
+
+
+def _time_both(stats, tm, cfg, grid, reps):
+    cap = tm.system.mem_capacity
+    res = sweep(stats, tm, cfg, grid, mem_cap=cap)    # warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = sweep(stats, tm, cfg, grid, mem_cap=cap)
+    t_vec = (time.perf_counter() - t0) / reps
+
+    points = [(str(res.strategy[i]), int(res.p[i]), int(res.p1[i]),
+               int(res.p2[i])) for i in range(len(res))]
+    t0 = time.perf_counter()
+    for s, p, p1, p2 in points:                       # equivalent scalar loop
+        project(s, stats, tm, cfg, p, p1=p1, p2=p2)
+    t_scalar = time.perf_counter() - t0
+    return len(res), t_vec, t_scalar
+
+
+def run():
+    stats = stats_for(RESNET50)
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    cfg = OracleConfig(B=2048, D=1_281_167)
+    rows = []
+    for name, grid in GRIDS.items():
+        n, t_vec, t_scalar = _time_both(stats, tm, cfg, grid,
+                                        reps=5 if name == "pow2" else 2)
+        speedup = t_scalar / t_vec if t_vec else float("inf")
+        rows += [
+            (f"sweep/resnet50/{name}/vectorized", t_vec * 1e6,
+             f"points={n};strategies={len(STRATEGY_NAMES)}"),
+            (f"sweep/resnet50/{name}/scalar_loop", t_scalar * 1e6,
+             f"points={n}"),
+            (f"sweep/resnet50/{name}/speedup", 0.0,
+             f"x{speedup:.1f};target>=10x;pass={speedup >= 10.0}"),
+        ]
+    return rows
+
+
+def main():
+    note("Sweep engine — vectorized lattice vs scalar project() loop")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

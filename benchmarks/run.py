@@ -17,9 +17,10 @@ def main() -> None:
     from . import (bench_fig3_accuracy, bench_fig4_cosmoflow,
                    bench_fig5_scaling, bench_fig6_contention,
                    bench_fig7_weight_update, bench_fig8_filter_breakdown,
-                   bench_kernels, bench_roofline, bench_table3)
+                   bench_kernels, bench_roofline, bench_sweep, bench_table3)
     benches = [
         ("table3", bench_table3),
+        ("sweep", bench_sweep),
         ("fig3_accuracy", bench_fig3_accuracy),
         ("fig4_cosmoflow", bench_fig4_cosmoflow),
         ("fig5_scaling", bench_fig5_scaling),

@@ -1,13 +1,41 @@
-"""Regenerate the EXPERIMENTS.md roofline tables from dry-run artifacts.
+"""Regenerate EXPERIMENTS.md: dry-run roofline tables + oracle sweep tables.
+
+Two sections are (re)generated in place, each delimited by its own heading:
+  * "### Baseline cells" / "### Hillclimb" — from launch/dryrun JSON
+    artifacts in experiments/dryrun/ (empty tables when none exist yet),
+  * "### Oracle sweep" — projected straight from the vectorized sweep
+    engine (core/sweep.py): best strategy per scale for the paper's models,
+    with bottleneck classification and the data→df crossover point.
 
 Usage: PYTHONPATH=src python experiments/make_report.py
 """
 import json
 import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 
 HDR = ("| arch | shape | mesh | strategy | comp ms | mem ms | coll ms | dom |"
        " useful | frac | args GiB | temp GiB |\n"
        "|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+SWEEP_HDR = ("| model | p | strategy | p1×p2 | total ms/iter | mem GiB |"
+             " bottleneck |\n|---|---|---|---|---|---|---|")
+
+SKELETON = """# EXPERIMENTS
+
+Auto-generated tables — run `PYTHONPATH=src python experiments/make_report.py`.
+
+### Baseline cells (required matrix)
+
+### Hillclimb / variant cells (tagged)
+
+### Oracle sweep (vectorized strategy × scale projections)
+
+### Per-cell observations
+
+(hand-written notes go here; everything above the marker is regenerated)
+"""
 
 
 def row(r):
@@ -20,23 +48,77 @@ def row(r):
             f"{r['memory']['args_gib']:.1f} | {r['memory']['temp_gib']:.1f} |")
 
 
-def main():
-    here = pathlib.Path(__file__).parent
-    recs = [json.loads(f.read_text()) for f in sorted((here / "dryrun").glob("*.json"))]
+def dryrun_sections(here: pathlib.Path) -> tuple[str, int, int]:
+    recs = [json.loads(f.read_text())
+            for f in sorted((here / "dryrun").glob("*.json"))]
     base = [r for r in recs if not r.get("tag")]
     opt = [r for r in recs if r.get("tag")]
     out = ["### Baseline cells (required matrix)", "", HDR]
-    out += [row(r) for r in base]
+    out += [row(r) for r in base] or ["| _no dry-run artifacts yet_ |" + " |" * 11]
     out += ["", "### Hillclimb / variant cells (tagged)", "", HDR]
-    out += [row(r) for r in opt]
-    table = "\n".join(out)
+    out += [row(r) for r in opt] or ["| _no dry-run artifacts yet_ |" + " |" * 11]
+    return "\n".join(out), len(base), len(opt)
 
+
+def sweep_section() -> str:
+    from repro.core import OracleConfig, PAPER_V100_CLUSTER, TimeModel, stats_for
+    from repro.core.sweep import sweep
+    from repro.models.cnn import CosmoFlowConfig, RESNET50, VGGConfig
+
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    grid = [2 ** k for k in range(11)]
+    out = ["### Oracle sweep (vectorized strategy × scale projections)", "",
+           "Best deployable split per (model, p) on the paper's V100 "
+           "cluster model, weak scaling 2 samples/PE; from "
+           "`python -m repro.core.sweep`.", "", SWEEP_HDR]
+    models = {"resnet50": (RESNET50, 1_281_167),
+              "vgg16": (VGGConfig(), 1_281_167),
+              "cosmoflow": (CosmoFlowConfig(img=128), 1584)}
+    for name, (mc, D) in models.items():
+        stats = stats_for(mc)
+        batch_of = lambda p: max(2 * p, 4)            # noqa: E731
+        cfg = OracleConfig(B=batch_of(grid[-1]), D=max(D, batch_of(grid[-1])))
+        res = sweep(stats, tm, cfg, grid, batch_for_p=batch_of,
+                    mem_cap=tm.system.mem_capacity)
+        best = res.best_per_p()
+        for p in grid:
+            sub = best.select(best.p == p)
+            if not len(sub):
+                continue
+            i = int(sub.total_s.argmin())
+            it = max(float(sub.iterations[i]), 1.0)
+            out.append(f"| {name} | {p} | {sub.strategy[i]} | "
+                       f"{int(sub.p1[i])}×{int(sub.p2[i])} | "
+                       f"{float(sub.total_s[i])/it*1e3:,.2f} | "
+                       f"{float(sub.mem_bytes[i])/2**30:.2f} | "
+                       f"{sub.bottleneck[i]} |")
+        x = res.crossover("data", "df")
+        out.append(f"\ndata→df crossover for {name}: "
+                   f"{'p=%d' % x if x else 'not on this grid'}\n")
+    return "\n".join(out)
+
+
+def replace_between(text: str, start_marker: str, end_marker: str,
+                    new: str) -> str:
+    start = text.index(start_marker)
+    end = text.index(end_marker)
+    return text[:start] + new + "\n\n" + text[end:]
+
+
+def main():
+    here = pathlib.Path(__file__).parent
     exp = here.parent / "EXPERIMENTS.md"
+    if not exp.exists():
+        exp.write_text(SKELETON)
     t = exp.read_text()
-    start = t.index("### Baseline cells (required matrix)")
-    end = t.index("\n### Per-cell observations")
-    exp.write_text(t[:start] + table + t[end:])
-    print(f"refreshed: {len(base)} baseline + {len(opt)} variant cells")
+    dry, n_base, n_opt = dryrun_sections(here)
+    t = replace_between(t, "### Baseline cells",
+                        "### Oracle sweep", dry)
+    t = replace_between(t, "### Oracle sweep",
+                        "### Per-cell observations", sweep_section())
+    exp.write_text(t)
+    print(f"refreshed: {n_base} baseline + {n_opt} variant dry-run cells "
+          f"+ oracle sweep tables")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Single gate for code and docs PRs: tier-1 tests + sweep smoke + lint.
+# Usage: scripts/check.sh  (from anywhere; cd's to the repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== oracle sweep smoke =="
+python -m repro.core.sweep --smoke
+
+echo "== docs references =="
+# every DESIGN.md reference in src/ must have a DESIGN.md to resolve into
+if grep -rqn "DESIGN.md" src/ && [ ! -f DESIGN.md ]; then
+    echo "src/ references DESIGN.md but it does not exist" >&2
+    exit 1
+fi
+
+if command -v ruff >/dev/null 2>&1; then
+    echo "== ruff =="
+    ruff check src tests benchmarks examples experiments
+else
+    echo "== ruff not installed; skipping lint =="
+fi
+
+echo "OK"

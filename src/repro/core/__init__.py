@@ -1,16 +1,18 @@
 """ParaDL core — the paper's primary contribution in JAX.
 
-oracle.py (Table-3 projections), advisor.py (strategy selection),
-hardware.py (α–β system models), layer_stats.py (Table-2 tensor stats),
-calibration.py (§4.4 empirical parametrization), validation.py (Fig-3
-accuracy harness), hlo_analysis.py + roofline.py (dry-run cost extraction —
-beyond-paper, TPU-native).
+oracle.py (Table-3 projections), sweep.py (vectorized strategy × scale
+lattice engine), advisor.py (strategy selection), hardware.py (α–β system
+models), layer_stats.py (Table-2 tensor stats), calibration.py (§4.4
+empirical parametrization), validation.py (Fig-3 accuracy harness),
+hlo_analysis.py + roofline.py (dry-run cost extraction — beyond-paper,
+TPU-native).
 """
 from .hardware import (Level, PAPER_V100_CLUSTER, SystemModel, TPU_V5E_POD,
                        cpu_host_model)
 from .layer_stats import LayerStat, stats_for
-from .oracle import (OracleConfig, Projection, STRATEGY_NAMES, TimeModel,
-                     project, project_all)
+from .oracle import (OracleConfig, Projection, STRATEGY_NAMES, StatTable,
+                     TimeModel, precompute, project, project_all)
+from .sweep import SweepResult, factor_pairs, parse_p_grid, sweep
 from .advisor import Recommendation, advise, breakdown_table
 from .roofline import V5E, HardwareSpec, Roofline, roofline
 from .hlo_analysis import CellCost, Collective, combine, cost_of, parse_collectives

@@ -1,9 +1,10 @@
 """Strategy advisor — the oracle front-end (paper §4.1 use case 1).
 
-Given (model stats, system, batch, PE budget, memory cap), enumerate the
-strategies × group splits, drop infeasible points (scaling limits, memory),
-and rank the rest by projected per-iteration time. Also emits the breakdown
-table the paper's Fig. 3 plots.
+Given (model stats, system, batch, PE budget, memory cap), evaluate the
+strategies × group splits lattice with the vectorized sweep engine
+(sweep.py), drop infeasible points (scaling limits, memory), and rank the
+rest by projected per-iteration time. Also emits the breakdown table the
+paper's Fig. 3 plots.
 """
 from __future__ import annotations
 
@@ -11,7 +12,8 @@ from dataclasses import dataclass
 
 from .hardware import SystemModel
 from .layer_stats import LayerStat
-from .oracle import OracleConfig, Projection, TimeModel, project
+from .oracle import OracleConfig, Projection, TimeModel
+from .sweep import factor_pairs, sweep
 
 
 @dataclass
@@ -22,14 +24,9 @@ class Recommendation:
 
 
 def _split_candidates(p: int):
-    """Candidate (p1 data-groups, p2 model-width) factorizations."""
-    out = []
-    p1 = 1
-    while p1 <= p:
-        if p % p1 == 0:
-            out.append((p1, p // p1))
-        p1 *= 2
-    return out
+    """Candidate (p1 data-groups, p2 model-width) factorizations: ALL divisor
+    pairs of p (exhaustive — non-pow2 hybrid splits like 12 = 3×4 included)."""
+    return factor_pairs(p)
 
 
 def advise(stats: list[LayerStat], tm: TimeModel, cfg: OracleConfig, p: int,
@@ -37,24 +34,16 @@ def advise(stats: list[LayerStat], tm: TimeModel, cfg: OracleConfig, p: int,
            strategies=("data", "spatial", "pipeline", "filter", "channel",
                        "df", "ds", "ep")) -> Recommendation:
     mem_cap = mem_cap or tm.system.mem_capacity
+    res = sweep(stats, tm, cfg, [p], strategies, mem_cap=mem_cap)
     ranked, rejected = [], []
-    for s in strategies:
-        cands = [(None, None)]
-        if s in ("df", "ds", "ep"):
-            cands = _split_candidates(p)
-        for p1, p2 in cands:
-            try:
-                proj = project(s, stats, tm, cfg, p, p1=p1, p2=p2)
-            except ValueError:
-                continue
-            if not proj.feasible:
-                rejected.append((proj, f"scaling limit: {proj.limit}"))
-                continue
-            if proj.mem_bytes > mem_cap:
-                rejected.append(
-                    (proj, f"memory {proj.mem_bytes/2**30:.1f}GiB > "
-                           f"cap {mem_cap/2**30:.1f}GiB"))
-                continue
+    for i, proj in enumerate(res.to_projections()):
+        if not proj.feasible:
+            rejected.append((proj, f"scaling limit: {proj.limit}"))
+        elif not res.fits[i]:
+            rejected.append(
+                (proj, f"memory {proj.mem_bytes/2**30:.1f}GiB > "
+                       f"cap {mem_cap/2**30:.1f}GiB"))
+        else:
             ranked.append(proj)
     ranked.sort(key=lambda r: r.total_s)
     # keep only the best split per strategy in the headline ranking

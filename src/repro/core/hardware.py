@@ -11,6 +11,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 
 @dataclass(frozen=True)
 class Level:
@@ -59,6 +61,19 @@ class Level:
             return min(self.allreduce_tree(p, nbytes, phi=phi),
                        self.allreduce_ring(p, nbytes, phi))
         return self.allreduce_ring(p, nbytes, phi)
+
+    # -- vectorized variants (oracle sweep engine; p/nbytes may be arrays) --
+
+    def allreduce_v(self, p, nbytes, phi: float = 1.0, k: int = 4):
+        """``allreduce`` over numpy arrays of (p, nbytes); broadcasts."""
+        p = np.asarray(p, np.float64)
+        m = np.asarray(nbytes, np.float64)
+        safe_p = np.where(p > 0, p, 1.0)
+        ring = 2.0 * (p - 1) * (self.alpha + m / safe_p * self.beta * phi)
+        tree = 2.0 * (np.log2(np.where(p > 1, p, 2.0)) + k) * (
+            self.alpha + m / (2 * k) * self.beta * phi)
+        out = np.where(m < 65536, np.minimum(tree, ring), ring)
+        return np.where(p <= 1, 0.0, out)
 
 
 @dataclass(frozen=True)

@@ -11,10 +11,17 @@ Compute times FW_l/BW_l/WU_l come from either
   * projection mode — FLOPs / (peak × efficiency)   (TPU projections), or
   * calibrated mode — a measured per-layer table     (paper §4.4; used by the
     Fig-3 reproduction on host devices).
+
+Structure (see DESIGN.md §1–§2): per-layer quantities are precomputed ONCE
+into a dense ``StatTable`` (numpy arrays + the scalar reductions every
+Table-3 row consumes), and the Table-3 math itself lives in a single
+broadcast-capable evaluator ``_eval``. The per-point ``project()`` below is
+a thin wrapper over ``_eval`` at one (strategy, p, p1, p2); the vectorized
+sweep engine (sweep.py) calls the SAME evaluator with whole lattices of
+points, so scalar and vectorized results agree to machine precision.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -24,6 +31,9 @@ from .layer_stats import LayerStat
 
 STRATEGY_NAMES = ("serial", "data", "spatial", "pipeline", "filter", "channel",
                   "df", "ds", "ep")
+
+# layer kinds that expose a filter/channel split dimension (paper Table 2)
+SPLIT_KINDS = ("conv", "fc", "attn", "ffn", "moe", "ssm", "rec")
 
 
 @dataclass(frozen=True)
@@ -93,184 +103,289 @@ class OracleConfig:
     phi_hybrid: float = 2.0       # contention coefficient for df (paper §5.2)
     segments: int = 8             # pipeline micro-batch segments S
     zero1: bool = False           # shard WU across DP ranks ([52], §5.3.3)
-    # beyond-paper memory-model extensions (each documented in DESIGN.md):
+    # beyond-paper memory-model extensions (DESIGN.md §3):
     remat: bool = False           # activation checkpointing: keep |x_l| only
     zero3: bool = False           # params sharded over DP too (ZeRO-3 / [38])
     seq_parallel: bool = False    # residual stream sharded over model axis
     opt_bytes_per_param: float = 8.0  # adam m+v fp32
 
 
-def _sum_w(stats):   # total weight elements
-    return float(sum(s.w for s in stats))
+# ---------------------------------------------------------------------------
+# Precomputed per-layer tables (shared by project() and the sweep engine)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True, eq=False)
+class StatTable:
+    """Dense per-layer arrays + the scalar reductions the Table-3 formulas
+    consume. Built once per (stats, TimeModel) pair; every quantity here is
+    independent of (strategy, p, p1, p2, B)."""
+
+    n: int                       # layer count G
+    fw: np.ndarray               # per-layer forward seconds per sample
+    bw: np.ndarray
+    wu: np.ndarray               # per-layer weight-update seconds per iter
+    x: np.ndarray                # |x_l| elements per sample
+    y: np.ndarray
+    w: np.ndarray                # |w_l| elements
+    # scalar reductions
+    FW: float
+    BW: float
+    WU: float
+    W: float                     # total weight elements
+    x_sum: float
+    xy_sum: float                # Σ(|x_l| + |y_l|)
+    y_head_sum: float            # Σ_{l < G-1} |y_l| (FB collectives skip last)
+    y_max: float                 # pipeline stage-boundary bound
+    n_halo: int
+    halo_sum: float
+    sp_min: int                  # min spatial extent over conv/attn layers
+    any_recurrent: bool
+    minF: int | None             # over SPLIT_KINDS layers; None = no such layer
+    minC: int | None
+    n_moe: int
+    moe_y_sum: float
+    moe_minF: int | None         # experts bound for ep
 
 
-def _limits(stats, strategy):
+_TABLES: dict = {}
+
+
+def _tm_key(tm: TimeModel):
+    cal = tuple(sorted(tm.calibrated.items())) if tm.calibrated else None
+    return (tm.system, tm.wu_bytes_per_param, cal)
+
+
+def precompute(stats: list[LayerStat], tm: TimeModel) -> StatTable:
+    """Memoized dense-array build; key is pure content (stats are frozen)."""
+    key = (tuple(stats), _tm_key(tm))
+    tbl = _TABLES.get(key)
+    if tbl is None:
+        if len(_TABLES) > 64:
+            _TABLES.clear()
+        tbl = _build_table(stats, tm)
+        _TABLES[key] = tbl
+    return tbl
+
+
+def _build_table(stats, tm: TimeModel) -> StatTable:
+    fw = np.array([tm.fw(s) for s in stats], np.float64)
+    bw = np.array([tm.bw(s) for s in stats], np.float64)
+    wu = np.array([tm.wu(s) for s in stats], np.float64)
+    x = np.array([s.x for s in stats], np.float64)
+    y = np.array([s.y for s in stats], np.float64)
+    w = np.array([s.w for s in stats], np.float64)
+    halo = np.array([s.halo for s in stats], np.float64)
+    F = np.array([s.F for s in stats], np.int64)
+    C = np.array([s.C for s in stats], np.int64)
+    spatial = np.array([s.spatial for s in stats], np.int64)
+    split = np.array([s.kind in SPLIT_KINDS for s in stats], bool)
+    conv_attn = np.array([s.kind in ("conv", "attn") for s in stats], bool)
+    moe = np.array([s.kind == "moe" for s in stats], bool)
+    rec = np.array([s.seq_recurrent for s in stats], bool)
+    hm = halo > 0
+    sp_cand = spatial[conv_attn & (spatial > 1)]
+    return StatTable(
+        n=len(stats), fw=fw, bw=bw, wu=wu, x=x, y=y, w=w,
+        FW=float(np.sum(fw)), BW=float(np.sum(bw)), WU=float(np.sum(wu)),
+        W=float(np.sum(w)), x_sum=float(np.sum(x)),
+        xy_sum=float(np.sum(x + y)), y_head_sum=float(np.sum(y[:-1])),
+        y_max=float(y.max()) if len(y) else 0.0,
+        n_halo=int(hm.sum()), halo_sum=float(halo[hm].sum()),
+        sp_min=int(sp_cand.min()) if sp_cand.size else 1,
+        any_recurrent=bool(rec.any()),
+        minF=int(F[split].min()) if split.any() else None,
+        minC=int(C[split].min()) if split.any() else None,
+        n_moe=int(moe.sum()), moe_y_sum=float(y[moe].sum()),
+        moe_minF=int(F[moe].min()) if moe.any() else None)
+
+
+# ---------------------------------------------------------------------------
+# The Table-3 math, once, broadcast-capable
+# ---------------------------------------------------------------------------
+
+def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
+          p, p1, p2, p2_eff, B) -> dict:
+    """Evaluate one strategy's Table-3 row at (p, p1, p2, B).
+
+    Every argument may be a python scalar (per-point ``project()``) or a
+    numpy array of lattice points (sweep engine); all arithmetic broadcasts.
+    Returns per-epoch seconds/bytes arrays: comp, ge, fb, halo, p2p, mem,
+    feasible, iters.
+    """
+    delta, gamma = cfg.delta, cfg.gamma
+    D = cfg.D
+    p = np.asarray(p, np.float64)
+    p1 = np.asarray(p1, np.float64)
+    p2 = np.asarray(p2, np.float64)
+    p2_eff = np.asarray(p2_eff, np.float64)
+    B = np.asarray(B, np.float64)
+    shape = np.broadcast(p, p1, p2, B).shape
+    zeros = np.zeros(shape)
+    iters = D / B
+    lvl_model = sysm.level("model")
+    lvl_data = sysm.level("data")
+    FW, BW, WU = T.FW, T.BW, T.WU
+    Wbytes = T.W * delta
+
+    def mem(act_div=1.0, w_div=1.0, dp=1.0):
+        """Per-PE memory. Paper Table-3 expression, extended with remat/
+        ZeRO-3/seq-parallel switches and optimizer state (DESIGN.md §3)."""
+        act = B * (T.x_sum if cfg.remat else 2.0 * T.xy_sum) / act_div
+        if cfg.seq_parallel:
+            act = np.where(p2_eff > 1, act / p2_eff, act)
+        wdiv = w_div * (dp if cfg.zero3 else 1.0)
+        wmem = 2.0 * T.W / wdiv * delta              # params + grads
+        opt = T.W * cfg.opt_bytes_per_param / (
+            w_div * (dp if (cfg.zero1 or cfg.zero3) else 1.0))
+        return gamma * delta * act + wmem + opt
+
+    def halo_term(batch):
+        # Σ_{l: halo>0} 2·(2α + 2·batch·halo_l·δ·β), closed form
+        return iters * (4.0 * lvl_model.alpha * T.n_halo
+                        + 4.0 * batch * delta * lvl_model.beta * T.halo_sum)
+
+    def fb_term(width):
+        # Σ_{l < G-1} 3·(width−1)·(α + B·y_l·δ/p·β), closed form
+        return 3.0 * iters * (width - 1) * (
+            lvl_model.alpha * (T.n - 1)
+            + B * delta * lvl_model.beta / p * T.y_head_sum)
+
+    out = dict(comp=zeros, ge=zeros, fb=zeros, halo=zeros, p2p=zeros,
+               mem=zeros, feasible=np.ones(shape, bool), iters=iters + zeros)
+
+    if strategy == "serial":
+        out["comp"] = (D * (FW + BW) + iters * WU) + zeros
+        out["mem"] = mem() + zeros
+        return out
+
     if strategy == "data":
-        return "p <= B (micro-batch >= 1 sample)"
+        out["feasible"] = p <= B
+        out["comp"] = D / p * (FW + BW) + iters * (WU / p if cfg.zero1 else WU)
+        out["ge"] = iters * lvl_data.allreduce_v(p, Wbytes)
+        out["mem"] = mem(act_div=p, dp=p) + zeros
+        return out
+
     if strategy == "spatial":
-        return "p <= min spatial extent; inapplicable to recurrent-seq layers"
+        out["feasible"] = (p <= T.sp_min) & (not T.any_recurrent)
+        out["comp"] = D / p * (FW + BW) + iters * WU
+        out["ge"] = iters * lvl_data.allreduce_v(p, Wbytes)
+        out["halo"] = halo_term(B)
+        out["mem"] = mem(act_div=p) + zeros
+        return out
+
     if strategy == "pipeline":
-        return "p <= G layers"
-    if strategy == "filter":
-        return "p <= min F_l"
-    if strategy == "channel":
-        return "p <= min C_l"
+        S = cfg.segments
+        out["feasible"] = p <= T.n
+        # balanced grouping: max stage ≈ total/p (workload-balancing caveat
+        # recorded by the paper §5.3.3)
+        out["comp"] = D * (p + S - 1) / S * (FW / p + BW / p) + iters * (WU / p)
+        out["p2p"] = 2 * D * (p + S - 2) / B * (
+            lvl_model.alpha + B / S * T.y_max * delta * lvl_model.beta)
+        out["mem"] = gamma * delta * np.maximum(
+            (2.0 * B * T.xy_sum + 2.0 * T.W) / p, 1.0)
+        return out
+
+    if strategy in ("filter", "channel"):
+        lim = T.minF if strategy == "filter" else T.minC
+        if lim is None:
+            raise ValueError(f"{strategy}: no splittable layers")
+        out["feasible"] = p <= lim
+        out["comp"] = D / p * (FW + BW) + iters * WU / p
+        out["fb"] = fb_term(p)
+        out["mem"] = mem(w_div=p) + zeros
+        return out
+
+    if strategy == "df":
+        if T.minF is None:
+            raise ValueError("df: no splittable layers")
+        out["feasible"] = (p1 * p2 == p) & (p2 <= T.minF) & (p1 <= B)
+        out["comp"] = D / p * (FW + BW) + iters * (
+            WU / p if cfg.zero1 else WU / p2)
+        out["fb"] = fb_term(p2)
+        out["ge"] = iters * lvl_data.allreduce_v(p1, Wbytes / p2,
+                                                 phi=cfg.phi_hybrid)
+        out["mem"] = mem(act_div=p1, w_div=p2, dp=p1) + zeros
+        return out
+
+    if strategy == "ds":
+        out["feasible"] = ((p1 * p2 == p) & (p2 <= T.sp_min) & (p1 <= B)
+                           & (not T.any_recurrent))
+        out["comp"] = D / p * (FW + BW) + iters * (
+            WU / p if cfg.zero1 else WU)
+        out["halo"] = halo_term(B / p1)
+        out["ge"] = iters * lvl_data.allreduce_v(p, Wbytes, phi=cfg.phi_hybrid)
+        out["mem"] = mem(act_div=p, dp=p1) + zeros
+        return out
+
+    if strategy == "ep":  # beyond-paper: expert parallelism for MoE
+        if T.n_moe == 0:
+            out["feasible"] = np.zeros(shape, bool)
+            return out
+        out["feasible"] = (p2 <= T.moe_minF) & (p1 <= B)
+        out["comp"] = D / p * (FW + BW) + iters * WU / p
+        # two all-to-alls per MoE layer per direction (dispatch + combine):
+        # Σ_moe 4·alltoall(p2, B·y_l·δ/p1), closed form
+        out["fb"] = np.where(p2 > 1, 4.0 * iters * (p2 - 1) * (
+            lvl_model.alpha * T.n_moe
+            + B * delta * lvl_model.beta / (p1 * p2) * T.moe_y_sum), 0.0)
+        out["ge"] = iters * lvl_data.allreduce_v(p1, Wbytes / p2,
+                                                 phi=cfg.phi_hybrid)
+        out["mem"] = mem(act_div=p1, w_div=p2, dp=p1) + zeros
+        return out
+
+    raise ValueError(strategy)
+
+
+def _limit_str(strategy: str, T: StatTable, B, feasible: bool) -> str:
+    """Human-readable scaling-limit description (mirrors the paper's notes)."""
+    if strategy == "serial":
+        return "p = 1"
+    if strategy == "data":
+        return "p <= B" + ("" if feasible else f" violated (B={B})")
+    if strategy == "spatial":
+        return (f"p <= min spatial ({T.sp_min})"
+                + ("" if feasible else " or recurrent-seq violated"))
+    if strategy == "pipeline":
+        return f"p <= G ({T.n})"
+    if strategy in ("filter", "channel"):
+        lim = T.minF if strategy == "filter" else T.minC
+        return (f"p <= min {'F' if strategy == 'filter' else 'C'}_l ({lim})")
+    if strategy == "df":
+        return f"p = p1·p2 <= B·min F ({B}·{T.minF})"
+    if strategy == "ds":
+        return f"p2 <= min spatial ({T.sp_min}); recurrent-seq blocks"
+    if strategy == "ep":
+        return ("no MoE layers" if T.n_moe == 0
+                else f"p2 <= n_experts ({T.moe_minF})")
     return ""
 
 
 def project(strategy: str, stats: list[LayerStat], tm: TimeModel,
             cfg: OracleConfig, p: int, p1: int | None = None,
             p2: int | None = None) -> Projection:
-    """One Table-3 row evaluated at p PEs."""
-    sysm = tm.system
-    B, D, delta, gamma = cfg.B, cfg.D, cfg.delta, cfg.gamma
-    iters = D / B
-    lvl_model = sysm.level("model")
-    lvl_data = sysm.level("data")
-    FW = sum(tm.fw(s) for s in stats)
-    BW = sum(tm.bw(s) for s in stats)
-    WU = sum(tm.wu(s) for s in stats)
-    Wbytes = _sum_w(stats) * delta
-    bi = sum(getattr(s, "bias", 0) for s in stats)
-    feasible, limit = True, _limits(stats, strategy)
+    """One Table-3 row evaluated at p PEs (thin wrapper over ``_eval``)."""
+    T = precompute(stats, tm)
+    # p2_eff is derived from the CALLER's p2 (before hybrid defaulting), as
+    # the seq-parallel memory switch keys on an explicitly requested width.
     p2_eff = p2 or (p if strategy in ("filter", "channel", "spatial") else 1)
-
-    def mem(act_div=1.0, w_div=1.0, stats_subset=None, dp=1):
-        """Per-PE memory. Paper Table-3 expression, extended with remat/
-        ZeRO-3/seq-parallel switches and optimizer state (beyond-paper)."""
-        ss = stats_subset or stats
-        act = sum(B * (s.x if cfg.remat else 2 * (s.x + s.y)) / act_div
-                  for s in ss)
-        if cfg.seq_parallel and p2_eff > 1:
-            act /= p2_eff
-        wdiv = w_div * (dp if cfg.zero3 else 1)
-        w_elems = sum(s.w for s in ss)
-        wmem = 2 * w_elems / wdiv * delta           # params + grads
-        opt = w_elems * cfg.opt_bytes_per_param / (
-            w_div * (dp if (cfg.zero1 or cfg.zero3) else 1))
-        return gamma * delta * act + wmem + opt
-
+    if strategy in ("df", "ds", "ep"):
+        p1 = p1 or max(p // 16, 1)
+        p2 = p2 or p // p1
     if strategy == "serial":
-        return Projection("serial", 1, 1, 1, D * (FW + BW) + iters * WU,
-                          0, 0, 0, 0, mem(), True, "p = 1", iters)
-
-    if strategy == "data":
-        feasible = p <= B
-        comp = D / p * (FW + BW) + iters * WU
-        if cfg.zero1:
-            comp = D / p * (FW + BW) + iters * WU / p
-        ge = iters * lvl_data.allreduce(p, Wbytes)
-        return Projection("data", p, p, 1, comp, ge, 0, 0, 0,
-                          mem(act_div=p, dp=p), feasible,
-                          "p <= B" + ("" if feasible else f" violated (B={B})"),
-                          iters)
-
-    if strategy == "spatial":
-        sp_min = min((s.spatial for s in stats
-                      if s.kind in ("conv", "attn") and s.spatial > 1),
-                     default=1)
-        feasible = p <= sp_min and not any(s.seq_recurrent for s in stats)
-        comp = D / p * (FW + BW) + iters * WU
-        ge = iters * lvl_data.allreduce(p, Wbytes)
-        halo = iters * sum(
-            2 * (2 * lvl_model.alpha + 2 * B * s.halo * delta * lvl_model.beta)
-            for s in stats if s.halo)
-        return Projection("spatial", p, 1, p, comp, ge, 0, halo, 0,
-                          mem(act_div=p), feasible,
-                          f"p <= min spatial ({sp_min})"
-                          + ("" if feasible else " or recurrent-seq violated"),
-                          iters)
-
-    if strategy == "pipeline":
-        G = len(stats)
-        feasible = p <= G
-        S = cfg.segments
-        # balanced grouping: max stage ≈ total/p (workload-balancing caveat
-        # recorded by the paper §5.3.3)
-        fw_max = FW / p
-        bw_max = BW / p
-        wu_max = WU / p
-        comp = D * (p + S - 1) / S * (fw_max + bw_max) + iters * wu_max
-        bound_y = max((s.y for s in stats), default=0)
-        p2p = 2 * D * (p + S - 2) / B * (lvl_model.alpha
-                                         + B / S * bound_y * delta * lvl_model.beta)
-        m = gamma * delta * max(
-            sum(2 * B * (s.x + s.y) + 2 * s.w for s in stats) / p, 1.0)
-        return Projection("pipeline", p, 1, p, comp, 0, 0, 0, p2p, m,
-                          feasible, f"p <= G ({G})", iters)
-
-    if strategy in ("filter", "channel"):
-        lim = min((s.F if strategy == "filter" else s.C)
-                  for s in stats if s.kind in ("conv", "fc", "attn", "ffn",
-                                               "moe", "ssm", "rec"))
-        feasible = p <= lim
-        comp = D / p * (FW + BW) + iters * WU / p
-        fb = 3 * iters * sum(
-            (p - 1) * (lvl_model.alpha + B * s.y * delta / p * lvl_model.beta)
-            for s in stats[:-1])
-        return Projection(strategy, p, 1, p, comp, 0, fb, 0, 0,
-                          mem(w_div=p), feasible,
-                          f"p <= min {'F' if strategy == 'filter' else 'C'}_l "
-                          f"({lim})", iters)
-
-    if strategy == "df":
-        p1 = p1 or max(p // 16, 1)
-        p2 = p2 or p // p1
-        lim = min(s.F for s in stats if s.kind in ("conv", "fc", "attn", "ffn",
-                                                   "moe", "ssm", "rec"))
-        feasible = p1 * p2 == p and p2 <= lim and p1 <= B
-        comp = D / p * (FW + BW) + iters * WU / p2
-        if cfg.zero1:
-            comp = D / p * (FW + BW) + iters * WU / p
-        fb = 3 * iters * sum(
-            (p2 - 1) * (lvl_model.alpha + B * s.y * delta / p * lvl_model.beta)
-            for s in stats[:-1])
-        ge = iters * lvl_data.allreduce(p1, Wbytes / p2, phi=cfg.phi_hybrid)
-        return Projection("df", p, p1, p2, comp, ge, fb, 0, 0,
-                          mem(act_div=p1, w_div=p2, dp=p1),
-                          feasible, f"p = p1·p2 <= B·min F ({B}·{lim})", iters)
-
-    if strategy == "ds":
-        p1 = p1 or max(p // 16, 1)
-        p2 = p2 or p // p1
-        sp_min = min((s.spatial for s in stats
-                      if s.kind in ("conv", "attn") and s.spatial > 1),
-                     default=1)
-        feasible = p1 * p2 == p and p2 <= sp_min and p1 <= B and \
-            not any(s.seq_recurrent for s in stats)
-        comp = D / p * (FW + BW) + iters * WU
-        if cfg.zero1:
-            comp = D / p * (FW + BW) + iters * WU / p
-        halo = iters * sum(
-            2 * (2 * lvl_model.alpha
-                 + 2 * (B / p1) * s.halo * delta * lvl_model.beta)
-            for s in stats if s.halo)
-        ge = iters * lvl_data.allreduce(p, Wbytes, phi=cfg.phi_hybrid)
-        return Projection("ds", p, p1, p2, comp, ge, 0, halo, 0,
-                          mem(act_div=p, dp=p1), feasible,
-                          f"p2 <= min spatial ({sp_min}); recurrent-seq blocks",
-                          iters)
-
-    if strategy == "ep":  # beyond-paper: expert parallelism for MoE
-        p1 = p1 or max(p // 16, 1)
-        p2 = p2 or p // p1
-        moe_stats = [s for s in stats if s.kind == "moe"]
-        if not moe_stats:
-            return Projection("ep", p, p1, p2, 0, 0, 0, 0, 0, 0, False,
-                              "no MoE layers", iters)
-        lim = min(s.F for s in moe_stats)  # experts
-        feasible = p2 <= lim and p1 <= B
-        comp = D / p * (FW + BW) + iters * WU / p
-        # two all-to-alls per MoE layer per direction (dispatch + combine)
-        fb = 4 * iters * sum(
-            lvl_model.alltoall(p2, B * s.y * delta / p1)
-            for s in moe_stats)
-        ge = iters * lvl_data.allreduce(p1, Wbytes / p2, phi=cfg.phi_hybrid)
-        return Projection("ep", p, p1, p2, comp, ge, fb, 0, 0,
-                          mem(act_div=p1, w_div=p2, dp=p1),
-                          feasible, f"p2 <= n_experts ({lim})", iters)
-
-    raise ValueError(strategy)
+        p, rp1, rp2 = 1, 1, 1
+    elif strategy == "data":
+        rp1, rp2 = p, 1
+    elif strategy in ("spatial", "pipeline", "filter", "channel"):
+        rp1, rp2 = 1, p
+    else:
+        rp1, rp2 = p1, p2
+    r = _eval(T, strategy, cfg, tm.system, p, p1 or 1, p2 or 1, p2_eff, cfg.B)
+    feasible = bool(r["feasible"])
+    return Projection(strategy, int(p), int(rp1), int(rp2),
+                      float(r["comp"]), float(r["ge"]), float(r["fb"]),
+                      float(r["halo"]), float(r["p2p"]), float(r["mem"]),
+                      feasible, _limit_str(strategy, T, cfg.B, feasible),
+                      float(r["iters"]))
 
 
 def project_all(stats, tm: TimeModel, cfg: OracleConfig, p: int,

@@ -1,0 +1,438 @@
+"""Vectorized oracle sweep engine (DESIGN.md §2).
+
+Evaluates the Table-3 analytical model over an entire
+``strategy × p-grid × (p1·p2 factorization)`` lattice in one shot, as numpy
+array operations over the precomputed ``StatTable`` — instead of thousands
+of scalar ``project()`` calls. The math is the SAME broadcastable evaluator
+(oracle._eval) the per-point path uses, so vectorized and scalar results
+agree to machine precision.
+
+On top of the raw lattice, ``SweepResult`` provides:
+  * per-point feasibility + bottleneck classification (comp-bound, GE-bound,
+    FB-bound, halo-bound, p2p-bound, scale-/memory-infeasible),
+  * best-split reduction per (strategy, p),
+  * Pareto-frontier extraction over (p, time),
+  * crossover points — at which p does strategy B overtake strategy A?
+
+CLI (Fig-5-style scaling table):
+
+    PYTHONPATH=src python -m repro.core.sweep --model resnet50 --p 1..1024
+    PYTHONPATH=src python -m repro.core.sweep --model cosmoflow \
+        --p 4..1024 --batch-per-pe 0.25 --crossover spatial ds
+    PYTHONPATH=src python -m repro.core.sweep --smoke
+"""
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from ..hardware import (PAPER_V100_CLUSTER, SystemModel, TPU_V5E_POD,
+                       cpu_host_model)
+from ..oracle import (OracleConfig, Projection, STRATEGY_NAMES, StatTable,
+                     TimeModel, _eval, _limit_str, precompute)
+
+PURE_STRATEGIES = ("serial", "data", "spatial", "pipeline", "filter",
+                   "channel")
+HYBRID_STRATEGIES = ("df", "ds", "ep")
+
+_BOTTLENECK_OF_TERM = np.array(["comp-bound", "GE-bound", "FB-bound",
+                                "halo-bound", "p2p-bound"])
+
+
+def factor_pairs(p: int) -> list[tuple[int, int]]:
+    """ALL (p1, p2) with p1·p2 = p — exhaustive divisors, not just pow2."""
+    out = []
+    d = 1
+    while d * d <= p:
+        if p % d == 0:
+            out.append((d, p // d))
+            if d != p // d:
+                out.append((p // d, d))
+        d += 1
+    return sorted(out)
+
+
+def parse_p_grid(spec: str) -> list[int]:
+    """'1..1024' → powers of two in range; '1..64:8' → arithmetic step;
+    '4,6,12' → explicit list."""
+    ps: list[int] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if ".." in part:
+            rng, _, step = part.partition(":")
+            lo, hi = (int(v) for v in rng.split(".."))
+            if step:
+                ps.extend(range(lo, hi + 1, int(step)))
+            else:
+                q = 1
+                while q < lo:
+                    q *= 2
+                while q <= hi:
+                    ps.append(q)
+                    q *= 2
+        elif part:
+            ps.append(int(part))
+    return sorted(set(ps))
+
+
+@dataclass(eq=False)
+class SweepResult:
+    """Columnar table over the evaluated lattice (one row = one point)."""
+
+    strategy: np.ndarray         # str
+    p: np.ndarray                # int
+    p1: np.ndarray               # int
+    p2: np.ndarray               # int
+    B: np.ndarray                # int (per-point global batch; weak scaling)
+    iterations: np.ndarray
+    comp_s: np.ndarray           # per-epoch seconds, as in Projection
+    comm_ge_s: np.ndarray
+    comm_fb_s: np.ndarray
+    comm_halo_s: np.ndarray
+    comm_p2p_s: np.ndarray
+    mem_bytes: np.ndarray
+    feasible: np.ndarray         # bool — scaling limits hold
+    fits: np.ndarray             # bool — memory <= cap (True when no cap)
+    bottleneck: np.ndarray       # str classification per point
+    limit: np.ndarray            # str scaling-limit description per point
+    mem_cap: float | None = None
+
+    def __len__(self) -> int:
+        return len(self.p)
+
+    @property
+    def comm_s(self) -> np.ndarray:
+        return (self.comm_ge_s + self.comm_fb_s + self.comm_halo_s
+                + self.comm_p2p_s)
+
+    @property
+    def total_s(self) -> np.ndarray:
+        return self.comp_s + self.comm_s
+
+    @property
+    def ok(self) -> np.ndarray:
+        """Deployable points: scaling-feasible AND under the memory cap."""
+        return self.feasible & self.fits
+
+    # -- reductions ---------------------------------------------------------
+
+    def select(self, mask_or_idx) -> "SweepResult":
+        i = np.asarray(mask_or_idx)
+        return replace(
+            self, strategy=self.strategy[i], p=self.p[i], p1=self.p1[i],
+            p2=self.p2[i], B=self.B[i], iterations=self.iterations[i],
+            comp_s=self.comp_s[i], comm_ge_s=self.comm_ge_s[i],
+            comm_fb_s=self.comm_fb_s[i], comm_halo_s=self.comm_halo_s[i],
+            comm_p2p_s=self.comm_p2p_s[i], mem_bytes=self.mem_bytes[i],
+            feasible=self.feasible[i], fits=self.fits[i],
+            bottleneck=self.bottleneck[i], limit=self.limit[i])
+
+    def for_strategy(self, strategy: str) -> "SweepResult":
+        return self.select(self.strategy == strategy)
+
+    def best_per_p(self, strategy: str | None = None,
+                   require_ok: bool = True) -> "SweepResult":
+        """Fastest point per (strategy, p) — the best p1·p2 split. With
+        ``require_ok=False``, infeasible points are kept as fallbacks but a
+        deployable split always wins over a faster infeasible one. With
+        ``strategy`` given, one row per p for that strategy only."""
+        total = self.total_s
+        keep = self.ok if require_ok else np.ones(len(self), bool)
+        if strategy is not None:
+            keep &= self.strategy == strategy
+        rank = {}
+        for i in np.flatnonzero(keep):
+            k = (self.strategy[i], int(self.p[i]))
+            r = (not self.ok[i], total[i])
+            if k not in rank or r < rank[k][0]:
+                rank[k] = (r, i)
+        idx = np.array(sorted((i for _, i in rank.values()),
+                              key=lambda i: (self.strategy[i], self.p[i])),
+                       dtype=int)
+        return self.select(idx if idx.size else np.zeros(0, int))
+
+    def pareto(self) -> "SweepResult":
+        """Non-dominated deployable points over (p ↓, total_s ↓): a point
+        survives iff no other point is at most as big AND at most as slow."""
+        cand = self.best_per_p()
+        order = np.lexsort((cand.total_s, cand.p))
+        idx, best_t = [], np.inf
+        for i in order:
+            if cand.total_s[i] < best_t:
+                idx.append(i)
+                best_t = cand.total_s[i]
+        return cand.select(np.array(idx, int))
+
+    def crossover(self, base: str, challenger: str) -> int | None:
+        """Smallest p in the grid where ``challenger``'s best split is
+        strictly faster than ``base``'s (e.g. where df overtakes data)."""
+        a = self.best_per_p(base)
+        b = self.best_per_p(challenger)
+        ta = {int(p): t for p, t in zip(a.p, a.total_s)}
+        for p, t in sorted(zip(b.p, b.total_s)):
+            if int(p) in ta and t < ta[int(p)]:
+                return int(p)
+        return None
+
+    # -- interop / rendering ------------------------------------------------
+
+    def to_projections(self) -> list[Projection]:
+        """Rows as per-point ``Projection`` objects (advisor compatibility)."""
+        return [Projection(str(self.strategy[i]), int(self.p[i]),
+                           int(self.p1[i]), int(self.p2[i]),
+                           float(self.comp_s[i]), float(self.comm_ge_s[i]),
+                           float(self.comm_fb_s[i]), float(self.comm_halo_s[i]),
+                           float(self.comm_p2p_s[i]), float(self.mem_bytes[i]),
+                           bool(self.feasible[i]), str(self.limit[i]),
+                           float(self.iterations[i]))
+                for i in range(len(self))]
+
+    def table(self) -> str:
+        """Fig-5-style text table: best split per (p, strategy), with the
+        per-iteration breakdown and bottleneck classification."""
+        best = self.best_per_p(require_ok=False)
+        lines = [f"{'p':>6s} {'strategy':10s} {'p1xp2':>11s} {'B':>7s} "
+                 f"{'comp_ms':>10s} {'comm_ms':>10s} {'total_ms':>10s} "
+                 f"{'mem_GiB':>8s}  {'bottleneck':18s} {'limit'}"]
+        for p in sorted(set(int(v) for v in best.p)):
+            sub = best.select(best.p == p)
+            for i in np.argsort(np.where(sub.ok, sub.total_s, np.inf)):
+                it = max(float(sub.iterations[i]), 1.0)
+                mark = " " if sub.ok[i] else "!"
+                lines.append(
+                    f"{p:>6d} {sub.strategy[i]:10s} "
+                    f"{int(sub.p1[i]):>5d}x{int(sub.p2[i]):<5d} "
+                    f"{int(sub.B[i]):>7d} "
+                    f"{float(sub.comp_s[i])/it*1e3:>10.3f} "
+                    f"{float(sub.comm_s[i])/it*1e3:>10.3f} "
+                    f"{float(sub.total_s[i])/it*1e3:>10.3f} "
+                    f"{float(sub.mem_bytes[i])/2**30:>8.2f} {mark} "
+                    f"{sub.bottleneck[i]:18s} {sub.limit[i]}")
+        return "\n".join(lines)
+
+
+def _lattice(strategy: str, p_grid, batch_of) -> tuple | None:
+    """(p, p1, p2, B) integer arrays for one strategy's slice of the lattice."""
+    if strategy == "serial":
+        pts = [(1, 1, 1)] if 1 in p_grid else []
+    elif strategy == "data":
+        pts = [(p, p, 1) for p in p_grid]
+    elif strategy in PURE_STRATEGIES:
+        pts = [(p, 1, p) for p in p_grid]
+    else:
+        pts = [(p, a, b) for p in p_grid for a, b in factor_pairs(p)]
+    if not pts:
+        return None
+    arr = np.array(pts, np.int64)
+    B = np.array([batch_of(int(p)) for p in arr[:, 0]], np.int64)
+    return arr[:, 0], arr[:, 1], arr[:, 2], B
+
+
+def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
+          strategies=STRATEGY_NAMES, *, batch_for_p=None,
+          mem_cap: float | None = None) -> SweepResult:
+    """Evaluate the whole (strategy × p × p1·p2) lattice vectorized.
+
+    ``batch_for_p``: optional callable p → global batch B (weak scaling);
+    defaults to the constant ``cfg.B``. ``mem_cap``: per-PE bytes; points
+    over it are classified memory-infeasible (but still reported).
+    """
+    unknown = set(strategies) - set(STRATEGY_NAMES)
+    if unknown:
+        raise ValueError(f"unknown strategies {sorted(unknown)}; "
+                         f"known: {list(STRATEGY_NAMES)}")
+    T = precompute(stats, tm)
+    p_grid = sorted(set(int(p) for p in p_grid if int(p) >= 1))
+    batch_of = batch_for_p or (lambda p: cfg.B)
+    cols: dict[str, list] = {k: [] for k in
+                             ("strategy", "p", "p1", "p2", "B", "iters",
+                              "comp", "ge", "fb", "halo", "p2p", "mem",
+                              "feasible", "limit")}
+    for s in strategies:
+        lat = _lattice(s, p_grid, batch_of)
+        if lat is None:
+            continue
+        p, p1, p2, B = lat
+        p2_eff = p2 if s in HYBRID_STRATEGIES else (
+            p if s in ("filter", "channel", "spatial") else np.ones_like(p))
+        try:
+            r = _eval(T, s, cfg, tm.system, p, p1, p2, p2_eff, B)
+        except ValueError:      # strategy inapplicable to this layer set
+            continue
+        n = len(p)
+        bcast = (lambda v: np.broadcast_to(np.asarray(v, np.float64),
+                                           (n,)).copy())
+        cols["strategy"].append(np.full(n, s, dtype="U8"))
+        cols["p"].append(p)
+        cols["p1"].append(p1)
+        cols["p2"].append(p2)
+        cols["B"].append(B)
+        cols["iters"].append(bcast(r["iters"]))
+        for k in ("comp", "ge", "fb", "halo", "p2p", "mem"):
+            cols[k].append(bcast(r[k]))
+        feas = np.broadcast_to(np.asarray(r["feasible"], bool), (n,)).copy()
+        cols["feasible"].append(feas)
+        memo: dict = {}   # limit strings only vary with (B, feasible)
+
+        def limit_of(Bi: int, fi: bool) -> str:
+            k = (Bi, fi)
+            if k not in memo:
+                memo[k] = _limit_str(s, T, Bi, fi)
+            return memo[k]
+
+        cols["limit"].append(np.array(
+            [limit_of(int(Bi), bool(fi)) for Bi, fi in zip(B, feas)],
+            dtype=object))
+    if not cols["p"]:
+        e = np.zeros(0)
+        return SweepResult(np.zeros(0, "U8"), np.zeros(0, int),
+                           np.zeros(0, int), np.zeros(0, int),
+                           np.zeros(0, int), e, e, e, e, e, e, e,
+                           np.zeros(0, bool), np.zeros(0, bool),
+                           np.zeros(0, object), np.zeros(0, object), mem_cap)
+    cat = {k: np.concatenate(v) for k, v in cols.items()}
+    fits = (cat["mem"] <= mem_cap if mem_cap is not None
+            else np.ones(len(cat["p"]), bool))
+    terms = np.stack([cat["comp"], cat["ge"], cat["fb"], cat["halo"],
+                      cat["p2p"]])
+    bottleneck = _BOTTLENECK_OF_TERM[np.argmax(terms, axis=0)].astype(object)
+    bottleneck[~fits] = "memory-infeasible"
+    bottleneck[~cat["feasible"]] = "scale-infeasible"
+    return SweepResult(
+        strategy=cat["strategy"], p=cat["p"], p1=cat["p1"], p2=cat["p2"],
+        B=cat["B"], iterations=cat["iters"], comp_s=cat["comp"],
+        comm_ge_s=cat["ge"], comm_fb_s=cat["fb"], comm_halo_s=cat["halo"],
+        comm_p2p_s=cat["p2p"], mem_bytes=cat["mem"],
+        feasible=cat["feasible"], fits=fits, bottleneck=bottleneck,
+        limit=cat["limit"], mem_cap=mem_cap)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+_SYSTEMS = {"paper": PAPER_V100_CLUSTER, "tpu": TPU_V5E_POD,
+            "host": cpu_host_model()}
+_CNN_DATASETS = {"resnet50": 1_281_167, "vgg16": 1_281_167,
+                 "cosmoflow": 1584}
+
+
+def _model_stats(name: str, seq: int):
+    from ..layer_stats import stats_for
+    from ...models.cnn import RESNET50, CosmoFlowConfig, VGGConfig
+    cnn = {"resnet50": RESNET50, "vgg16": VGGConfig(),
+           "cosmoflow": CosmoFlowConfig(img=128)}
+    if name in cnn:
+        return stats_for(cnn[name]), _CNN_DATASETS[name]
+    from ...configs import get_config
+    return stats_for(get_config(name).model, seq), 100_000
+
+
+def _smoke() -> int:
+    """Tiny self-check for CI: lattice vs scalar project() parity."""
+    from ..oracle import project
+    from ...models.cnn import RESNET50
+    from ..layer_stats import stats_for
+    stats = stats_for(RESNET50)
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    cfg = OracleConfig(B=64, D=6400)
+    res = sweep(stats, tm, cfg, [1, 2, 4, 8, 12, 16], mem_cap=16e9)
+    worst = 0.0
+    for i in range(len(res)):
+        pr = project(str(res.strategy[i]), stats, tm, cfg, int(res.p[i]),
+                     p1=int(res.p1[i]), p2=int(res.p2[i]))
+        ref = pr.total_s
+        worst = max(worst, abs(res.total_s[i] - ref) / max(abs(ref), 1e-30))
+    assert worst < 1e-9, f"sweep/scalar mismatch: {worst:.2e}"
+    assert res.crossover("data", "df") is None or res.crossover("data", "df") > 0
+    print(f"sweep --smoke OK: {len(res)} lattice points, "
+          f"max rel err vs project() = {worst:.2e}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.sweep",
+        description="Vectorized oracle sweep: Fig-5-style strategy × scale "
+                    "table from the Table-3 analytical model.")
+    ap.add_argument("--model", default="resnet50",
+                    help="resnet50 | vgg16 | cosmoflow | any configs/ LM name")
+    ap.add_argument("--p", default="1..1024",
+                    help="p grid: '1..1024' (pow2), '4..64:4' (step), '4,6,12'")
+    ap.add_argument("--system", default="paper", choices=sorted(_SYSTEMS))
+    ap.add_argument("--batch", type=int, default=None,
+                    help="fixed global batch B (default: weak scaling)")
+    ap.add_argument("--batch-per-pe", type=float, default=2.0,
+                    help="weak scaling: B = max(round(b·p), 1)")
+    ap.add_argument("--dataset", type=int, default=None,
+                    help="samples per epoch D (default: per-model)")
+    ap.add_argument("--seq", type=int, default=4096, help="LM sequence length")
+    ap.add_argument("--mem-cap-gib", type=float, default=None,
+                    help="per-PE memory cap (default: system capacity)")
+    for flag in ("remat", "zero1", "zero3", "seq-parallel"):
+        ap.add_argument(f"--{flag}", action="store_true",
+                        help=f"memory-model switch (DESIGN.md §3)")
+    ap.add_argument("--strategies", default=",".join(STRATEGY_NAMES))
+    ap.add_argument("--crossover", nargs=2, metavar=("BASE", "CHALLENGER"),
+                    default=("data", "df"),
+                    help="report smallest p where CHALLENGER beats BASE")
+    ap.add_argument("--csv", action="store_true", help="raw per-point CSV")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny self-check sweep (CI gate)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return _smoke()
+
+    stats, default_D = _model_stats(args.model, args.seq)
+    tm = TimeModel(_SYSTEMS[args.system])
+    p_grid = parse_p_grid(args.p)
+    D = args.dataset or default_D
+    if args.batch is not None:
+        batch_of = lambda p: args.batch          # noqa: E731
+    else:
+        batch_of = lambda p: max(int(round(args.batch_per_pe * p)), 1)  # noqa: E731
+    cfg = OracleConfig(B=batch_of(max(p_grid)), D=max(D, batch_of(max(p_grid))),
+                       remat=args.remat, zero1=args.zero1, zero3=args.zero3,
+                       seq_parallel=args.seq_parallel)
+    cap = (args.mem_cap_gib * 2 ** 30 if args.mem_cap_gib
+           else tm.system.mem_capacity)
+    strategies = tuple(s for s in args.strategies.split(",") if s)
+    res = sweep(stats, tm, cfg, p_grid, strategies, batch_for_p=batch_of,
+                mem_cap=cap)
+
+    if args.csv:
+        print("strategy,p,p1,p2,B,comp_s,comm_ge_s,comm_fb_s,comm_halo_s,"
+              "comm_p2p_s,mem_bytes,feasible,fits,bottleneck")
+        for i in range(len(res)):
+            print(f"{res.strategy[i]},{res.p[i]},{res.p1[i]},{res.p2[i]},"
+                  f"{res.B[i]},{res.comp_s[i]:.9g},{res.comm_ge_s[i]:.9g},"
+                  f"{res.comm_fb_s[i]:.9g},{res.comm_halo_s[i]:.9g},"
+                  f"{res.comm_p2p_s[i]:.9g},{res.mem_bytes[i]:.9g},"
+                  f"{int(res.feasible[i])},{int(res.fits[i])},"
+                  f"{res.bottleneck[i]}")
+        return 0
+
+    print(f"# model={args.model} system={tm.system.name} "
+          f"D={cfg.D} mem_cap={cap/2**30:.1f}GiB "
+          f"B={'fixed %d' % args.batch if args.batch else 'weak %.3g/PE' % args.batch_per_pe}")
+    print(f"# lattice: {len(res)} points "
+          f"({len(p_grid)} p-values × strategies × exhaustive p1·p2 splits); "
+          f"'!' rows are infeasible at that p")
+    print(res.table())
+    base, chal = args.crossover
+    x = res.crossover(base, chal)
+    print(f"# crossover: {chal} overtakes {base} at p={x}" if x else
+          f"# crossover: {chal} never overtakes {base} on this grid")
+    front = res.pareto()
+    if len(front):
+        pts = ", ".join(f"p={int(p)}:{s}({int(a)}x{int(b)})"
+                        for p, s, a, b in zip(front.p, front.strategy,
+                                              front.p1, front.p2))
+        print(f"# pareto frontier (p vs time): {pts}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,7 +21,7 @@ from .calibration import calibrate_host_system, time_fn
 from .layer_stats import stats_for
 from .oracle import OracleConfig, TimeModel, project
 
-# oracle-strategy name → executable rules-table name
+# oracle-strategy name → executable rules-table name (parallel/strategies.py)
 EXEC_STRATEGY = {
     "data": "data",
     "filter": "filter",
@@ -29,6 +29,17 @@ EXEC_STRATEGY = {
     "spatial": "ds",
     "df": "df",
     "ds": "ds",
+    "ep": "ep_df",      # expert parallelism executes as the ep_df hybrid rules
+}
+
+# oracle strategies with NO executable rules table, and why (so validate()
+# skips them explicitly instead of falling through to an unknown name)
+EXEC_SKIP = {
+    "pipeline": "stage partitioning is a scheduling concern, not a sharding "
+                "rule — no GPipe executor in parallel/strategies.py "
+                "(DESIGN.md §Arch-applicability)",
+    "serial": "p=1 baseline needs no sharding rules; measure with a plain "
+              "jit step instead",
 }
 
 
@@ -49,7 +60,15 @@ class ValidationPoint:
 def measure_step(model, model_cfg, batch, mesh, strategy: str,
                  seed: int = 0) -> float:
     """Measured per-iteration time of a real sharded train step."""
-    rules = make_rules(EXEC_STRATEGY.get(strategy, strategy))
+    if strategy in EXEC_SKIP:
+        raise NotImplementedError(
+            f"oracle strategy {strategy!r} is not executable: "
+            f"{EXEC_SKIP[strategy]}")
+    if strategy not in EXEC_STRATEGY:
+        raise KeyError(f"no executable mapping for oracle strategy "
+                       f"{strategy!r}; known: {sorted(EXEC_STRATEGY)}, "
+                       f"skipped: {sorted(EXEC_SKIP)}")
+    rules = make_rules(EXEC_STRATEGY[strategy])
     ctx = ShardingCtx(mesh, rules)
     opt = OptimizerConfig(name="sgd", zero1=False)
     from ..models.transformer import TransformerLM
@@ -84,6 +103,8 @@ def validate(model, model_cfg, batch, mesh, strategies, *,
     tm = TimeModel(sysm)
     points = []
     for s in strategies:
+        if s in EXEC_SKIP:      # explicitly not executable; see EXEC_SKIP
+            continue
         meas = measure_step(model, model_cfg, batch, mesh, s)
         kw = {}
         if s in ("df", "ds", "ep"):

@@ -1,6 +1,6 @@
 """Implicit-GEMM conv2d Pallas kernel (the paper's CNN compute hot spot).
 
-Hardware adaptation (DESIGN.md): cuDNN's implicit GEMM tiles for SMs/shared
+Hardware adaptation (DESIGN.md §6): cuDNN's implicit GEMM tiles for SMs/shared
 memory; on TPU the conv is re-expressed as kh·kw shifted (H·W, C) × (C, F)
 matmuls accumulated in fp32 — each contraction feeds the 128×128 MXU, the
 image tile + filter block live in VMEM. Grid: (batch, F/BF). Input is

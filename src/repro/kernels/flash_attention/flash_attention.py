@@ -6,7 +6,7 @@ scratch. Block shapes are MXU-aligned (BQ×D, BK×D with D a multiple of 128
 for full MXU utilization on the TARGET TPU; interpret=True validates the
 same body on CPU).
 
-Hardware adaptation note (DESIGN.md): the CUDA flash kernel tiles for SRAM +
+Hardware adaptation note (DESIGN.md §6): the CUDA flash kernel tiles for SRAM +
 warps; here tiling is VMEM-sized (BQ·D + 2·BK·D + BQ·BK fp32 ≪ ~128 MiB)
 and the contraction shapes feed the 128×128 MXU.
 """

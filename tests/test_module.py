@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (not in image)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.nn.module import (Rules, param, spec_to_pspec, tree_abstract,
                              tree_init, tree_num_bytes, tree_num_params)

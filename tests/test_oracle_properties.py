@@ -1,7 +1,10 @@
 """Property-based tests of the oracle's invariants (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (not in image)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (OracleConfig, TimeModel, cpu_host_model, project,
                         stats_for)

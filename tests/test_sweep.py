@@ -1,0 +1,215 @@
+"""Vectorized sweep engine vs scalar project(): parity + golden behaviors.
+
+The acceptance bar (ISSUE 1): sweep() must match per-point project() within
+1e-9 relative on every (strategy, p ∈ {1,2,4,…,1024}, p1·p2 split) lattice
+point for a CNN and an LM config, plus golden tests for crossover-point and
+bottleneck classification.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (OracleConfig, PAPER_V100_CLUSTER, STRATEGY_NAMES,
+                        TimeModel, project, stats_for)
+from repro.core.advisor import _split_candidates, advise
+from repro.core.hardware import Level, SystemModel
+from repro.core.sweep import factor_pairs, parse_p_grid, sweep
+from repro.models.cnn import RESNET50, CosmoFlowConfig
+
+POW2_TO_1024 = [2 ** k for k in range(11)]
+NON_POW2 = [3, 6, 12, 48, 100]
+
+TM = TimeModel(PAPER_V100_CLUSTER)
+
+
+def _lm_stats():
+    """Small MoE LM (covers attn/ffn/moe kinds incl. the ep strategy)."""
+    import jax.numpy as jnp
+    from repro.models.transformer import LMConfig
+    from repro.nn.attention import AttentionConfig
+    from repro.nn.ffn import FFNConfig, MoEConfig
+    cfg = LMConfig(
+        name="sweep-test", vocab=512, d_model=128, n_layers=4,
+        pattern=("moe",),
+        attn=AttentionConfig(128, 4, 2, 32, dtype=jnp.float32),
+        ffn=FFNConfig(128, 256, dtype=jnp.float32),
+        moe=MoEConfig(128, 256, n_experts=8, top_k=2, dtype=jnp.float32))
+    return stats_for(cfg, S=256)
+
+
+CASES = {
+    "cnn": (lambda: stats_for(RESNET50), OracleConfig(B=2048, D=1_281_167)),
+    "lm": (_lm_stats, OracleConfig(B=256, D=25600, zero1=True, remat=True)),
+}
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_sweep_matches_scalar_project_everywhere(case):
+    mk_stats, cfg = CASES[case]
+    stats = mk_stats()
+    res = sweep(stats, TM, cfg, POW2_TO_1024 + NON_POW2,
+                mem_cap=TM.system.mem_capacity)
+    assert len(res) > 200   # exhaustive splits: more than pow2-only lattice
+    fields = ("comp_s", "comm_ge_s", "comm_fb_s", "comm_halo_s",
+              "comm_p2p_s", "mem_bytes")
+    for i in range(len(res)):
+        pr = project(str(res.strategy[i]), stats, TM, cfg, int(res.p[i]),
+                     p1=int(res.p1[i]), p2=int(res.p2[i]))
+        assert bool(res.feasible[i]) == pr.feasible, (case, i)
+        assert str(res.limit[i]) == pr.limit, (case, i)
+        for f in fields:
+            got = float(getattr(res, f)[i])
+            want = getattr(pr, f)
+            assert abs(got - want) <= 1e-9 * max(abs(want), 1e-30), \
+                (case, str(res.strategy[i]), int(res.p[i]), f, got, want)
+
+
+def test_sweep_covers_all_strategies_and_all_splits():
+    res = sweep(stats_for(RESNET50), TM, OracleConfig(B=2048, D=1_281_167),
+                [12])
+    # pure strategies once each (no serial at p>1), hybrids per divisor pair
+    assert set(res.strategy) == set(STRATEGY_NAMES) - {"serial"}
+    df = res.for_strategy("df")
+    assert sorted(zip(df.p1, df.p2)) == factor_pairs(12)
+
+
+def test_weak_scaling_batch_per_point():
+    res = sweep(stats_for(RESNET50), TM, OracleConfig(B=2048, D=1_281_167),
+                [4, 16], strategies=("data",), batch_for_p=lambda p: 2 * p)
+    assert list(res.B) == [8, 32]
+    # each point must equal project() under ITS batch
+    for i in range(len(res)):
+        cfg_i = OracleConfig(B=int(res.B[i]), D=1_281_167)
+        pr = project("data", stats_for(RESNET50), TM, cfg_i, int(res.p[i]))
+        assert np.isclose(float(res.total_s[i]), pr.total_s, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# golden: crossover + bottleneck classification
+# ---------------------------------------------------------------------------
+
+def test_crossover_data_to_df_resnet50_weak_scaling():
+    """Golden: under the paper's V100 model with 2 samples/PE weak scaling,
+    df's gradient-exchange advantage overtakes pure data at p = 512."""
+    batch_of = lambda p: max(2 * p, 4)   # noqa: E731
+    cfg = OracleConfig(B=batch_of(1024), D=1_281_167)
+    res = sweep(stats_for(RESNET50), TM, cfg, POW2_TO_1024,
+                batch_for_p=batch_of, mem_cap=TM.system.mem_capacity)
+    assert res.crossover("data", "df") == 512
+    # and data is strictly better before the crossover
+    best_data = res.best_per_p("data")
+    best_df = res.best_per_p("df")
+    t_data = {int(p): t for p, t in zip(best_data.p, best_data.total_s)}
+    t_df = {int(p): t for p, t in zip(best_df.p, best_df.total_s)}
+    assert t_data[64] < t_df[64]
+    assert t_df[1024] < t_data[1024]
+
+
+def test_bottleneck_classification():
+    stats = stats_for(RESNET50)
+    cfg = OracleConfig(B=2048, D=1_281_167)
+    res = sweep(stats, TM, cfg, [1, 64])     # no memory cap
+
+    def point(strategy, p):
+        sub = res.select((res.strategy == strategy) & (res.p == p))
+        return sub.bottleneck[0]
+
+    assert point("serial", 1) == "comp-bound"       # no comm at p=1
+    assert point("filter", 64) == "FB-bound"        # layer-wise collectives
+    assert point("data", 64) == "comp-bound"        # 32 samples/PE at B=2048
+    assert point("spatial", 64) == "scale-infeasible"   # p > min spatial 49
+    # a strategy that violates the memory cap is classified as such
+    tiny = sweep(stats, TM, cfg, [64], strategies=("filter",),
+                 mem_cap=1 * 2 ** 30)
+    assert tiny.bottleneck[0] == "memory-infeasible"
+    assert tiny.feasible[0] and not tiny.fits[0]
+
+
+def test_halo_bound_classification():
+    """Spatial on a fat-halo CNN with a slow model-level link is halo-bound."""
+    slow_model_link = SystemModel(
+        name="slow-halo", peak_flops=125e12, hbm_bw=900e9, mem_capacity=16e9,
+        compute_efficiency=0.35,
+        levels=(("model", Level("nv", alpha=5e-4, beta=1 / 0.05e9)),
+                ("data", Level("ib", alpha=15e-6, beta=1 / 12.5e9)),
+                ("pod", Level("ib2", alpha=25e-6, beta=1 / 4.2e9))))
+    res = sweep(stats_for(CosmoFlowConfig(img=128)), TimeModel(slow_model_link),
+                OracleConfig(B=64, D=1584), [16], strategies=("spatial",))
+    assert res.bottleneck[0] == "halo-bound"
+
+
+def test_pareto_frontier_strictly_improves():
+    batch_of = lambda p: max(2 * p, 4)   # noqa: E731
+    res = sweep(stats_for(RESNET50), TM,
+                OracleConfig(B=batch_of(1024), D=1_281_167), POW2_TO_1024,
+                batch_for_p=batch_of, mem_cap=TM.system.mem_capacity)
+    front = res.pareto()
+    assert len(front) >= 1
+    assert np.all(front.ok)
+    ps, ts = list(front.p), list(front.total_s)
+    assert ps == sorted(ps)
+    assert all(t2 < t1 for t1, t2 in zip(ts, ts[1:]))   # time strictly falls
+
+
+# ---------------------------------------------------------------------------
+# advisor + helpers
+# ---------------------------------------------------------------------------
+
+def test_split_candidates_exhaustive_divisors():
+    assert _split_candidates(12) == [(1, 12), (2, 6), (3, 4), (4, 3),
+                                     (6, 2), (12, 1)]
+    assert _split_candidates(7) == [(1, 7), (7, 1)]
+    assert (3, 4) in _split_candidates(12)     # non-pow2 p1 no longer skipped
+
+
+def test_advise_considers_non_pow2_splits():
+    """The old pow2-only _split_candidates silently skipped p1 ∉ {2^k}; the
+    sweep-backed advisor must find the true best df split over ALL divisors
+    of p — here the scalar-verified optimum has a non-pow2 p1."""
+    stats = stats_for(RESNET50)
+    cfg = OracleConfig(B=96, D=9600)
+    best = min((project("df", stats, TM, cfg, 48, p1=a, p2=b)
+                for a, b in factor_pairs(48)), key=lambda r: r.total_s)
+    assert best.p1 not in (1, 2, 4, 8, 16, 32)   # pow2-only would miss it
+    rec = advise(stats, TM, cfg, 48, mem_cap=64e9)
+    df = next(r for r in rec.ranked if r.strategy == "df")
+    assert (df.p1, df.p2) == (best.p1, best.p2)
+    assert np.isclose(df.total_s, best.total_s, rtol=1e-12)
+
+
+def test_advise_matches_scalar_ranking():
+    """The sweep-backed advisor still ranks by per-point project() totals."""
+    cfg = OracleConfig(B=2048, D=1_281_167)
+    rec = advise(stats_for(RESNET50), TM, cfg, 64)
+    assert rec.best is not None
+    totals = [r.total_s for r in rec.ranked]
+    assert totals == sorted(totals)
+    for r in rec.ranked:
+        pr = project(r.strategy, stats_for(RESNET50), TM, cfg, r.p,
+                     p1=r.p1, p2=r.p2)
+        assert np.isclose(r.total_s, pr.total_s, rtol=1e-12)
+
+
+def test_factor_pairs_and_parse_p_grid():
+    assert factor_pairs(1) == [(1, 1)]
+    assert factor_pairs(16) == [(1, 16), (2, 8), (4, 4), (8, 2), (16, 1)]
+    assert parse_p_grid("1..1024") == POW2_TO_1024
+    assert parse_p_grid("4..16:4") == [4, 8, 12, 16]
+    assert parse_p_grid("4,6,12,6") == [4, 6, 12]
+    assert parse_p_grid("2..8,100") == [2, 4, 8, 100]
+
+
+def test_to_projections_roundtrip():
+    res = sweep(stats_for(RESNET50), TM, OracleConfig(B=256, D=2560), [8])
+    projs = res.to_projections()
+    assert len(projs) == len(res)
+    for i, pr in enumerate(projs):
+        assert np.isclose(pr.total_s, float(res.total_s[i]), rtol=0)
+        assert pr.strategy == str(res.strategy[i])
+
+
+def test_cli_smoke_and_table(capsys):
+    from repro.core.sweep import main
+    assert main(["--smoke"]) == 0
+    assert main(["--model", "resnet50", "--p", "1,8", "--batch", "64"]) == 0
+    out = capsys.readouterr().out
+    assert "crossover" in out and "strategy" in out
