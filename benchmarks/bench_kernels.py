@@ -9,9 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import (attention_ref, conv2d_gemm, conv2d_ref,
-                           flash_attention, rmsnorm, rmsnorm_ref, ssd_chunk,
-                           ssd_ref)
+from repro.kernels import (attention_ref, conv2d_ref, rmsnorm_ref, ssd_chunk, ssd_ref)
 
 from .common import emit, note, timed
 

@@ -1,7 +1,6 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
-import sys
 import time
 
 

@@ -19,7 +19,7 @@ from repro.checkpoint.checkpointing import Checkpointer
 from repro.data.pipeline import DataConfig, ShardedLoader
 from repro.models import LMConfig, TransformerLM
 from repro.nn import AttentionConfig, FFNConfig
-from repro.nn.module import ShardingCtx, tree_init, tree_num_params
+from repro.nn.module import ShardingCtx, tree_init
 from repro.optim.optimizers import OptimizerConfig
 from repro.parallel.strategies import make_rules
 from repro.runtime.fault_tolerance import run_with_recovery

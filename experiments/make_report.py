@@ -1,11 +1,18 @@
-"""Regenerate EXPERIMENTS.md: dry-run roofline tables + oracle sweep tables.
+"""Regenerate EXPERIMENTS.md: dry-run roofline + oracle sweep/tuner tables.
 
-Two sections are (re)generated in place, each delimited by its own heading:
+Four sections are (re)generated in place, each delimited by its own heading:
   * "### Baseline cells" / "### Hillclimb" — from launch/dryrun JSON
     artifacts in experiments/dryrun/ (empty tables when none exist yet),
   * "### Oracle sweep" — projected straight from the vectorized sweep
     engine (core/sweep.py): best strategy per scale for the paper's models,
-    with bottleneck classification and the data→df crossover point.
+    with bottleneck classification and the data→df crossover point,
+  * "### Auto-tuner decisions" — what `strategy="auto"` deploys per
+    (model, p): the cheapest feasible (strategy, p1·p2, memory switches)
+    point from core/autotune.py, with the executable rules table,
+  * "### Oracle vs HLO cross-check" — every train-kind dry-run cell's
+    compiled-HLO roofline bound compared against the oracle projection for
+    the same (strategy, mesh); rows off by more than {TOL}× either way are
+    flagged instead of silently diverging.
 
 Usage: PYTHONPATH=src python experiments/make_report.py
 """
@@ -22,6 +29,17 @@ HDR = ("| arch | shape | mesh | strategy | comp ms | mem ms | coll ms | dom |"
 SWEEP_HDR = ("| model | p | strategy | p1×p2 | total ms/iter | mem GiB |"
              " bottleneck |\n|---|---|---|---|---|---|---|")
 
+TUNER_HDR = ("| model | p | strategy | p1×p2 | switches | exec rules |"
+             " ms/iter | mem GiB | bottleneck |\n"
+             "|---|---|---|---|---|---|---|---|---|")
+
+XCHECK_HDR = ("| arch | shape | mesh | strategy | HLO bound ms | oracle ms |"
+              " ratio | verdict |\n|---|---|---|---|---|---|---|---|")
+
+# oracle-vs-HLO tolerance: both are coarse bounds (no-overlap roofline vs
+# α–β analytical model), so only order-of-magnitude drift is flagged
+TOL = 3.0
+
 SKELETON = """# EXPERIMENTS
 
 Auto-generated tables — run `PYTHONPATH=src python experiments/make_report.py`.
@@ -31,6 +49,10 @@ Auto-generated tables — run `PYTHONPATH=src python experiments/make_report.py`
 ### Hillclimb / variant cells (tagged)
 
 ### Oracle sweep (vectorized strategy × scale projections)
+
+### Auto-tuner decisions (what strategy="auto" deploys)
+
+### Oracle vs HLO cross-check (dry-run cells)
 
 ### Per-cell observations
 
@@ -48,9 +70,12 @@ def row(r):
             f"{r['memory']['args_gib']:.1f} | {r['memory']['temp_gib']:.1f} |")
 
 
-def dryrun_sections(here: pathlib.Path) -> tuple[str, int, int]:
-    recs = [json.loads(f.read_text())
+def load_dryrun(here: pathlib.Path) -> list:
+    return [json.loads(f.read_text())
             for f in sorted((here / "dryrun").glob("*.json"))]
+
+
+def dryrun_sections(recs: list) -> tuple[str, int, int]:
     base = [r for r in recs if not r.get("tag")]
     opt = [r for r in recs if r.get("tag")]
     out = ["### Baseline cells (required matrix)", "", HDR]
@@ -98,11 +123,122 @@ def sweep_section() -> str:
     return "\n".join(out)
 
 
+def tuner_section() -> str:
+    """What ``strategy="auto"`` actually deploys, per (model, p)."""
+    from repro.configs import get_config
+    from repro.core import OracleConfig, PAPER_V100_CLUSTER, TimeModel, stats_for
+    from repro.core.autotune import autotune
+    from repro.models.cnn import CosmoFlowConfig, RESNET50, VGGConfig
+
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    out = ["### Auto-tuner decisions (what strategy=\"auto\" deploys)", "",
+           "Cheapest feasible (strategy, p1·p2 split, memory switches) per "
+           "(model, p) on the paper's V100 cluster model, weak scaling "
+           "2 samples/PE; ties go to the arch config's registered strategy. "
+           "From `python -m repro.core.autotune`.", "", TUNER_HDR]
+    models = {"resnet50": (RESNET50, 1_281_167),
+              "vgg16": (VGGConfig(), 1_281_167),
+              "cosmoflow": (CosmoFlowConfig(img=128), 1584)}
+    for name, (mc, D) in models.items():
+        stats = stats_for(mc)
+        fallback = get_config(name).strategy
+        for p in (8, 64, 512, 1024):
+            B = max(2 * p, 4)
+            # all three models are CNNs — their forwards can't checkpoint,
+            # so the table must never show a remat plan (deployable mask)
+            plan = autotune(stats, tm, OracleConfig(B=B, D=max(D, B)), p,
+                            mem_cap=tm.system.mem_capacity, fallback=fallback,
+                            allow_remat=False)
+            mark = "" if plan.feasible else " (fallback!)"
+            out.append(f"| {name} | {p} | {plan.strategy}{mark} | "
+                       f"{plan.p1}×{plan.p2} | {plan.switch_str()} | "
+                       f"`{plan.exec_strategy('train')}` | "
+                       f"{plan.per_iter_s * 1e3:,.2f} | "
+                       f"{plan.mem_bytes / 2**30:.2f} | {plan.bottleneck} |")
+    return "\n".join(out)
+
+
+def crosscheck_section(recs: list) -> str:
+    """Dry-run HLO roofline bound vs oracle projection for the same cell.
+
+    Flags per-mesh disagreements > {TOL}× either way so the two models can't
+    silently diverge (ROADMAP item 6).
+    """
+    from repro.configs import SHAPES, get_config
+    from repro.core import OracleConfig, TPU_V5E_POD, TimeModel, project
+    from repro.core.autotune import ORACLE_OF_EXEC, stats_for_model
+
+    out = ["### Oracle vs HLO cross-check (dry-run cells)", "",
+           f"Per train-kind dry-run cell: compiled-HLO no-overlap roofline "
+           f"bound vs the oracle's α–β projection for the same (strategy, "
+           f"mesh). Both are coarse bounds; rows off by > {TOL}× either way "
+           f"are flagged `⚠ mismatch`.", "", XCHECK_HDR]
+    rows, n_flagged = [], 0
+    for r in recs:
+        if r.get("kind") != "train":
+            continue
+        pl = r.get("plan") or {}
+        strat = pl.get("strategy") or ORACLE_OF_EXEC.get(r["strategy"])
+        if strat is None:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['strategy']} | — | — | — | no oracle mapping |")
+            continue
+        try:
+            cfg = get_config(r["arch"])
+            shape = SHAPES[r["shape"]]
+            dims = [int(x) for x in r["mesh"].removeprefix("pod").split("x")]
+            # trust the recorded plan's split only when the cell's mesh
+            # actually realized it; otherwise project for the built mesh
+            if pl.get("split_deployed"):
+                p2, p1 = int(pl["p2"]), int(pl["p1"])
+            else:
+                p2 = dims[-1]
+                p1 = max(r["chips"] // p2, 1)
+            stats = stats_for_model(cfg.model, shape.seq_len)
+            # project under the memory model the cell actually deployed:
+            # the recorded TunedPlan switches when the cell was auto-tuned,
+            # else what the rules-table name implies
+            ocfg = OracleConfig(
+                B=shape.global_batch, D=shape.global_batch,
+                remat=bool(pl.get("remat", False)),
+                zero1=bool(pl.get("zero1", "zero1" in r["strategy"])),
+                zero3=bool(pl.get("zero3", "zero3" in r["strategy"])),
+                seq_parallel=bool(pl.get("seq_parallel", False)))
+            proj = project(strat, stats, TimeModel(TPU_V5E_POD), ocfg,
+                           r["chips"], p1=p1, p2=p2)
+            oracle_s = proj.per_iteration()["total_s"]
+            hlo_s = r["roofline"]["step_time_bound_s"]
+            ratio = oracle_s / hlo_s if hlo_s else float("inf")
+            flagged = not (1.0 / TOL <= ratio <= TOL)
+            n_flagged += flagged
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['strategy']} | {hlo_s * 1e3:,.1f} | {oracle_s * 1e3:,.1f} | "
+                f"{ratio:.2f} | {'⚠ mismatch' if flagged else 'ok'} |")
+        except Exception as e:  # noqa: BLE001 — report the row, keep going
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['strategy']} | — | — | — | error: {e} |")
+    out += rows or ["| _no train-kind dry-run artifacts yet_ |" + " |" * 7]
+    if n_flagged:
+        out.append(f"\n**{n_flagged} cell(s) flagged** — oracle and HLO "
+                   f"disagree by more than {TOL}×; recalibrate or investigate.")
+    return "\n".join(out)
+
+
 def replace_between(text: str, start_marker: str, end_marker: str,
                     new: str) -> str:
     start = text.index(start_marker)
     end = text.index(end_marker)
     return text[:start] + new + "\n\n" + text[end:]
+
+
+def ensure_marker(text: str, marker: str, before: str) -> str:
+    """Insert an (empty) generated section heading if an older EXPERIMENTS.md
+    predates it, so replace_between always finds its delimiters."""
+    if marker in text:
+        return text
+    at = text.index(before)
+    return text[:at] + marker + "\n\n" + text[at:]
 
 
 def main():
@@ -111,14 +247,23 @@ def main():
     if not exp.exists():
         exp.write_text(SKELETON)
     t = exp.read_text()
-    dry, n_base, n_opt = dryrun_sections(here)
+    t = ensure_marker(t, "### Auto-tuner decisions",
+                      "### Per-cell observations")
+    t = ensure_marker(t, "### Oracle vs HLO cross-check",
+                      "### Per-cell observations")
+    recs = load_dryrun(here)
+    dry, n_base, n_opt = dryrun_sections(recs)
     t = replace_between(t, "### Baseline cells",
                         "### Oracle sweep", dry)
     t = replace_between(t, "### Oracle sweep",
-                        "### Per-cell observations", sweep_section())
+                        "### Auto-tuner decisions", sweep_section())
+    t = replace_between(t, "### Auto-tuner decisions",
+                        "### Oracle vs HLO cross-check", tuner_section())
+    t = replace_between(t, "### Oracle vs HLO cross-check",
+                        "### Per-cell observations", crosscheck_section(recs))
     exp.write_text(t)
     print(f"refreshed: {n_base} baseline + {n_opt} variant dry-run cells "
-          f"+ oracle sweep tables")
+          f"+ oracle sweep / auto-tuner / cross-check tables")
 
 
 if __name__ == "__main__":

@@ -6,11 +6,21 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== hygiene: no committed bytecode =="
+if git ls-files | grep -E '(^|/)__pycache__(/|$)|\.py[co]$' >/dev/null; then
+    echo "committed __pycache__/bytecode files found:" >&2
+    git ls-files | grep -E '(^|/)__pycache__(/|$)|\.py[co]$' >&2
+    exit 1
+fi
+
 echo "== tier-1 pytest =="
 python -m pytest -x -q
 
 echo "== oracle sweep smoke =="
 python -m repro.core.sweep --smoke
+
+echo "== auto-tuner smoke =="
+python -m repro.core.autotune --smoke
 
 echo "== docs references =="
 # every DESIGN.md reference in src/ must have a DESIGN.md to resolve into

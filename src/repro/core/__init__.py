@@ -12,7 +12,9 @@ from .hardware import (Level, PAPER_V100_CLUSTER, SystemModel, TPU_V5E_POD,
 from .layer_stats import LayerStat, stats_for
 from .oracle import (OracleConfig, Projection, STRATEGY_NAMES, StatTable,
                      TimeModel, precompute, project, project_all)
-from .sweep import SweepResult, factor_pairs, parse_p_grid, sweep
+from .sweep import (SweepResult, all_switch_combos, factor_pairs,
+                    parse_p_grid, sweep)
 from .advisor import Recommendation, advise, breakdown_table
+from .autotune import TunedPlan, autotune, plan_for_arch
 from .roofline import V5E, HardwareSpec, Roofline, roofline
 from .hlo_analysis import CellCost, Collective, combine, cost_of, parse_collectives

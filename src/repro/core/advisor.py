@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from .hardware import SystemModel
 from .layer_stats import LayerStat
 from .oracle import OracleConfig, Projection, TimeModel
 from .sweep import factor_pairs, sweep

@@ -1,0 +1,348 @@
+"""Oracle-in-the-loop auto-tuner (DESIGN.md §8).
+
+The sweep engine (sweep/) computes the full strategy × p1·p2 × memory-switch
+lattice; this module turns that into a *deployment decision*: given an
+arch × shape × device count, pick the cheapest point that fits memory and
+return it as a ``TunedPlan`` — strategy, mesh factorization, memory-model
+switches, and the projected bottleneck. ``launch/build.py:build_cell`` (and
+the train / serve / dryrun entry points) accept ``strategy="auto"`` and
+consume the plan, so the oracle is the decision-maker, not just a report.
+
+Ranking (cheapest-that-fits):
+  1. drop points that violate a scaling limit or the per-PE memory cap;
+  2. minimize projected step time;
+  3. on ties (within ``rtol``): prefer the config's fallback strategy if it
+     is among the tied winners, then the fewest memory switches on (each
+     switch has unmodeled runtime overhead), then the narrowest model
+     width p2, then name order — fully deterministic.
+If nothing fits, the fallback strategy's least-memory point is returned
+with ``feasible=False`` so callers can still proceed (and warn).
+
+CLI — "what should I run on p GPUs?":
+
+    PYTHONPATH=src python -m repro.core.autotune --model resnet50 --p 64
+    PYTHONPATH=src python -m repro.core.autotune --model cosmoflow \
+        --p 8,64,1024 --batch-per-pe 0.25
+    PYTHONPATH=src python -m repro.core.autotune --smoke
+"""
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..hardware import SystemModel, TPU_V5E_POD
+from ..oracle import OracleConfig, TimeModel
+from ..sweep import (HYBRID_STRATEGIES, SweepResult, parse_p_grid,
+                     switch_label, sweep)
+
+# oracle strategies with an executable rules table (parallel/strategies.py);
+# pipeline is analytically modeled but has no executor (DESIGN.md §4), so the
+# tuner never deploys it.
+DEPLOYABLE_STRATEGIES = ("serial", "data", "spatial", "filter", "channel",
+                         "df", "ds", "ep")
+
+# tie-break preference between equal-time strategies: fewest moving parts
+# first (no collectives < gradient exchange only < hybrids < layer-wise
+# collectives < expert all-to-alls)
+_PREF = {s: i for i, s in enumerate(
+    ("serial", "data", "ds", "df", "spatial", "filter", "channel", "ep",
+     "pipeline"))}
+
+# executable rules-table name → oracle strategy (for fallback tie-breaks on
+# arch configs, whose ``strategy`` fields name rules tables)
+ORACLE_OF_EXEC = {
+    "data": "data", "spatial": "spatial", "filter": "filter",
+    "channel": "channel", "df": "df", "df_zero1": "df", "df_zero3": "df",
+    "ds": "ds", "ep_df": "ep", "serve_tp": "df", "serve_seqkv": "ds",
+}
+
+
+@dataclass(frozen=True)
+class TunedPlan:
+    """One deployment decision: what to run on p PEs and how."""
+
+    strategy: str            # oracle strategy name (STRATEGY_NAMES)
+    p: int
+    p1: int                  # data-parallel groups
+    p2: int                  # model-parallel width
+    remat: bool
+    zero1: bool
+    zero3: bool
+    seq_parallel: bool
+    bottleneck: str          # sweep classification at the chosen point
+    total_s: float           # projected per-epoch seconds
+    iterations: float
+    mem_bytes: float
+    mem_cap: float | None
+    feasible: bool           # False → fallback plan, nothing fit
+    source: str              # "sweep" | "fallback"
+
+    @property
+    def switches(self) -> dict:
+        return {"remat": self.remat, "zero1": self.zero1,
+                "zero3": self.zero3, "seq_parallel": self.seq_parallel}
+
+    @property
+    def mesh_shape(self) -> tuple[int, int]:
+        """(data, model) mesh factorization to deploy."""
+        return (self.p1, self.p2)
+
+    @property
+    def per_iter_s(self) -> float:
+        return self.total_s / max(self.iterations, 1.0)
+
+    @property
+    def n_switches_on(self) -> int:
+        return sum(self.switches.values())
+
+    def switch_str(self) -> str:
+        return switch_label(self.remat, self.zero1, self.zero3,
+                            self.seq_parallel)
+
+    def exec_strategy(self, kind: str = "train") -> str:
+        """The executable rules-table name (parallel/strategies.py) that
+        deploys this plan for a train / prefill / decode cell."""
+        if kind in ("prefill", "decode"):
+            # serving: no ZeRO (latency-critical); expert plans keep ep rules
+            return "ep_df" if self.strategy == "ep" else "serve_tp"
+        table = {"serial": "data", "data": "data", "spatial": "ds",
+                 "filter": "filter", "channel": "channel", "ds": "ds",
+                 "ep": "ep_df"}
+        if self.strategy == "df":
+            if self.zero3:
+                return "df_zero3"
+            return "df_zero1" if self.zero1 else "df"
+        return table[self.strategy]
+
+    def describe(self) -> str:
+        cap = (f"{self.mem_cap / 2**30:.1f}" if self.mem_cap else "∞")
+        return (f"TunedPlan[p={self.p}]: {self.strategy} "
+                f"(mesh {self.p1}x{self.p2}, switches {self.switch_str()}) "
+                f"→ {self.per_iter_s * 1e3:.2f} ms/iter, "
+                f"{self.mem_bytes / 2**30:.2f}/{cap} GiB, "
+                f"{self.bottleneck}"
+                + ("" if self.feasible else "  [FALLBACK: nothing fits]"))
+
+
+def _plan_of(res: SweepResult, i: int, mem_cap, feasible: bool,
+             source: str) -> TunedPlan:
+    return TunedPlan(
+        strategy=str(res.strategy[i]), p=int(res.p[i]), p1=int(res.p1[i]),
+        p2=int(res.p2[i]), remat=bool(res.remat[i]), zero1=bool(res.zero1[i]),
+        zero3=bool(res.zero3[i]), seq_parallel=bool(res.seq_parallel[i]),
+        bottleneck=str(res.bottleneck[i]), total_s=float(res.total_s[i]),
+        iterations=float(res.iterations[i]),
+        mem_bytes=float(res.mem_bytes[i]), mem_cap=mem_cap,
+        feasible=feasible, source=source)
+
+
+def deployable_switch_mask(res: SweepResult, allow_remat: bool = True):
+    """Which lattice points' switch combos the exec path can actually
+    realize — a plan must never claim "fits" via a switch that
+    ``exec_strategy``/``build_cell`` won't turn on:
+
+    * ``zero1`` — deployable everywhere (``OptimizerConfig(zero1=...)`` +
+      ``zero1_rules`` apply to any rules table);
+    * ``zero3`` — only the ``df``/``ep`` rules tables shard params over the
+      data axis (``df_zero3`` / ``ep_df``);
+    * ``seq_parallel`` — only the model-axis tables (``df``/``filter``/
+      ``channel``/``ep``) shard the residual stream;
+    * ``remat`` — wire-able only where the model's forward supports it
+      (lm / vlm / encdec; CNN forwards have no checkpointing), gated by
+      ``allow_remat``.
+    """
+    strat = res.strategy
+    m = np.ones(len(res), bool)
+    if not allow_remat:
+        m &= ~res.remat
+    m &= ~res.zero3 | np.isin(strat, ("df", "ep"))
+    m &= ~res.seq_parallel | np.isin(strat, ("df", "filter", "channel", "ep"))
+    return m
+
+
+def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
+             mem_cap: float | None = None, strategies=None,
+             switches="all", fallback: str | None = None,
+             allow_remat: bool = True, model_width: int | None = None,
+             rtol: float = 1e-9) -> TunedPlan:
+    """Pick the cheapest deployable (strategy, p1·p2, switches) point at p.
+
+    ``fallback``: strategy name (oracle or executable-rules spelling) that
+    wins ties and is returned when nothing fits. ``switches``: as in
+    ``sweep()`` — default sweeps all 16 memory-switch combinations, then
+    masks the ones the exec path cannot realize per strategy
+    (``deployable_switch_mask``); ``allow_remat=False`` additionally bars
+    remat (models whose forward cannot checkpoint). ``model_width``
+    constrains hybrid plans to one p2 — pass the mesh's model-axis size
+    when the mesh is already shaped and cannot be refactorized.
+    """
+    mem_cap = mem_cap if mem_cap is not None else tm.system.mem_capacity
+    fallback = ORACLE_OF_EXEC.get(fallback, fallback)
+    if strategies is None:
+        strategies = tuple(s for s in DEPLOYABLE_STRATEGIES
+                           if s != "serial" or p == 1)
+    res = sweep(stats, tm, cfg, [p], strategies, mem_cap=mem_cap,
+                switches=switches)
+    if len(res) == 0:
+        raise ValueError(f"no strategy in {strategies} applies to this model")
+    keep = deployable_switch_mask(res, allow_remat=allow_remat)
+    if model_width is not None:
+        # pure strategies ignore the hybrid split; hybrids must land on the
+        # mesh's actual model width or their memory claim is off by p2/width
+        keep &= (~np.isin(res.strategy, HYBRID_STRATEGIES)
+                 | (res.p2 == model_width))
+    res = res.select(keep)
+    if len(res) == 0:
+        raise ValueError(
+            f"every lattice point at p={p} was filtered out (switches="
+            f"{switches!r}, allow_remat={allow_remat}, "
+            f"model_width={model_width}); relax the constraints")
+    nsw = res.n_switches
+    ok = res.ok
+    if ok.any():
+        total = res.total_s
+        tied = ok & (total <= total[ok].min() * (1.0 + rtol))
+        if fallback is not None and np.any(tied & (res.strategy == fallback)):
+            tied &= res.strategy == fallback
+        i = min(np.flatnonzero(tied),
+                key=lambda j: (int(nsw[j]), int(res.p2[j]),
+                               _PREF.get(str(res.strategy[j]), 99),
+                               int(res.p1[j])))
+        return _plan_of(res, i, mem_cap, feasible=True, source="sweep")
+    # nothing fits: fall back to the requested strategy's least-memory point
+    cand = np.flatnonzero(res.strategy == fallback) if fallback else None
+    if cand is None or cand.size == 0:
+        cand = np.arange(len(res))
+    i = min(cand, key=lambda j: (float(res.mem_bytes[j]), int(nsw[j]),
+                                 int(res.p2[j]),
+                                 _PREF.get(str(res.strategy[j]), 99)))
+    return _plan_of(res, i, mem_cap, feasible=False, source="fallback")
+
+
+# ---------------------------------------------------------------------------
+# Launch-entry-point glue: arch registry → TunedPlan
+# ---------------------------------------------------------------------------
+
+def stats_for_model(mc, seq: int | None = None):
+    """Per-layer oracle stats for any registered model config (CNN configs
+    take no sequence length)."""
+    from ...models.cnn import CosmoFlowConfig, ResNetConfig, VGGConfig
+    from ..layer_stats import stats_for
+    if isinstance(mc, (ResNetConfig, VGGConfig, CosmoFlowConfig)):
+        return stats_for(mc)
+    return stats_for(mc, seq or 4096)
+
+
+def plan_for_arch(arch_cfg, shape_name: str, p: int, *,
+                  system: SystemModel | None = None, smoke: bool = False,
+                  mem_cap: float | None = None, switches="all",
+                  model_width: int | None = None) -> TunedPlan:
+    """Auto-tune a registered arch at one input shape on p PEs.
+
+    ``system`` defaults to the TPU-v5e deployment target (projection mode);
+    the oracle config is one epoch of exactly the shape's global batch, so
+    the plan ranks per-iteration time. ``model_width``: see ``autotune``.
+    """
+    from ...configs.base import SHAPES
+    mc = arch_cfg.smoke_model if smoke else arch_cfg.model
+    shape = SHAPES[shape_name]
+    stats = stats_for_model(mc, shape.seq_len)
+    tm = TimeModel(system or TPU_V5E_POD)
+    cfg = OracleConfig(B=shape.global_batch, D=shape.global_batch)
+    return autotune(stats, tm, cfg, p, mem_cap=mem_cap, switches=switches,
+                    fallback=arch_cfg.strategy_for(shape_name),
+                    model_width=model_width,
+                    allow_remat=arch_cfg.family != "cnn")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _smoke() -> int:
+    """Self-check: the tuner's pick must be the sweep's cheapest ok point,
+    and (with switches pinned to the config's) must agree with advise()."""
+    from ...models.cnn import RESNET50
+    from ..advisor import advise
+    from ..hardware import PAPER_V100_CLUSTER
+    from ..layer_stats import stats_for
+    stats = stats_for(RESNET50)
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    cfg = OracleConfig(B=128, D=12800)
+    for p in (8, 64):
+        plan = autotune(stats, tm, cfg, p)
+        assert plan.feasible and plan.p1 * plan.p2 == p, plan
+        res = sweep(stats, tm, cfg, [p], mem_cap=plan.mem_cap,
+                    switches="all")
+        # exclude pipeline (not deployable) from the reference minimum
+        dep = res.ok & (res.strategy != "pipeline")
+        assert np.isclose(plan.total_s, res.total_s[dep].min(),
+                          rtol=1e-12), (plan, res.total_s[dep].min())
+        pinned = autotune(stats, tm, cfg, p, switches=None,
+                          strategies=("data", "spatial", "filter", "channel",
+                                      "df", "ds", "ep"))
+        rec = advise(stats, tm, cfg, p, mem_cap=plan.mem_cap,
+                     strategies=("data", "spatial", "filter", "channel",
+                                 "df", "ds", "ep"))
+        assert rec.best is not None
+        assert np.isclose(pinned.total_s, rec.best.total_s, rtol=1e-12)
+        print(f"autotune --smoke p={p}: {plan.describe()}")
+    return 0
+
+
+def main(argv=None) -> int:
+    from ..sweep import _SYSTEMS, _model_stats
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.autotune",
+        description="Oracle-in-the-loop auto-tuner: what should I run on "
+                    "p PEs? Picks the cheapest deployable (strategy, p1·p2 "
+                    "mesh, memory switches) point from the sweep lattice.")
+    ap.add_argument("--model", default="resnet50",
+                    help="resnet50 | vgg16 | cosmoflow | any configs/ LM name")
+    ap.add_argument("--p", default="64",
+                    help="PE count(s): '64', '8,64,1024', '1..1024' (pow2)")
+    ap.add_argument("--system", default="paper", choices=sorted(_SYSTEMS))
+    ap.add_argument("--batch", type=int, default=None,
+                    help="fixed global batch B (default: weak scaling)")
+    ap.add_argument("--batch-per-pe", type=float, default=2.0,
+                    help="weak scaling: B = max(round(b·p), 1)")
+    ap.add_argument("--dataset", type=int, default=None,
+                    help="samples per epoch D (default: per-model)")
+    ap.add_argument("--seq", type=int, default=4096, help="LM sequence length")
+    ap.add_argument("--mem-cap-gib", type=float, default=None,
+                    help="per-PE memory cap (default: system capacity)")
+    ap.add_argument("--fallback", default=None,
+                    help="strategy that wins ties / absorbs infeasibility")
+    ap.add_argument("--no-switches", action="store_true",
+                    help="pin memory switches off instead of sweeping all 16")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny self-check (CI gate)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return _smoke()
+
+    stats, default_D = _model_stats(args.model, args.seq)
+    tm = TimeModel(_SYSTEMS[args.system])
+    cap = (args.mem_cap_gib * 2 ** 30 if args.mem_cap_gib
+           else tm.system.mem_capacity)
+    p_grid = parse_p_grid(args.p)
+    print(f"# model={args.model} system={tm.system.name} "
+          f"mem_cap={cap / 2**30:.1f}GiB switches="
+          f"{'off' if args.no_switches else 'all 16 combos'}")
+    print(f"{'p':>6s} {'strategy':10s} {'p1xp2':>11s} {'switches':24s} "
+          f"{'ms/iter':>9s} {'mem_GiB':>8s}  bottleneck")
+    for p in p_grid:
+        B = args.batch or max(int(round(args.batch_per_pe * p)), 1)
+        D = max(args.dataset or default_D, B)
+        cfg = OracleConfig(B=B, D=D)
+        plan = autotune(stats, tm, cfg, p, mem_cap=cap,
+                        switches=None if args.no_switches else "all",
+                        fallback=args.fallback)
+        mark = " " if plan.feasible else "!"
+        print(f"{p:>6d} {plan.strategy:10s} "
+              f"{plan.p1:>5d}x{plan.p2:<5d} {plan.switch_str():24s} "
+              f"{plan.per_iter_s * 1e3:>9.3f} "
+              f"{plan.mem_bytes / 2**30:>8.2f} {mark} {plan.bottleneck}")
+    return 0

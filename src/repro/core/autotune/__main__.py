@@ -1,0 +1,9 @@
+"""Entry point: ``python -m repro.core.autotune`` (see package docstring)."""
+import sys
+
+from . import main
+
+try:
+    sys.exit(main())
+except BrokenPipeError:     # e.g. `... | head` closing the pipe early
+    sys.exit(0)

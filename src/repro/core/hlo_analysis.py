@@ -14,10 +14,9 @@ collective-permute m.
 from __future__ import annotations
 
 import re
-from collections import Counter, defaultdict
-from dataclasses import dataclass, field
+from collections import Counter
+from dataclasses import dataclass
 
-import numpy as np
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -182,6 +181,8 @@ class CellCost:
 
 def cost_of(compiled, mesh_shape: dict[str, int]) -> CellCost:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax wraps the dict in a list
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     colls = parse_collectives(compiled.as_text(), mesh_shape)
     return CellCost(

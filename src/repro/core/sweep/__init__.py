@@ -37,8 +37,24 @@ PURE_STRATEGIES = ("serial", "data", "spatial", "pipeline", "filter",
                    "channel")
 HYBRID_STRATEGIES = ("df", "ds", "ep")
 
+# memory-model switches swept as extra lattice axes (DESIGN.md §3/§8)
+SWITCH_NAMES = ("remat", "zero1", "zero3", "seq_parallel")
+
 _BOTTLENECK_OF_TERM = np.array(["comp-bound", "GE-bound", "FB-bound",
                                 "halo-bound", "p2p-bound"])
+
+
+def all_switch_combos() -> list[tuple[bool, bool, bool, bool]]:
+    """All 16 (remat, zero1, zero3, seq_parallel) combinations."""
+    import itertools
+    return list(itertools.product((False, True), repeat=len(SWITCH_NAMES)))
+
+
+def switch_label(remat: bool, zero1: bool, zero3: bool,
+                 seq_parallel: bool) -> str:
+    on = [n for n, v in zip(SWITCH_NAMES, (remat, zero1, zero3, seq_parallel))
+          if v]
+    return "+".join(on) if on else "-"
 
 
 def factor_pairs(p: int) -> list[tuple[int, int]]:
@@ -97,10 +113,32 @@ class SweepResult:
     fits: np.ndarray             # bool — memory <= cap (True when no cap)
     bottleneck: np.ndarray       # str classification per point
     limit: np.ndarray            # str scaling-limit description per point
+    # memory-model switch axes (DESIGN.md §3); constant columns unless the
+    # sweep was asked to enumerate switch combos
+    remat: np.ndarray = None     # bool
+    zero1: np.ndarray = None     # bool
+    zero3: np.ndarray = None     # bool
+    seq_parallel: np.ndarray = None  # bool
     mem_cap: float | None = None
+
+    def __post_init__(self):
+        n = len(self.p)
+        for name in SWITCH_NAMES:
+            if getattr(self, name) is None:
+                setattr(self, name, np.zeros(n, bool))
 
     def __len__(self) -> int:
         return len(self.p)
+
+    @property
+    def n_switches(self) -> np.ndarray:
+        """How many memory-model switches are on at each point."""
+        return (self.remat.astype(int) + self.zero1.astype(int)
+                + self.zero3.astype(int) + self.seq_parallel.astype(int))
+
+    def switch_str(self, i: int) -> str:
+        return switch_label(bool(self.remat[i]), bool(self.zero1[i]),
+                            bool(self.zero3[i]), bool(self.seq_parallel[i]))
 
     @property
     def comm_s(self) -> np.ndarray:
@@ -127,7 +165,9 @@ class SweepResult:
             comm_fb_s=self.comm_fb_s[i], comm_halo_s=self.comm_halo_s[i],
             comm_p2p_s=self.comm_p2p_s[i], mem_bytes=self.mem_bytes[i],
             feasible=self.feasible[i], fits=self.fits[i],
-            bottleneck=self.bottleneck[i], limit=self.limit[i])
+            bottleneck=self.bottleneck[i], limit=self.limit[i],
+            remat=self.remat[i], zero1=self.zero1[i], zero3=self.zero3[i],
+            seq_parallel=self.seq_parallel[i])
 
     def for_strategy(self, strategy: str) -> "SweepResult":
         return self.select(self.strategy == strategy)
@@ -232,48 +272,64 @@ def _lattice(strategy: str, p_grid, batch_of) -> tuple | None:
 
 def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
           strategies=STRATEGY_NAMES, *, batch_for_p=None,
-          mem_cap: float | None = None) -> SweepResult:
-    """Evaluate the whole (strategy × p × p1·p2) lattice vectorized.
+          mem_cap: float | None = None, switches=None) -> SweepResult:
+    """Evaluate the whole (strategy × p × p1·p2 [× switches]) lattice
+    vectorized.
 
     ``batch_for_p``: optional callable p → global batch B (weak scaling);
     defaults to the constant ``cfg.B``. ``mem_cap``: per-PE bytes; points
     over it are classified memory-infeasible (but still reported).
+    ``switches``: memory-model switch axes (DESIGN.md §3) — ``None``
+    evaluates only the combination already set on ``cfg``; ``"all"``
+    enumerates all 16 (remat, zero1, zero3, seq_parallel) combinations as a
+    16× lattice axis; or pass an explicit iterable of 4-bool tuples.
     """
     unknown = set(strategies) - set(STRATEGY_NAMES)
     if unknown:
         raise ValueError(f"unknown strategies {sorted(unknown)}; "
                          f"known: {list(STRATEGY_NAMES)}")
+    if switches is None:
+        combos = [(cfg.remat, cfg.zero1, cfg.zero3, cfg.seq_parallel)]
+    elif switches == "all":
+        combos = all_switch_combos()
+    else:
+        combos = [tuple(bool(v) for v in c) for c in switches]
+        if any(len(c) != len(SWITCH_NAMES) for c in combos):
+            raise ValueError(f"each switch combo must be a 4-tuple over "
+                             f"{SWITCH_NAMES}")
     T = precompute(stats, tm)
     p_grid = sorted(set(int(p) for p in p_grid if int(p) >= 1))
     batch_of = batch_for_p or (lambda p: cfg.B)
     cols: dict[str, list] = {k: [] for k in
                              ("strategy", "p", "p1", "p2", "B", "iters",
                               "comp", "ge", "fb", "halo", "p2p", "mem",
-                              "feasible", "limit")}
+                              "feasible", "limit",
+                              "remat", "zero1", "zero3", "seq_parallel")}
     for s in strategies:
+        # the lattice, feasibility and limit strings are switch-invariant
+        # (scaling limits never involve the memory model) — build them once
+        # per strategy, re-evaluate only the time/memory terms per combo
         lat = _lattice(s, p_grid, batch_of)
         if lat is None:
             continue
         p, p1, p2, B = lat
         p2_eff = p2 if s in HYBRID_STRATEGIES else (
             p if s in ("filter", "channel", "spatial") else np.ones_like(p))
-        try:
-            r = _eval(T, s, cfg, tm.system, p, p1, p2, p2_eff, B)
-        except ValueError:      # strategy inapplicable to this layer set
+        evals = []
+        for combo in combos:
+            cfg_c = replace(cfg, **dict(zip(SWITCH_NAMES, combo)))
+            try:
+                r = _eval(T, s, cfg_c, tm.system, p, p1, p2, p2_eff, B)
+            except ValueError:  # strategy inapplicable to this layer set,
+                break           # independent of the switch combo
+            evals.append((combo, r))
+        if not evals:
             continue
         n = len(p)
         bcast = (lambda v: np.broadcast_to(np.asarray(v, np.float64),
                                            (n,)).copy())
-        cols["strategy"].append(np.full(n, s, dtype="U8"))
-        cols["p"].append(p)
-        cols["p1"].append(p1)
-        cols["p2"].append(p2)
-        cols["B"].append(B)
-        cols["iters"].append(bcast(r["iters"]))
-        for k in ("comp", "ge", "fb", "halo", "p2p", "mem"):
-            cols[k].append(bcast(r[k]))
-        feas = np.broadcast_to(np.asarray(r["feasible"], bool), (n,)).copy()
-        cols["feasible"].append(feas)
+        feas = np.broadcast_to(np.asarray(evals[0][1]["feasible"], bool),
+                               (n,)).copy()
         memo: dict = {}   # limit strings only vary with (B, feasible)
 
         def limit_of(Bi: int, fi: bool) -> str:
@@ -282,16 +338,32 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
                 memo[k] = _limit_str(s, T, Bi, fi)
             return memo[k]
 
-        cols["limit"].append(np.array(
+        limits = np.array(
             [limit_of(int(Bi), bool(fi)) for Bi, fi in zip(B, feas)],
-            dtype=object))
+            dtype=object)
+        for combo, r in evals:
+            cols["strategy"].append(np.full(n, s, dtype="U8"))
+            cols["p"].append(p)
+            cols["p1"].append(p1)
+            cols["p2"].append(p2)
+            cols["B"].append(B)
+            cols["iters"].append(bcast(r["iters"]))
+            for k in ("comp", "ge", "fb", "halo", "p2p", "mem"):
+                cols[k].append(bcast(r[k]))
+            for name, v in zip(SWITCH_NAMES, combo):
+                cols[name].append(np.full(n, bool(v)))
+            cols["feasible"].append(feas)
+            cols["limit"].append(limits)
     if not cols["p"]:
         e = np.zeros(0)
-        return SweepResult(np.zeros(0, "U8"), np.zeros(0, int),
-                           np.zeros(0, int), np.zeros(0, int),
-                           np.zeros(0, int), e, e, e, e, e, e, e,
-                           np.zeros(0, bool), np.zeros(0, bool),
-                           np.zeros(0, object), np.zeros(0, object), mem_cap)
+        z = np.zeros(0, bool)
+        return SweepResult(
+            strategy=np.zeros(0, "U8"), p=np.zeros(0, int),
+            p1=np.zeros(0, int), p2=np.zeros(0, int), B=np.zeros(0, int),
+            iterations=e, comp_s=e, comm_ge_s=e, comm_fb_s=e, comm_halo_s=e,
+            comm_p2p_s=e, mem_bytes=e, feasible=z, fits=z,
+            bottleneck=np.zeros(0, object), limit=np.zeros(0, object),
+            remat=z, zero1=z, zero3=z, seq_parallel=z, mem_cap=mem_cap)
     cat = {k: np.concatenate(v) for k, v in cols.items()}
     fits = (cat["mem"] <= mem_cap if mem_cap is not None
             else np.ones(len(cat["p"]), bool))
@@ -306,7 +378,8 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
         comm_ge_s=cat["ge"], comm_fb_s=cat["fb"], comm_halo_s=cat["halo"],
         comm_p2p_s=cat["p2p"], mem_bytes=cat["mem"],
         feasible=cat["feasible"], fits=fits, bottleneck=bottleneck,
-        limit=cat["limit"], mem_cap=mem_cap)
+        limit=cat["limit"], remat=cat["remat"], zero1=cat["zero1"],
+        zero3=cat["zero3"], seq_parallel=cat["seq_parallel"], mem_cap=mem_cap)
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from ..configs.base import SHAPES, ArchConfig, ShapeSpec
 from ..models.cnn import CosmoFlow, CosmoFlowConfig, ResNet, ResNetConfig, VGG, VGGConfig
@@ -113,15 +113,44 @@ def _scan_groups(model) -> int:
     return 0
 
 
+def mesh_device_count(mesh) -> int:
+    """Total PEs a (possibly absent) mesh spans."""
+    return 1 if mesh is None else int(mesh.size)
+
+
 def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = None,
                *, smoke: bool = False, scan_layers: bool = True,
                unroll_attn: bool = False, kv_shards: int = 1,
                q_chunk: int = 1024, kv_chunk: int = 1024,
                opt: OptimizerConfig | None = None, accum: int = 1,
-               override_layers: int | None = None) -> BuiltCell:
-    """Assemble one (arch × shape) cell under a strategy on a mesh."""
+               override_layers: int | None = None, plan=None,
+               system=None) -> BuiltCell:
+    """Assemble one (arch × shape) cell under a strategy on a mesh.
+
+    ``strategy="auto"`` asks the oracle: the sweep-driven auto-tuner
+    (core/autotune.py) picks the cheapest feasible (strategy, p1·p2 split,
+    memory switches) for this arch × shape at the mesh's device count, and
+    the cell deploys that ``TunedPlan`` (executable rules table + ZeRO-1
+    optimizer setting derived from the plan's switches — never from
+    substring-matching the strategy name). Pass ``plan`` to reuse a plan
+    already computed (e.g. by a launch driver that also shaped the mesh
+    from it); ``system`` overrides the tuner's system model.
+    """
     shape = SHAPES[shape_name]
     strategy = strategy or cfg.strategy_for(shape_name)
+    if strategy == "auto" and plan is None:
+        # the mesh is already shaped, so hybrid plans are constrained to the
+        # model width this mesh can realize — the plan's split (and its
+        # memory claim) always matches what the rules will actually deploy
+        from ..core.autotune import plan_for_arch
+        plan = plan_for_arch(
+            cfg, shape_name, mesh_device_count(mesh), system=system,
+            smoke=smoke,
+            model_width=None if mesh is None else mesh.shape.get("model"))
+    if plan is not None:
+        strategy = plan.exec_strategy(shape.kind)
+        if opt is None:
+            opt = OptimizerConfig(zero1=plan.zero1)
     rules = make_rules(strategy)
     opt = opt or OptimizerConfig(zero1="zero1" in strategy)
     mc = cfg.smoke_model if smoke else cfg.model
@@ -135,7 +164,13 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = No
         kw.update(q_chunk=q_chunk, kv_chunk=kv_chunk)
         if unroll_attn:
             kw.update(unroll_attn=True)
-    meta = {"strategy": strategy, "family": cfg.family}
+    if plan is not None and cfg.family in ("lm", "vlm", "encdec"):
+        # deploy the plan's remat switch (CNN forwards can't checkpoint;
+        # the tuner never selects remat for them — deployable_switch_mask)
+        kw["remat"] = plan.remat
+    meta = {"strategy": strategy, "family": cfg.family, "opt": opt}
+    if plan is not None:
+        meta["plan"] = plan
 
     if shape.kind == "train":
         if cfg.family in ("lm", "vlm") and unroll_attn:

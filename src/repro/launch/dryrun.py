@@ -28,13 +28,13 @@ import numpy as np
 
 from ..configs import ASSIGNED_ARCHS, SHAPES, get_config
 from ..core.hlo_analysis import combine, cost_of
-from ..core.roofline import V5E, roofline
+from ..core.roofline import roofline
 from ..models.transformer import TransformerLM
 from ..models.vlm import VLM
 from ..models.encdec import EncDecLM
 from ..nn.module import tree_num_params
-from ..parallel.strategies import make_rules
 from .build import build_cell
+from .compat import make_mesh
 from .mesh import make_production_mesh
 
 
@@ -98,14 +98,37 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     strategy = strategy or default_strategy(cfg, shape_name)
+    plan = None
+    if strategy == "auto":
+        # oracle-in-the-loop: the auto-tuner picks (strategy, p1·p2 split,
+        # memory switches) for the chip count of the mesh that will actually
+        # be built, then (absent an explicit override) the mesh is
+        # refactorized to the plan's split — multi-pod keeps its leading
+        # DCI axis of 2, so the plan's p1 must split across it
+        from .build import mesh_device_count
+        from ..core.autotune import plan_for_arch
+        if mesh_shape:
+            chips_planned = int(np.prod([int(x) for x in mesh_shape.split("x")]))
+        else:
+            chips_planned = mesh_device_count(
+                make_production_mesh(multi_pod=multi_pod))
+        plan = plan_for_arch(cfg, shape_name, chips_planned)
+        strategy = plan.exec_strategy(shape.kind)
+        if mesh_shape is None:
+            if not multi_pod:
+                mesh_shape = f"{plan.p1}x{plan.p2}"
+            elif plan.p1 % 2 == 0:
+                mesh_shape = f"2x{plan.p1 // 2}x{plan.p2}"
+            # else: production mesh stands; only the plan's strategy and
+            # switches deploy (the p1·p2 split is unrealizable across DCI)
+        print(f"[{arch} × {shape_name}] {plan.describe()}")
     if mesh_shape:
         # oracle-guided logical refactorization of the same 256-chip pod
         # (e.g. "64x4": DP=64 x TP=4) — §Perf optimized variants only;
         # the required table uses the fixed production meshes.
         dims = tuple(int(x) for x in mesh_shape.split("x"))
         names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
-        mesh = jax.make_mesh(dims, names,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        mesh = make_mesh(dims, names)
         mesh_name = f"pod{mesh_shape}"
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -118,10 +141,25 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "strategy": strategy, "kv_shards": kv_shards, "tag": tag,
            "chips": chips}
+    if plan is not None:
+        # did the built mesh actually realize the plan's factorization?
+        # (False under an explicit --mesh-shape override, or multi-pod with
+        # a p1 that can't split across the DCI axis) — the report's
+        # cross-check must not attribute the plan's split to this mesh then
+        ms = dict(mesh.shape)
+        deployed = (ms.get("model", 1) == plan.p2
+                    and chips // ms.get("model", 1) == plan.p1)
+        rec["plan"] = {"strategy": plan.strategy, "p1": plan.p1,
+                       "p2": plan.p2, "split_deployed": deployed,
+                       "switches": plan.switch_str(),
+                       **plan.switches,     # the four booleans, by name
+                       "per_iter_s": plan.per_iter_s,
+                       "bottleneck": plan.bottleneck,
+                       "feasible": plan.feasible}
 
     # 1. full scanned step ---------------------------------------------------
     cell = build_cell(cfg, shape_name, mesh, strategy, scan_layers=True,
-                      kv_shards=kv_shards)
+                      kv_shards=kv_shards, plan=plan)
     # decode/prefill donate the cache (in-place KV update — serving reality);
     # train donates the train state.
     donate = {"train": (0,), "prefill": (2,), "decode": (2,)}[cell.kind]
@@ -145,7 +183,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
         for k in (1, 2):
             c = build_cell(cfg, shape_name, mesh, strategy, scan_layers=False,
                            unroll_attn=True, kv_shards=kv_shards,
-                           override_layers=k * period)
+                           override_layers=k * period, plan=plan)
             g_cells.append(cost_of(jax.jit(c.step_fn).lower(*c.args).compile(),
                                    dict(mesh.shape)))
         total = combine(full, g_cells[0], g_cells[1], n_groups)

@@ -9,12 +9,13 @@ from __future__ import annotations
 
 import jax
 
+from .compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n_devices: int | None = None,
@@ -24,6 +25,4 @@ def make_host_mesh(n_devices: int | None = None,
     n = n_devices or len(jax.devices())
     model = model or (2 if n % 2 == 0 and n > 1 else 1)
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

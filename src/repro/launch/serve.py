@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
-from ..nn.module import ShardingCtx, tree_abstract, tree_init
+from ..nn.module import ShardingCtx, tree_init
 from ..parallel.strategies import make_rules
 from ..training.steps import make_decode_step, make_prefill_step
 from .build import build_model
@@ -27,7 +27,9 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--strategy", default="serve_tp")
+    ap.add_argument("--strategy", default="serve_tp",
+                    help="rules-table name, or 'auto' to let the oracle "
+                         "auto-tuner pick the serving layout")
     ap.add_argument("--kv-shards", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -38,8 +40,27 @@ def main(argv=None) -> None:
     model = build_model(cfg, smoke=args.smoke)
     mc = cfg.smoke_model if args.smoke else cfg.model
     lm_cfg = mc.lm if cfg.family == "vlm" else mc
-    mesh = make_host_mesh()
-    ctx = ShardingCtx(mesh, make_rules(args.strategy))
+    strategy = args.strategy
+    if strategy == "auto":
+        # the tuner picks the hybrid split; serving deploys its model width
+        from ..core.autotune import autotune, stats_for_model
+        from ..core.hardware import cpu_host_model
+        from ..core.oracle import OracleConfig, TimeModel
+        n = len(jax.devices())
+        B = args.batch
+        # switches=None: the serving exec path deploys no memory switches
+        # (no optimizer to ZeRO-shard, no backward to remat), so the plan
+        # must not claim feasibility through them
+        plan = autotune(stats_for_model(mc, args.prompt_len + args.gen),
+                        TimeModel(cpu_host_model()),
+                        OracleConfig(B=B, D=B), n, fallback="serve_tp",
+                        switches=None)
+        print(plan.describe())
+        strategy = plan.exec_strategy("decode")
+        mesh = make_host_mesh(model=plan.p2 if n % plan.p2 == 0 else None)
+    else:
+        mesh = make_host_mesh()
+    ctx = ShardingCtx(mesh, make_rules(strategy))
 
     key = jax.random.PRNGKey(args.seed)
     params = tree_init(model.params_spec(), key)

@@ -14,8 +14,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from ..configs import get_config
 from ..checkpoint.checkpointing import Checkpointer, config_hash
@@ -61,7 +59,9 @@ def main(argv=None) -> None:
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--strategy", default="df")
+    ap.add_argument("--strategy", default="df",
+                    help="rules-table name, or 'auto' to let the oracle "
+                         "auto-tuner pick strategy/mesh/memory switches")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="checkpoints")
@@ -74,15 +74,35 @@ def main(argv=None) -> None:
     cfg = get_config(args.arch)
     mc = cfg.smoke_model if args.smoke else cfg.model
     model = build_model(cfg, smoke=args.smoke)
-    mesh = make_host_mesh()
-    rules = make_rules(args.strategy)
+    strategy, plan = args.strategy, None
+    if strategy == "auto":
+        # oracle-in-the-loop: tune (strategy, mesh split, memory switches)
+        # for this box, then deploy the plan (DESIGN.md §8)
+        from ..core.autotune import autotune, stats_for_model
+        from ..core.hardware import cpu_host_model
+        from ..core.oracle import OracleConfig, TimeModel
+        n = len(jax.devices())
+        plan = autotune(stats_for_model(mc, args.seq),
+                        TimeModel(cpu_host_model()),
+                        OracleConfig(B=args.batch, D=args.batch), n,
+                        fallback=cfg.strategy,
+                        allow_remat=cfg.family != "cnn")
+        print(plan.describe())
+        strategy = plan.exec_strategy("train")
+        mesh = make_host_mesh(model=plan.p2 if n % plan.p2 == 0 else None)
+        opt = OptimizerConfig(lr=args.lr, zero1=plan.zero1)
+    else:
+        mesh = make_host_mesh()
+        opt = OptimizerConfig(lr=args.lr, zero1=True)
+    rules = make_rules(strategy)
     ctx = ShardingCtx(mesh, rules)
-    opt = OptimizerConfig(lr=args.lr, zero1=True)
 
     fwd_kw = {}
     if cfg.family in ("lm", "vlm"):
         fwd_kw = dict(scan_layers=args.scan_layers, attn_impl="chunked",
                       q_chunk=min(256, args.seq))
+    if plan is not None and cfg.family in ("lm", "vlm", "encdec"):
+        fwd_kw["remat"] = plan.remat    # deploy the plan's remat switch
     step = jax.jit(make_train_step(model, opt, ctx, accum=args.accum, **fwd_kw),
                    donate_argnums=(0,))
     sspec = train_state_spec(model, opt)
@@ -110,7 +130,11 @@ def main(argv=None) -> None:
     state, final = run_with_recovery(
         step, state, loader, ckpt, n_steps=args.steps, start_step=start,
         ckpt_every=args.ckpt_every, on_metrics=on_metrics)
-    print(f"done at step {final}; loss {losses[0]:.4f} → {losses[-1]:.4f}")
+    if losses:
+        print(f"done at step {final}; loss {losses[0]:.4f} → {losses[-1]:.4f}")
+    else:   # resumed at/past --steps: zero new steps this run
+        print(f"done at step {final}; no new steps "
+              f"(checkpoint already at --steps)")
 
 
 if __name__ == "__main__":

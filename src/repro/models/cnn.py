@@ -11,15 +11,13 @@ that feeds the oracle's analytical model (paper Table 2 notation).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Sequence
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..nn.layers import (BatchNorm, Conv, Dense, avg_pool, global_avg_pool,
-                         max_pool)
+from ..nn.layers import BatchNorm, Conv, Dense, global_avg_pool, max_pool
 from ..nn.module import NULL_CTX, ShardingCtx, tree_num_params
 
 

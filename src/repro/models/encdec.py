@@ -9,7 +9,6 @@ GELU FFN (non-GLU), MHA (kv == heads).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any
 
 import jax

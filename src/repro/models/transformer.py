@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import Any
 
 import jax
@@ -31,8 +30,7 @@ import numpy as np
 from ..nn.attention import Attention, AttentionConfig, MLAttention, MLAConfig
 from ..nn.ffn import FFN, FFNConfig, MoE, MoEConfig
 from ..nn.layers import Embedding, LayerNorm, RMSNorm
-from ..nn.module import (NULL_CTX, ShardingCtx, fan_in_init, param, tree_init,
-                         tree_num_params)
+from ..nn.module import (NULL_CTX, ShardingCtx, fan_in_init, param, tree_num_params)
 from ..nn.rglru import RecurrentBlock, RGLRUConfig
 from ..nn.ssm import SSDBlock, SSMConfig
 

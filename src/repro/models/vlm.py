@@ -8,9 +8,7 @@ loss on text only).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
 
-import jax
 import jax.numpy as jnp
 
 from ..nn.module import (NULL_CTX, ShardingCtx, fan_in_init, param,

@@ -11,15 +11,14 @@ the paper's six parallel strategies were originally defined over.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .module import (NULL_CTX, ParamSpec, ShardingCtx, fan_in_init, ones_init,
-                     param, zeros_init)
+from .module import (NULL_CTX, ShardingCtx, fan_in_init, ones_init, param, zeros_init)
 
 
 # ---------------------------------------------------------------------------

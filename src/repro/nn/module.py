@@ -19,7 +19,6 @@ pipeline / hybrids) by swapping a rules table instead of editing the model.
 """
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 from dataclasses import dataclass
 from typing import Any, Callable, Mapping, Sequence

@@ -18,7 +18,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .module import NULL_CTX, ShardingCtx, fan_in_init, param
 

@@ -10,7 +10,6 @@ realized through shardings alone.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..launch.compat import axis_size, shard_map
+
 
 def halo_exchange(x, halo: int, axis: str):
     """Exchange ``halo`` rows (dim 1) with ring neighbours inside shard_map.
@@ -23,7 +25,7 @@ def halo_exchange(x, halo: int, axis: str):
     """
     if halo == 0:
         return x
-    p = jax.lax.axis_size(axis)
+    p = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     top = x[:, :halo]          # rows this shard sends UP (to idx-1)
     bot = x[:, -halo:]         # rows this shard sends DOWN (to idx+1)
@@ -58,7 +60,7 @@ def spatial_conv2d(x, w, mesh: Mesh, axis: str = "model", bias=None):
 
     in_specs = (P(None, axis, None, None), P(), P() if bias is not None else P())
     args = (x, w, bias if bias is not None else jnp.zeros((w.shape[-1],), x.dtype))
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=in_specs,
-                       out_specs=P(None, axis, None, None), check_vma=False)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=in_specs,
+                   out_specs=P(None, axis, None, None), check_vma=False)
     return fn(*args)

@@ -14,11 +14,12 @@ permute), so the same schedule serves forward and backward.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..launch.compat import shard_map
 
 
 def gpipe(stage_fn, stage_params, microbatches, mesh: Mesh, axis: str = "model"):
@@ -58,9 +59,9 @@ def gpipe(stage_fn, stage_params, microbatches, mesh: Mesh, axis: str = "model")
         return jax.lax.psum(mine, axis)
 
     pspec_params = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(spmd, mesh=mesh,
-                       in_specs=(pspec_params, P()), out_specs=P(),
-                       check_vma=False)
+    fn = shard_map(spmd, mesh=mesh,
+                   in_specs=(pspec_params, P()), out_specs=P(),
+                   check_vma=False)
     return fn(stage_params, microbatches)
 
 

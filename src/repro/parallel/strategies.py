@@ -17,7 +17,6 @@ beyond-paper         → ZeRO-1/3 (optimizer/param sharding over data),
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 from ..nn.module import Rules
 

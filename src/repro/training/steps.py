@@ -10,13 +10,12 @@ averaging — the paper's weak-scaling knob when memory binds before compute.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from ..nn.module import ParamSpec, ShardingCtx, param, tree_map_spec
+from ..nn.module import ShardingCtx, param
 from ..optim.optimizers import OptimizerConfig, apply_update, state_spec
 
 

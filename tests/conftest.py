@@ -11,6 +11,11 @@ import jax  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device subprocess checks (minutes)")
+
+
 @pytest.fixture()
 def key():
     return jax.random.PRNGKey(0)

@@ -16,8 +16,8 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 
 def mesh24():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.compat import make_mesh
+    return make_mesh((2, 4), ("data", "model"))
 
 
 def check_pipeline():
@@ -134,8 +134,9 @@ def check_compressed_allreduce():
         mean, _ = compressed_mean({"g": gl}, "data")
         return mean["g"]
 
-    out = jax.shard_map(spmd, mesh=mesh, in_specs=P("data", None),
-                        out_specs=P("data", None), check_vma=False)(g)
+    from repro.launch.compat import shard_map
+    out = shard_map(spmd, mesh=mesh, in_specs=P("data", None),
+                    out_specs=P("data", None), check_vma=False)(g)
     # mesh data axis = 2 shards of 4 rows: out[j] == out[j+4] == mean of the
     # two shards' row j, to within one quantization step (shared scale)
     got = np.asarray(out)

@@ -1,0 +1,233 @@
+"""Auto-tuner regression pins + advise() parity + plan plumbing.
+
+Pins the tuner's selections for the paper's models at p ∈ {8, 64, 1024}
+(Table 3 / Fig. 5 regimes: pure data parallelism while the gradient
+exchange is cheap, hybrids once it dominates), checks that with the memory
+switches pinned the tuner and the scalar-backed ``advise()`` agree on the
+shared grid, and that ``build_cell(strategy="auto")`` deploys exactly the
+sweep's cheapest feasible point.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (OracleConfig, PAPER_V100_CLUSTER, TimeModel,
+                        stats_for)
+from repro.core.advisor import advise
+from repro.core.autotune import (DEPLOYABLE_STRATEGIES, ORACLE_OF_EXEC,
+                                 autotune, plan_for_arch)
+from repro.core.sweep import all_switch_combos, sweep
+from repro.models.cnn import RESNET50, CosmoFlowConfig
+
+TM = TimeModel(PAPER_V100_CLUSTER)
+CAP = TM.system.mem_capacity
+
+
+def _weak(p, per_pe=2.0):
+    B = max(int(round(per_pe * p)), 4)
+    return OracleConfig(B=B, D=max(1_281_167, B))
+
+
+# ---------------------------------------------------------------------------
+# regression pins: paper-consistent winners (Table 3 / Fig. 5)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p,want_strategy,want_split", [
+    (8, "data", (8, 1)),        # Table 3: data wins while GE is cheap
+    (64, "data", (64, 1)),
+    (1024, "df", (512, 2)),     # Fig. 5 regime: hybrid df past the p=512
+])                              # data→df crossover (test_sweep golden)
+def test_autotune_resnet50_pins(p, want_strategy, want_split):
+    plan = autotune(stats_for(RESNET50), TM, _weak(p), p, mem_cap=CAP,
+                    fallback="data")
+    assert plan.feasible and plan.source == "sweep"
+    assert plan.strategy == want_strategy
+    assert (plan.p1, plan.p2) == want_split
+    assert plan.p1 * plan.p2 == p
+
+
+@pytest.mark.parametrize("p,want_strategy", [
+    (8, "spatial"),   # B = p/4 < p: pure data infeasible, spatial wins
+    (64, "ds"),       # paper Fig. 4/5: data+spatial once DP groups help
+    (1024, "df"),     # beyond the paper grid the model favours df's
+])                    # sharded gradient exchange (regression pin)
+def test_autotune_cosmoflow_pins(p, want_strategy):
+    B = max(int(round(0.25 * p)), 1)    # Fig-5 setting: 0.25 samples/PE
+    cfg = OracleConfig(B=B, D=max(1584, B))
+    plan = autotune(stats_for(CosmoFlowConfig(img=128)), TM, cfg, p,
+                    mem_cap=CAP, fallback="ds")
+    assert plan.feasible, plan
+    assert plan.strategy == want_strategy, plan.describe()
+    assert plan.p1 * plan.p2 == p
+
+
+def test_autotune_is_cheapest_feasible_point():
+    """The plan must equal the raw sweep's min over deployable ok points."""
+    cfg = _weak(64)
+    plan = autotune(stats_for(RESNET50), TM, cfg, 64, mem_cap=CAP)
+    res = sweep(stats_for(RESNET50), TM, cfg, [64],
+                tuple(s for s in DEPLOYABLE_STRATEGIES if s != "serial"),
+                mem_cap=CAP, switches="all")
+    assert np.isclose(plan.total_s, res.total_s[res.ok].min(), rtol=1e-12)
+    # and the chosen point's switch combo really is in the 16-combo axis
+    assert (plan.remat, plan.zero1, plan.zero3,
+            plan.seq_parallel) in all_switch_combos()
+
+
+def test_memory_switch_axis_unlocks_tight_caps():
+    """With a cap only ZeRO/remat configurations satisfy, the tuner must
+    flip switches on rather than fall back — but only switches the chosen
+    strategy's rules table can actually deploy."""
+    stats = stats_for(RESNET50)
+    cfg = OracleConfig(B=2048, D=1_281_167)
+    base = autotune(stats, TM, cfg, 64, mem_cap=CAP, switches=None,
+                    strategies=("data",))
+    tight = base.mem_bytes * 0.7     # below the no-switch footprint
+    plan = autotune(stats, TM, cfg, 64, mem_cap=tight, strategies=("data",))
+    assert plan.feasible
+    assert plan.n_switches_on > 0
+    assert plan.mem_bytes <= tight
+    # data rules can't shard params (zero3) or the residual stream
+    assert not plan.zero3 and not plan.seq_parallel
+
+
+def test_deployable_switch_mask_bars_unrealizable_combos():
+    from repro.core.autotune import deployable_switch_mask
+    res = sweep(stats_for(RESNET50), TM, OracleConfig(B=2048, D=1_281_167),
+                [64], ("data", "df"), switches="all")
+    m = deployable_switch_mask(res, allow_remat=False)
+    assert not res.remat[m].any()                              # remat barred
+    assert not (res.zero3[m] & (res.strategy[m] == "data")).any()
+    assert (res.zero3[m] & (res.strategy[m] == "df")).any()    # df keeps it
+    assert not (res.seq_parallel[m] & (res.strategy[m] == "data")).any()
+
+
+def test_cnn_plans_never_claim_remat_or_undeployable_switches():
+    """CNN forwards have no checkpointing: plan_for_arch must never claim
+    a CNN configuration fits via remat (or any switch its rules table
+    can't turn on)."""
+    from repro.configs import get_config
+    for arch in ("resnet50", "cosmoflow"):
+        plan = plan_for_arch(get_config(arch), "train_4k", 64)
+        assert not plan.remat, plan.describe()
+        if plan.strategy not in ("df", "ep"):
+            assert not plan.zero3
+
+
+def test_model_width_constrains_hybrid_splits():
+    """With the mesh already shaped, hybrid plans must land on its model
+    width — never a split the rules can't realize."""
+    stats = stats_for(RESNET50)
+    cfg = OracleConfig(B=2048, D=1_281_167)
+    plan = autotune(stats, TM, cfg, 64, mem_cap=CAP, strategies=("df",),
+                    model_width=4)
+    assert (plan.p1, plan.p2) == (16, 4)
+    with pytest.raises(ValueError, match="filtered out"):
+        autotune(stats, TM, cfg, 64, mem_cap=CAP, strategies=("df",),
+                 model_width=5)   # 5 does not divide 64: nothing realizable
+
+
+def test_autotune_empty_filter_raises_diagnosable_error():
+    with pytest.raises(ValueError, match="filtered out"):
+        # remat-only combo requested while remat is barred: mask drops all
+        autotune(stats_for(RESNET50), TM, OracleConfig(B=64, D=6400), 8,
+                 mem_cap=CAP, switches=[(True, False, False, False)],
+                 allow_remat=False)
+
+
+def test_autotune_fallback_when_nothing_fits():
+    plan = autotune(stats_for(RESNET50), TM, _weak(64), 64,
+                    mem_cap=1.0, fallback="data")   # 1 byte: nothing fits
+    assert not plan.feasible and plan.source == "fallback"
+    assert plan.strategy == "data"   # the requested fallback absorbed it
+
+
+def test_autotune_tie_prefers_config_strategy():
+    """At p=1 every strategy costs the same; the config's strategy wins."""
+    plan = autotune(stats_for(RESNET50), TM, OracleConfig(B=64, D=6400), 1,
+                    mem_cap=CAP, fallback="channel")
+    assert plan.strategy == "channel"
+    no_pref = autotune(stats_for(RESNET50), TM, OracleConfig(B=64, D=6400),
+                       1, mem_cap=CAP)
+    assert no_pref.strategy == "serial"   # canonical preference order
+
+
+# ---------------------------------------------------------------------------
+# parity with the scalar-backed advisor on the shared grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [8, 48, 64])
+def test_autotune_matches_advise_with_pinned_switches(p):
+    """With the switch axis pinned to the config's combo, the tuner answers
+    exactly what advise() ranks best over the same strategies."""
+    stats = stats_for(RESNET50)
+    cfg = OracleConfig(B=2048, D=1_281_167)
+    strategies = ("data", "spatial", "filter", "channel", "df", "ds", "ep")
+    plan = autotune(stats, TM, cfg, p, mem_cap=CAP, switches=None,
+                    strategies=strategies)
+    rec = advise(stats, TM, cfg, p, mem_cap=CAP, strategies=strategies)
+    assert rec.best is not None
+    assert plan.strategy == rec.best.strategy
+    assert (plan.p1, plan.p2) == (rec.best.p1, rec.best.p2)
+    assert np.isclose(plan.total_s, rec.best.total_s, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# plan plumbing: exec mapping + build_cell(strategy="auto")
+# ---------------------------------------------------------------------------
+
+def test_exec_strategy_roundtrips_into_rules_tables():
+    from repro.parallel.strategies import STRATEGIES
+    plan = autotune(stats_for(RESNET50), TM, _weak(64), 64, mem_cap=CAP)
+    for kind in ("train", "prefill", "decode"):
+        assert plan.exec_strategy(kind) in STRATEGIES
+    # every deployable oracle strategy must map into an executable table
+    for exec_name, oracle_name in ORACLE_OF_EXEC.items():
+        assert exec_name in STRATEGIES
+        assert oracle_name in DEPLOYABLE_STRATEGIES
+
+
+def test_zero1_exec_name_follows_switches():
+    stats = stats_for(RESNET50)
+    cfg = OracleConfig(B=2048, D=1_281_167)
+    plan = autotune(stats, TM, cfg, 64, mem_cap=CAP, strategies=("df",),
+                    switches=[(False, True, False, False)])
+    assert plan.strategy == "df" and plan.zero1
+    assert plan.exec_strategy("train") == "df_zero1"
+    plan = autotune(stats, TM, cfg, 64, mem_cap=CAP, strategies=("df",),
+                    switches=[(False, False, False, False)])
+    assert plan.exec_strategy("train") == "df"
+
+
+def test_build_cell_auto_deploys_the_tuned_plan():
+    """Acceptance: build_cell(strategy='auto') returns a cell whose
+    (strategy, mesh split, memory switches, optimizer) match the sweep's
+    cheapest feasible point for that arch × shape × device count."""
+    from repro.configs import get_config
+    from repro.launch.build import build_cell, mesh_device_count
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = get_config("qwen1.5-4b")
+    mesh = make_host_mesh()
+    cell = build_cell(cfg, "train_4k", mesh, "auto", smoke=True)
+    plan = cell.meta["plan"]
+    want = plan_for_arch(cfg, "train_4k", mesh_device_count(mesh), smoke=True,
+                         model_width=mesh.shape.get("model"))
+    assert plan == want                       # deterministic re-derivation
+    # a hybrid plan's split is always realizable on the given mesh
+    assert plan.p2 == mesh.shape.get("model") or plan.strategy not in (
+        "df", "ds", "ep")
+    assert cell.strategy == want.exec_strategy("train")
+    assert plan.mesh_shape == (want.p1, want.p2)
+    # bugfix: ZeRO-1 comes from the plan's switches, not name matching
+    assert cell.meta["opt"].zero1 == want.zero1
+    assert cell.kind == "train"
+
+
+def test_plan_for_arch_smoke_models_all_families():
+    """Every registered arch family resolves a plan (or falls back) without
+    raising — the tuner is usable from any launch entry point."""
+    from repro.configs import get_config
+    for arch in ("qwen1.5-4b", "whisper-medium", "paligemma-3b", "resnet50"):
+        plan = plan_for_arch(get_config(arch), "train_4k", 8, smoke=True)
+        assert plan.p == 8
+        assert plan.exec_strategy("train")

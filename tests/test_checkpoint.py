@@ -1,5 +1,4 @@
 """Checkpointing: bit-exact restore, atomicity, retention, config guard."""
-import json
 
 import jax
 import jax.numpy as jnp

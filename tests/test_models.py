@@ -2,10 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.nn import (AttentionConfig, FFNConfig, MLAConfig, MoEConfig,
-                      RGLRUConfig, SSMConfig)
+from repro.nn import AttentionConfig, FFNConfig, MoEConfig, RGLRUConfig
 from repro.nn.module import tree_init
 from repro.models import (EncDecConfig, EncDecLM, LMConfig, TransformerLM,
                           VLM, VLMConfig)

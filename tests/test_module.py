@@ -37,8 +37,8 @@ def test_num_params_bytes():
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_spec_to_pspec_divisibility_fallback():

@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, PAPER_CNNS, SHAPES, get_config
-from repro.data.pipeline import DataConfig, ShardedLoader
+from repro.configs import ASSIGNED_ARCHS, PAPER_CNNS, get_config
+from repro.data.pipeline import ShardedLoader
 from repro.launch.build import build_model
 from repro.launch.train import data_config_for
 from repro.nn.module import NULL_CTX, tree_init

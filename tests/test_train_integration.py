@@ -1,5 +1,4 @@
 """Integration: loss decreases, bit-exact resume, fault injection, stragglers."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
