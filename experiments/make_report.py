@@ -36,6 +36,9 @@ TUNER_HDR = ("| model | p | strategy | p1×p2 | switches | exec rules |"
 XCHECK_HDR = ("| arch | shape | mesh | strategy | HLO bound ms | oracle ms |"
               " ratio | verdict |\n|---|---|---|---|---|---|---|---|")
 
+PIPE_HDR = ("| strategy | p | measured ms | projected ms | accuracy |\n"
+            "|---|---|---|---|---|")
+
 # oracle-vs-HLO tolerance: both are coarse bounds (no-overlap roofline vs
 # α–β analytical model), so only order-of-magnitude drift is flagged
 TOL = 3.0
@@ -53,6 +56,8 @@ Auto-generated tables — run `PYTHONPATH=src python experiments/make_report.py`
 ### Auto-tuner decisions (what strategy="auto" deploys)
 
 ### Oracle vs HLO cross-check (dry-run cells)
+
+### Pipeline validation (oracle vs measured)
 
 ### Per-cell observations
 
@@ -95,7 +100,10 @@ def sweep_section() -> str:
     out = ["### Oracle sweep (vectorized strategy × scale projections)", "",
            "Best deployable split per (model, p) on the paper's V100 "
            "cluster model, weak scaling 2 samples/PE; from "
-           "`python -m repro.core.sweep`.", "", SWEEP_HDR]
+           "`python -m repro.core.sweep`. Pipeline rows are excluded here: "
+           "these are CNN trunks, which the GPipe executor cannot stack "
+           "(DESIGN.md §4) — the raw sweep CLI still projects them.",
+           "", SWEEP_HDR]
     models = {"resnet50": (RESNET50, 1_281_167),
               "vgg16": (VGGConfig(), 1_281_167),
               "cosmoflow": (CosmoFlowConfig(img=128), 1584)}
@@ -105,6 +113,7 @@ def sweep_section() -> str:
         cfg = OracleConfig(B=batch_of(grid[-1]), D=max(D, batch_of(grid[-1])))
         res = sweep(stats, tm, cfg, grid, batch_for_p=batch_of,
                     mem_cap=tm.system.mem_capacity)
+        res = res.select(res.strategy != "pipeline")
         best = res.best_per_p()
         for p in grid:
             sub = best.select(best.p == p)
@@ -144,11 +153,12 @@ def tuner_section() -> str:
         fallback = get_config(name).strategy
         for p in (8, 64, 512, 1024):
             B = max(2 * p, 4)
-            # all three models are CNNs — their forwards can't checkpoint,
-            # so the table must never show a remat plan (deployable mask)
+            # all three models are CNNs — their forwards can't checkpoint
+            # and their heterogeneous trunks can't stack pipeline stages, so
+            # the table must never show a remat or pipeline plan
             plan = autotune(stats, tm, OracleConfig(B=B, D=max(D, B)), p,
                             mem_cap=tm.system.mem_capacity, fallback=fallback,
-                            allow_remat=False)
+                            allow_remat=False, allow_pipeline=False)
             mark = "" if plan.feasible else " (fallback!)"
             out.append(f"| {name} | {p} | {plan.strategy}{mark} | "
                        f"{plan.p1}×{plan.p2} | {plan.switch_str()} | "
@@ -225,6 +235,37 @@ def crosscheck_section(recs: list) -> str:
     return "\n".join(out)
 
 
+def pipeline_section(here: pathlib.Path) -> str:
+    """Measured GPipe runs vs the oracle's non-uniform pipeline row.
+
+    Reads the artifact written by the pipeline deploy+validate smoke
+    (``python tests/helpers/multidevice_checks.py pipeline_validation
+    --write experiments/pipeline_validation.json`` — scripts/check.sh runs
+    it); reports the paper's Fig-3 accuracy metric per strategy.
+    """
+    out = ["### Pipeline validation (oracle vs measured)", "",
+           "The last Table-3 strategy measured (ISSUE 3): the GPipe stage "
+           "executor (`parallel/pipeline.py`) runs on virtual host devices "
+           "and is compared against the oracle's DP-partitioned pipeline "
+           "row. Accuracy = 1 − |proj − meas| / meas (paper §5.2).", ""]
+    art = here / "pipeline_validation.json"
+    if not art.exists():
+        out.append("_no pipeline validation artifact yet — run "
+                   "`scripts/check.sh` (or the `pipeline_validation` "
+                   "multidevice check with `--write`)_")
+        return "\n".join(out)
+    rec = json.loads(art.read_text())
+    mesh = "x".join(str(v) for v in rec["mesh"].values())
+    out += [f"Model `{rec['model']}`, mesh {mesh}, B={rec['B']}, "
+            f"S={rec['S']}:", "", PIPE_HDR]
+    for pt in rec["points"]:
+        out.append(f"| {pt['strategy']} | {pt['p']} | "
+                   f"{pt['measured_s'] * 1e3:,.1f} | "
+                   f"{pt['projected_s'] * 1e3:,.1f} | "
+                   f"{pt['accuracy'] * 100:.1f}% |")
+    return "\n".join(out)
+
+
 def replace_between(text: str, start_marker: str, end_marker: str,
                     new: str) -> str:
     start = text.index(start_marker)
@@ -251,6 +292,8 @@ def main():
                       "### Per-cell observations")
     t = ensure_marker(t, "### Oracle vs HLO cross-check",
                       "### Per-cell observations")
+    t = ensure_marker(t, "### Pipeline validation",
+                      "### Per-cell observations")
     recs = load_dryrun(here)
     dry, n_base, n_opt = dryrun_sections(recs)
     t = replace_between(t, "### Baseline cells",
@@ -260,10 +303,12 @@ def main():
     t = replace_between(t, "### Auto-tuner decisions",
                         "### Oracle vs HLO cross-check", tuner_section())
     t = replace_between(t, "### Oracle vs HLO cross-check",
-                        "### Per-cell observations", crosscheck_section(recs))
+                        "### Pipeline validation", crosscheck_section(recs))
+    t = replace_between(t, "### Pipeline validation",
+                        "### Per-cell observations", pipeline_section(here))
     exp.write_text(t)
     print(f"refreshed: {n_base} baseline + {n_opt} variant dry-run cells "
-          f"+ oracle sweep / auto-tuner / cross-check tables")
+          f"+ oracle sweep / auto-tuner / cross-check / pipeline tables")
 
 
 if __name__ == "__main__":

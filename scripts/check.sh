@@ -22,6 +22,14 @@ python -m repro.core.sweep --smoke
 echo "== auto-tuner smoke =="
 python -m repro.core.autotune --smoke
 
+echo "== pipeline deploy+validate smoke =="
+# deploys a TunedPlan[strategy=pipeline] through build_cell and trains one
+# step, then measures the GPipe executor against the oracle's DP-partitioned
+# pipeline row (writes the EXPERIMENTS.md artifact)
+python tests/helpers/multidevice_checks.py pipeline_deploy
+python tests/helpers/multidevice_checks.py pipeline_validation \
+    --write experiments/pipeline_validation.json
+
 echo "== docs references =="
 # every DESIGN.md reference in src/ must have a DESIGN.md to resolve into
 if grep -rqn "DESIGN.md" src/ && [ ! -f DESIGN.md ]; then

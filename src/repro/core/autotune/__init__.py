@@ -37,11 +37,12 @@ from ..oracle import OracleConfig, TimeModel
 from ..sweep import (HYBRID_STRATEGIES, SweepResult, parse_p_grid,
                      switch_label, sweep)
 
-# oracle strategies with an executable rules table (parallel/strategies.py);
-# pipeline is analytically modeled but has no executor (DESIGN.md §4), so the
-# tuner never deploys it.
+# oracle strategies with an executable deployment path: a rules table in
+# parallel/strategies.py, plus the GPipe stage schedule for "pipeline"
+# (parallel/pipeline.make_pipeline_train_step; models that cannot stack
+# uniform stages are filtered per-arch via ``allow_pipeline``).
 DEPLOYABLE_STRATEGIES = ("serial", "data", "spatial", "filter", "channel",
-                         "df", "ds", "ep")
+                         "df", "ds", "ep", "pipeline")
 
 # tie-break preference between equal-time strategies: fewest moving parts
 # first (no collectives < gradient exchange only < hybrids < layer-wise
@@ -56,6 +57,7 @@ ORACLE_OF_EXEC = {
     "data": "data", "spatial": "spatial", "filter": "filter",
     "channel": "channel", "df": "df", "df_zero1": "df", "df_zero3": "df",
     "ds": "ds", "ep_df": "ep", "serve_tp": "df", "serve_seqkv": "ds",
+    "pipeline": "pipeline",
 }
 
 
@@ -78,6 +80,8 @@ class TunedPlan:
     mem_cap: float | None
     feasible: bool           # False → fallback plan, nothing fit
     source: str              # "sweep" | "fallback"
+    segments: int = 8        # GPipe microbatch count the projection assumed
+                             # (pipeline plans; deploy must run the same S)
 
     @property
     def switches(self) -> dict:
@@ -105,11 +109,13 @@ class TunedPlan:
         """The executable rules-table name (parallel/strategies.py) that
         deploys this plan for a train / prefill / decode cell."""
         if kind in ("prefill", "decode"):
-            # serving: no ZeRO (latency-critical); expert plans keep ep rules
+            # serving: no ZeRO (latency-critical); expert plans keep ep rules.
+            # pipeline plans also serve as TP — the GPipe schedule is a
+            # TRAINING schedule (fill/drain over microbatches).
             return "ep_df" if self.strategy == "ep" else "serve_tp"
         table = {"serial": "data", "data": "data", "spatial": "ds",
                  "filter": "filter", "channel": "channel", "ds": "ds",
-                 "ep": "ep_df"}
+                 "ep": "ep_df", "pipeline": "pipeline"}
         if self.strategy == "df":
             if self.zero3:
                 return "df_zero3"
@@ -127,7 +133,7 @@ class TunedPlan:
 
 
 def _plan_of(res: SweepResult, i: int, mem_cap, feasible: bool,
-             source: str) -> TunedPlan:
+             source: str, segments: int = 8) -> TunedPlan:
     return TunedPlan(
         strategy=str(res.strategy[i]), p=int(res.p[i]), p1=int(res.p1[i]),
         p2=int(res.p2[i]), remat=bool(res.remat[i]), zero1=bool(res.zero1[i]),
@@ -135,7 +141,7 @@ def _plan_of(res: SweepResult, i: int, mem_cap, feasible: bool,
         bottleneck=str(res.bottleneck[i]), total_s=float(res.total_s[i]),
         iterations=float(res.iterations[i]),
         mem_bytes=float(res.mem_bytes[i]), mem_cap=mem_cap,
-        feasible=feasible, source=source)
+        feasible=feasible, source=source, segments=segments)
 
 
 def deployable_switch_mask(res: SweepResult, allow_remat: bool = True):
@@ -151,7 +157,10 @@ def deployable_switch_mask(res: SweepResult, allow_remat: bool = True):
       ``channel``/``ep``) shard the residual stream;
     * ``remat`` — wire-able only where the model's forward supports it
       (lm / vlm / encdec; CNN forwards have no checkpointing), gated by
-      ``allow_remat``.
+      ``allow_remat``;
+    * ``pipeline`` — the GPipe step deploys no memory switches (its
+      projection is switch-invariant anyway), so only the all-off combo
+      stands.
     """
     strat = res.strategy
     m = np.ones(len(res), bool)
@@ -159,13 +168,15 @@ def deployable_switch_mask(res: SweepResult, allow_remat: bool = True):
         m &= ~res.remat
     m &= ~res.zero3 | np.isin(strat, ("df", "ep"))
     m &= ~res.seq_parallel | np.isin(strat, ("df", "filter", "channel", "ep"))
+    m &= (strat != "pipeline") | (res.n_switches == 0)
     return m
 
 
 def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
              mem_cap: float | None = None, strategies=None,
              switches="all", fallback: str | None = None,
-             allow_remat: bool = True, model_width: int | None = None,
+             allow_remat: bool = True, allow_pipeline: bool = True,
+             max_stages: int | None = None, model_width: int | None = None,
              rtol: float = 1e-9) -> TunedPlan:
     """Pick the cheapest deployable (strategy, p1·p2, switches) point at p.
 
@@ -174,25 +185,42 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
     ``sweep()`` — default sweeps all 16 memory-switch combinations, then
     masks the ones the exec path cannot realize per strategy
     (``deployable_switch_mask``); ``allow_remat=False`` additionally bars
-    remat (models whose forward cannot checkpoint). ``model_width``
-    constrains hybrid plans to one p2 — pass the mesh's model-axis size
-    when the mesh is already shaped and cannot be refactorized.
+    remat (models whose forward cannot checkpoint), and
+    ``allow_pipeline=False`` bars the GPipe schedule (models without a
+    uniform block stack — ``parallel.pipeline.pipeline_supported``).
+    ``model_width`` constrains hybrid plans to one p2 — pass the mesh's
+    model-axis size when the mesh is already shaped and cannot be
+    refactorized.
     """
     mem_cap = mem_cap if mem_cap is not None else tm.system.mem_capacity
     fallback = ORACLE_OF_EXEC.get(fallback, fallback)
     if strategies is None:
-        strategies = tuple(s for s in DEPLOYABLE_STRATEGIES
-                           if s != "serial" or p == 1)
+        strategies = tuple(
+            s for s in DEPLOYABLE_STRATEGIES
+            if (s != "serial" or p == 1)
+            and (s != "pipeline" or allow_pipeline))
+    elif not allow_pipeline:
+        if "pipeline" in strategies and len(set(strategies)) == 1:
+            raise ValueError(
+                "pipeline was requested but this model cannot deploy it "
+                "(no uniform block stack — parallel.pipeline."
+                "pipeline_supported)")
+        strategies = tuple(s for s in strategies if s != "pipeline")
     res = sweep(stats, tm, cfg, [p], strategies, mem_cap=mem_cap,
                 switches=switches)
     if len(res) == 0:
         raise ValueError(f"no strategy in {strategies} applies to this model")
     keep = deployable_switch_mask(res, allow_remat=allow_remat)
     if model_width is not None:
-        # pure strategies ignore the hybrid split; hybrids must land on the
-        # mesh's actual model width or their memory claim is off by p2/width
-        keep &= (~np.isin(res.strategy, HYBRID_STRATEGIES)
+        # pure strategies ignore the hybrid split — except pipeline, whose
+        # stage count IS its p2: it must land on the mesh's model width just
+        # like the hybrids, or the deployed stage count won't match the plan
+        keep &= (~np.isin(res.strategy, HYBRID_STRATEGIES + ("pipeline",))
                  | (res.p2 == model_width))
+    if max_stages is not None:
+        # the oracle's p <= G bound counts STAT layers; the executor cuts
+        # the model's BLOCK stack, which is shorter (attn+ffn share a block)
+        keep &= (res.strategy != "pipeline") | (res.p2 <= max_stages)
     res = res.select(keep)
     if len(res) == 0:
         raise ValueError(
@@ -210,7 +238,8 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
                 key=lambda j: (int(nsw[j]), int(res.p2[j]),
                                _PREF.get(str(res.strategy[j]), 99),
                                int(res.p1[j])))
-        return _plan_of(res, i, mem_cap, feasible=True, source="sweep")
+        return _plan_of(res, i, mem_cap, feasible=True, source="sweep",
+                        segments=cfg.segments)
     # nothing fits: fall back to the requested strategy's least-memory point
     cand = np.flatnonzero(res.strategy == fallback) if fallback else None
     if cand is None or cand.size == 0:
@@ -218,7 +247,8 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
     i = min(cand, key=lambda j: (float(res.mem_bytes[j]), int(nsw[j]),
                                  int(res.p2[j]),
                                  _PREF.get(str(res.strategy[j]), 99)))
-    return _plan_of(res, i, mem_cap, feasible=False, source="fallback")
+    return _plan_of(res, i, mem_cap, feasible=False, source="fallback",
+                    segments=cfg.segments)
 
 
 # ---------------------------------------------------------------------------
@@ -246,15 +276,19 @@ def plan_for_arch(arch_cfg, shape_name: str, p: int, *,
     the plan ranks per-iteration time. ``model_width``: see ``autotune``.
     """
     from ...configs.base import SHAPES
+    from ...parallel.pipeline import pipeline_supported
     mc = arch_cfg.smoke_model if smoke else arch_cfg.model
     shape = SHAPES[shape_name]
     stats = stats_for_model(mc, shape.seq_len)
     tm = TimeModel(system or TPU_V5E_POD)
     cfg = OracleConfig(B=shape.global_batch, D=shape.global_batch)
+    can_pipe = (shape.kind == "train" and pipeline_supported(mc) is None)
     return autotune(stats, tm, cfg, p, mem_cap=mem_cap, switches=switches,
                     fallback=arch_cfg.strategy_for(shape_name),
                     model_width=model_width,
-                    allow_remat=arch_cfg.family != "cnn")
+                    allow_remat=arch_cfg.family != "cnn",
+                    allow_pipeline=can_pipe,
+                    max_stages=getattr(mc, "n_layers", None))
 
 
 # ---------------------------------------------------------------------------
@@ -276,8 +310,7 @@ def _smoke() -> int:
         assert plan.feasible and plan.p1 * plan.p2 == p, plan
         res = sweep(stats, tm, cfg, [p], mem_cap=plan.mem_cap,
                     switches="all")
-        # exclude pipeline (not deployable) from the reference minimum
-        dep = res.ok & (res.strategy != "pipeline")
+        dep = res.ok & deployable_switch_mask(res)
         assert np.isclose(plan.total_s, res.total_s[dep].min(),
                           rtol=1e-12), (plan, res.total_s[dep].min())
         pinned = autotune(stats, tm, cfg, p, switches=None,
@@ -293,7 +326,7 @@ def _smoke() -> int:
 
 
 def main(argv=None) -> int:
-    from ..sweep import _SYSTEMS, _model_stats
+    from ..sweep import _SYSTEMS, _model_config, _model_stats
     ap = argparse.ArgumentParser(
         prog="python -m repro.core.autotune",
         description="Oracle-in-the-loop auto-tuner: what should I run on "
@@ -315,6 +348,9 @@ def main(argv=None) -> int:
                     help="per-PE memory cap (default: system capacity)")
     ap.add_argument("--fallback", default=None,
                     help="strategy that wins ties / absorbs infeasibility")
+    ap.add_argument("--strategies", default=None,
+                    help="comma-separated subset to tune over (e.g. "
+                         "'pipeline' to force a stage-parallel plan)")
     ap.add_argument("--no-switches", action="store_true",
                     help="pin memory switches off instead of sweeping all 16")
     ap.add_argument("--smoke", action="store_true",
@@ -324,6 +360,11 @@ def main(argv=None) -> int:
         return _smoke()
 
     stats, default_D = _model_stats(args.model, args.seq)
+    # the CLI's recommendations must honor the same deployability gates as
+    # plan_for_arch/train.py — never print a plan the executor rejects
+    from ...parallel.pipeline import pipeline_supported
+    mc = _model_config(args.model)
+    can_pipe = pipeline_supported(mc) is None
     tm = TimeModel(_SYSTEMS[args.system])
     cap = (args.mem_cap_gib * 2 ** 30 if args.mem_cap_gib
            else tm.system.mem_capacity)
@@ -339,7 +380,12 @@ def main(argv=None) -> int:
         cfg = OracleConfig(B=B, D=D)
         plan = autotune(stats, tm, cfg, p, mem_cap=cap,
                         switches=None if args.no_switches else "all",
-                        fallback=args.fallback)
+                        fallback=args.fallback,
+                        allow_pipeline=can_pipe,
+                        max_stages=getattr(mc, "n_layers", None),
+                        strategies=tuple(s for s in
+                                         (args.strategies or "").split(",")
+                                         if s) or None)
         mark = " " if plan.feasible else "!"
         print(f"{p:>6d} {plan.strategy:10s} "
               f"{plan.p1:>5d}x{plan.p2:<5d} {plan.switch_str():24s} "

@@ -22,12 +22,14 @@ points, so scalar and vectorized results agree to machine precision.
 """
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from .hardware import SystemModel
 from .layer_stats import LayerStat
+from .partition import cut_values, min_max_partition, stage_sums
 
 STRATEGY_NAMES = ("serial", "data", "spatial", "pipeline", "filter", "channel",
                   "df", "ds", "ep")
@@ -101,6 +103,12 @@ class OracleConfig:
     delta: float = 2.0            # bytes per element (bf16)
     gamma: float = 0.6            # memory reuse factor (paper §4.2, [20,28])
     phi_hybrid: float = 2.0       # contention coefficient for df (paper §5.2)
+    # optional per-interconnect φ table {"data": φ, "model": φ} (dict or
+    # tuple of pairs) — calibrated values override the defaults: the hybrid
+    # gradient exchange ("data") defaults to phi_hybrid, the model-level
+    # FB/halo/P2P terms to 1.0. No term crosses the pod/DCI hop separately
+    # yet, so a "pod" entry has nothing to scale (the CLI rejects it).
+    phi_levels: "dict | tuple | None" = None
     segments: int = 8             # pipeline micro-batch segments S
     zero1: bool = False           # shard WU across DP ranks ([52], §5.3.3)
     # beyond-paper memory-model extensions (DESIGN.md §3):
@@ -108,6 +116,19 @@ class OracleConfig:
     zero3: bool = False           # params sharded over DP too (ZeRO-3 / [38])
     seq_parallel: bool = False    # residual stream sharded over model axis
     opt_bytes_per_param: float = 8.0  # adam m+v fp32
+
+    def phi_for(self, level: str, default: float = 1.0) -> float:
+        """Contention coefficient for one interconnect level. With no
+        ``phi_levels`` table the caller's default applies (phi_hybrid for
+        the hybrid gradient exchange, 1.0 elsewhere) — current behavior."""
+        t = self.phi_levels
+        if t is None:
+            return default
+        items = t.items() if isinstance(t, dict) else t
+        for k, v in items:
+            if k == level:
+                return float(v)
+        return default
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +221,50 @@ def _build_table(stats, tm: TimeModel) -> StatTable:
 
 
 # ---------------------------------------------------------------------------
+# Pipeline stage partitions (non-uniform stages; paper §5.3.3 caveat closed)
+# ---------------------------------------------------------------------------
+
+# StatTable → {k: (max ΣFW, max ΣBW, max ΣWU, max cut |y|, max Σ(x+y), max Σw)}
+_STAGE_TERMS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def pipeline_stage_terms(T: StatTable, k: int) -> tuple:
+    """Bottleneck-stage quantities for the optimal contiguous partition of
+    T's layers into k stages (DP over per-layer fw+bw, core/partition.py).
+
+    Returns (max stage ΣFW, max stage ΣBW, max stage ΣWU, max boundary |y|,
+    max stage Σ(|x|+|y|), max stage Σ|w|). The cut minimizes the fw+bw
+    bottleneck — the schedule's pacing term; memory/WU maxima are reported
+    at those same cuts (one partition deploys, so one partition is modeled).
+    """
+    k = int(min(max(k, 1), T.n))
+    cache = _STAGE_TERMS.setdefault(T, {})
+    hit = cache.get(k)
+    if hit is None:
+        part = min_max_partition(T.fw + T.bw, k)
+        b = part.bounds
+        cuts = cut_values(T.y, b)
+        hit = (float(stage_sums(T.fw, b).max()),
+               float(stage_sums(T.bw, b).max()),
+               float(stage_sums(T.wu, b).max()),
+               float(cuts.max()) if cuts.size else 0.0,
+               float(stage_sums(T.x + T.y, b).max()),
+               float(stage_sums(T.w, b).max()))
+        cache[k] = hit
+    return hit
+
+
+def _pipeline_terms_bcast(T: StatTable, p, shape) -> tuple:
+    """``pipeline_stage_terms`` over a (possibly scalar) lattice of p values,
+    broadcast to ``shape``; p is clamped into [1, G] (points outside are
+    scale-infeasible anyway, but every lattice row needs defined numbers)."""
+    pk = np.clip(np.broadcast_to(np.asarray(p, np.int64), shape), 1, T.n)
+    terms = np.array([pipeline_stage_terms(T, int(v)) for v in np.ravel(pk)],
+                     np.float64)
+    return tuple(terms[:, j].reshape(shape) for j in range(terms.shape[1]))
+
+
+# ---------------------------------------------------------------------------
 # The Table-3 math, once, broadcast-capable
 # ---------------------------------------------------------------------------
 
@@ -239,16 +304,23 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
             w_div * (dp if (cfg.zero1 or cfg.zero3) else 1.0))
         return gamma * delta * act + wmem + opt
 
+    # per-level contention: the hybrid gradient exchange defaults to the
+    # paper's φ constant, model-level collectives to 1.0; a calibrated
+    # cfg.phi_levels table overrides either (ROADMAP φ-calibration item)
+    phi_ge = cfg.phi_for("data", cfg.phi_hybrid)
+    phi_m = cfg.phi_for("model", 1.0)
+
     def halo_term(batch):
-        # Σ_{l: halo>0} 2·(2α + 2·batch·halo_l·δ·β), closed form
+        # Σ_{l: halo>0} 2·(2α + 2·batch·halo_l·δ·β·φ), closed form
         return iters * (4.0 * lvl_model.alpha * T.n_halo
-                        + 4.0 * batch * delta * lvl_model.beta * T.halo_sum)
+                        + 4.0 * batch * delta * lvl_model.beta * phi_m
+                        * T.halo_sum)
 
     def fb_term(width):
-        # Σ_{l < G-1} 3·(width−1)·(α + B·y_l·δ/p·β), closed form
+        # Σ_{l < G-1} 3·(width−1)·(α + B·y_l·δ/p·β·φ), closed form
         return 3.0 * iters * (width - 1) * (
             lvl_model.alpha * (T.n - 1)
-            + B * delta * lvl_model.beta / p * T.y_head_sum)
+            + B * delta * lvl_model.beta * phi_m / p * T.y_head_sum)
 
     out = dict(comp=zeros, ge=zeros, fb=zeros, halo=zeros, p2p=zeros,
                mem=zeros, feasible=np.ones(shape, bool), iters=iters + zeros)
@@ -276,13 +348,18 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
     if strategy == "pipeline":
         S = cfg.segments
         out["feasible"] = p <= T.n
-        # balanced grouping: max stage ≈ total/p (workload-balancing caveat
-        # recorded by the paper §5.3.3)
-        out["comp"] = D * (p + S - 1) / S * (FW / p + BW / p) + iters * (WU / p)
-        out["p2p"] = 2 * D * (p + S - 2) / B * (
-            lvl_model.alpha + B / S * T.y_max * delta * lvl_model.beta)
+        # non-uniform stages: the DP partitioner (core/partition.py) cuts
+        # layers minimizing the bottleneck stage, and the schedule is paced
+        # by max FW_Gi + max BW_Gi — not the balanced total/p the paper's
+        # §5.3.3 caveat assumed. Boundary traffic uses the activation sizes
+        # at the ACTUAL cut points, not the global max layer output.
+        mfw, mbw, mwu, ycut, mxy, mw = _pipeline_terms_bcast(T, p, shape)
+        out["comp"] = D * (p + S - 1) / S * (mfw + mbw) + iters * mwu
+        out["p2p"] = np.where(p > 1, 2 * D * (p + S - 2) / B * (
+            lvl_model.alpha + B / S * ycut * delta * lvl_model.beta * phi_m),
+            0.0)
         out["mem"] = gamma * delta * np.maximum(
-            (2.0 * B * T.xy_sum + 2.0 * T.W) / p, 1.0)
+            2.0 * B * mxy + 2.0 * mw, 1.0)
         return out
 
     if strategy in ("filter", "channel"):
@@ -302,8 +379,7 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
         out["comp"] = D / p * (FW + BW) + iters * (
             WU / p if cfg.zero1 else WU / p2)
         out["fb"] = fb_term(p2)
-        out["ge"] = iters * lvl_data.allreduce_v(p1, Wbytes / p2,
-                                                 phi=cfg.phi_hybrid)
+        out["ge"] = iters * lvl_data.allreduce_v(p1, Wbytes / p2, phi=phi_ge)
         out["mem"] = mem(act_div=p1, w_div=p2, dp=p1) + zeros
         return out
 
@@ -313,7 +389,7 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
         out["comp"] = D / p * (FW + BW) + iters * (
             WU / p if cfg.zero1 else WU)
         out["halo"] = halo_term(B / p1)
-        out["ge"] = iters * lvl_data.allreduce_v(p, Wbytes, phi=cfg.phi_hybrid)
+        out["ge"] = iters * lvl_data.allreduce_v(p, Wbytes, phi=phi_ge)
         out["mem"] = mem(act_div=p, dp=p1) + zeros
         return out
 
@@ -328,8 +404,7 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
         out["fb"] = np.where(p2 > 1, 4.0 * iters * (p2 - 1) * (
             lvl_model.alpha * T.n_moe
             + B * delta * lvl_model.beta / (p1 * p2) * T.moe_y_sum), 0.0)
-        out["ge"] = iters * lvl_data.allreduce_v(p1, Wbytes / p2,
-                                                 phi=cfg.phi_hybrid)
+        out["ge"] = iters * lvl_data.allreduce_v(p1, Wbytes / p2, phi=phi_ge)
         out["mem"] = mem(act_div=p1, w_div=p2, dp=p1) + zeros
         return out
 

@@ -70,6 +70,29 @@ def factor_pairs(p: int) -> list[tuple[int, int]]:
     return sorted(out)
 
 
+PHI_LEVELS = ("data", "model")   # levels the oracle's terms consume today
+
+
+def parse_phi_table(spec: str | None):
+    """'data=2.0,model=1.2' → ((level, φ), ...) for OracleConfig.phi_levels;
+    None/empty → None (the paper's single phi_hybrid constant applies).
+    Rejects unknown level names — a typo (or a level the α–β terms do not
+    yet consume, like the pod/DCI hop) must not silently change nothing."""
+    if not spec:
+        return None
+    out = []
+    for part in spec.split(","):
+        lvl, _, val = part.partition("=")
+        if not val:
+            raise ValueError(f"--phi entry {part!r} is not LEVEL=VALUE")
+        lvl = lvl.strip()
+        if lvl not in PHI_LEVELS:
+            raise ValueError(f"--phi level {lvl!r} is not consumed by the "
+                             f"oracle; known levels: {PHI_LEVELS}")
+        out.append((lvl, float(val)))
+    return tuple(out)
+
+
 def parse_p_grid(spec: str) -> list[int]:
     """'1..1024' → powers of two in range; '1..64:8' → arithmetic step;
     '4,6,12' → explicit list."""
@@ -392,15 +415,23 @@ _CNN_DATASETS = {"resnet50": 1_281_167, "vgg16": 1_281_167,
                  "cosmoflow": 1584}
 
 
-def _model_stats(name: str, seq: int):
-    from ..layer_stats import stats_for
+def _model_config(name: str):
+    """The model config object behind a CLI --model name."""
     from ...models.cnn import RESNET50, CosmoFlowConfig, VGGConfig
     cnn = {"resnet50": RESNET50, "vgg16": VGGConfig(),
            "cosmoflow": CosmoFlowConfig(img=128)}
     if name in cnn:
-        return stats_for(cnn[name]), _CNN_DATASETS[name]
+        return cnn[name]
     from ...configs import get_config
-    return stats_for(get_config(name).model, seq), 100_000
+    return get_config(name).model
+
+
+def _model_stats(name: str, seq: int):
+    from ..layer_stats import stats_for
+    mc = _model_config(name)
+    if name in _CNN_DATASETS:
+        return stats_for(mc), _CNN_DATASETS[name]
+    return stats_for(mc, seq), 100_000
 
 
 def _smoke() -> int:
@@ -447,6 +478,10 @@ def main(argv=None) -> int:
     for flag in ("remat", "zero1", "zero3", "seq-parallel"):
         ap.add_argument(f"--{flag}", action="store_true",
                         help=f"memory-model switch (DESIGN.md §3)")
+    ap.add_argument("--phi", default=None, metavar="LVL=PHI[,LVL=PHI...]",
+                    help="per-interconnect contention table, e.g. "
+                         "'data=2.0,model=1.2' (default: the paper's single "
+                         "phi_hybrid=2.0 on the hybrid gradient exchange)")
     ap.add_argument("--strategies", default=",".join(STRATEGY_NAMES))
     ap.add_argument("--crossover", nargs=2, metavar=("BASE", "CHALLENGER"),
                     default=("data", "df"),
@@ -468,7 +503,8 @@ def main(argv=None) -> int:
         batch_of = lambda p: max(int(round(args.batch_per_pe * p)), 1)  # noqa: E731
     cfg = OracleConfig(B=batch_of(max(p_grid)), D=max(D, batch_of(max(p_grid))),
                        remat=args.remat, zero1=args.zero1, zero3=args.zero3,
-                       seq_parallel=args.seq_parallel)
+                       seq_parallel=args.seq_parallel,
+                       phi_levels=parse_phi_table(args.phi))
     cap = (args.mem_cap_gib * 2 ** 30 if args.mem_cap_gib
            else tm.system.mem_capacity)
     strategies = tuple(s for s in args.strategies.split(",") if s)

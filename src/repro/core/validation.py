@@ -30,14 +30,14 @@ EXEC_STRATEGY = {
     "df": "df",
     "ds": "ds",
     "ep": "ep_df",      # expert parallelism executes as the ep_df hybrid rules
+    "pipeline": "pipeline",  # GPipe schedule: measure_step builds the stage
+                             # executor (parallel/pipeline.py), not a plain
+                             # sharded train step
 }
 
-# oracle strategies with NO executable rules table, and why (so validate()
-# skips them explicitly instead of falling through to an unknown name)
+# oracle strategies with NO executable path, and why (so validate() skips
+# them explicitly instead of falling through to an unknown name)
 EXEC_SKIP = {
-    "pipeline": "stage partitioning is a scheduling concern, not a sharding "
-                "rule — no GPipe executor in parallel/strategies.py "
-                "(DESIGN.md §Arch-applicability)",
     "serial": "p=1 baseline needs no sharding rules; measure with a plain "
               "jit step instead",
 }
@@ -58,8 +58,13 @@ class ValidationPoint:
 
 
 def measure_step(model, model_cfg, batch, mesh, strategy: str,
-                 seed: int = 0) -> float:
-    """Measured per-iteration time of a real sharded train step."""
+                 seed: int = 0, segments: int = 8) -> float:
+    """Measured per-iteration time of a real sharded train step.
+
+    ``pipeline`` measures the GPipe stage executor: all p PEs become stages
+    of a (1, p) pipe mesh (the paper's pure "layer" strategy) and the step
+    runs the fill/drain schedule with ``segments`` microbatches.
+    """
     if strategy in EXEC_SKIP:
         raise NotImplementedError(
             f"oracle strategy {strategy!r} is not executable: "
@@ -68,14 +73,31 @@ def measure_step(model, model_cfg, batch, mesh, strategy: str,
         raise KeyError(f"no executable mapping for oracle strategy "
                        f"{strategy!r}; known: {sorted(EXEC_STRATEGY)}, "
                        f"skipped: {sorted(EXEC_SKIP)}")
-    rules = make_rules(EXEC_STRATEGY[strategy])
-    ctx = ShardingCtx(mesh, rules)
     opt = OptimizerConfig(name="sgd", zero1=False)
-    from ..models.transformer import TransformerLM
-    from ..models.vlm import VLM
-    kw = dict(scan_layers=False, attn_impl="plain") \
-        if isinstance(model, (TransformerLM, VLM)) else {}
-    step = make_train_step(model, opt, ctx, **kw)
+    rules = make_rules(EXEC_STRATEGY[strategy])
+    if strategy == "pipeline":
+        from ..launch.compat import make_mesh
+        from ..parallel.pipeline import (block_costs_from_stats,
+                                         clip_segments,
+                                         make_pipeline_train_step)
+        p = int(np.prod(list(mesh.shape.values())))
+        pipe_mesh = make_mesh((1, p), ("data", "model"),
+                              devices=list(np.asarray(mesh.devices).flat))
+        ctx = ShardingCtx(pipe_mesh, rules)
+        tok = batch["tokens"]
+        costs = block_costs_from_stats(stats_for(model_cfg, tok.shape[1]),
+                                       model.cfg.n_layers)
+        step = make_pipeline_train_step(
+            model, opt, ctx, block_costs=costs,
+            segments=clip_segments(tok.shape[0], segments),
+            attn_impl="plain")
+    else:
+        ctx = ShardingCtx(mesh, rules)
+        from ..models.transformer import TransformerLM
+        from ..models.vlm import VLM
+        kw = dict(scan_layers=False, attn_impl="plain") \
+            if isinstance(model, (TransformerLM, VLM)) else {}
+        step = make_train_step(model, opt, ctx, **kw)
     sspec = train_state_spec(model, opt)
     key = jax.random.PRNGKey(seed)
     state = tree_init(sspec, key)
@@ -105,12 +127,28 @@ def validate(model, model_cfg, batch, mesh, strategies, *,
     for s in strategies:
         if s in EXEC_SKIP:      # explicitly not executable; see EXEC_SKIP
             continue
-        meas = measure_step(model, model_cfg, batch, mesh, s)
+        cfg_s = cfg
+        if s == "pipeline":
+            # skip (don't abort the whole run) when the executor cannot
+            # realize p stages on this model; project under the segment
+            # count it will actually run otherwise
+            from ..parallel.pipeline import clip_segments, pipeline_supported
+            reason = pipeline_supported(model)
+            n_blocks = getattr(getattr(model, "cfg", None), "n_layers", 0)
+            if reason is None and p > n_blocks:
+                reason = f"p={p} stages exceed the model's {n_blocks} blocks"
+            if reason is not None:
+                print(f"validate: skipping pipeline — {reason}")
+                continue
+            cfg_s = dataclasses.replace(cfg, segments=clip_segments(
+                B, cfg.segments))
+        meas = measure_step(model, model_cfg, batch, mesh, s,
+                            segments=cfg_s.segments)
         kw = {}
         if s in ("df", "ds", "ep"):
             kw = dict(p1=mesh.shape.get("data", 1),
                       p2=mesh.shape.get("model", 1))
-        proj = project(s, stats, tm, cfg, p, **kw)
+        proj = project(s, stats, tm, cfg_s, p, **kw)
         points.append(ValidationPoint(s, p, meas, proj.total_s))
     return points
 

@@ -178,7 +178,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     # 2. 1-group / 2-group unrolled variants ---------------------------------
     period = _pattern_period(cell.model)
     n_groups = cell.n_scan_groups
-    if n_groups > 1:
+    if strategy == "pipeline":
+        # the GPipe step owns the whole stack (stages = mesh model axis);
+        # a 1-layer override cannot cut into the same stage count, so the
+        # full-scan cost stands un-extrapolated
+        total = full
+    elif n_groups > 1:
         g_cells = []
         for k in (1, 2):
             c = build_cell(cfg, shape_name, mesh, strategy, scan_layers=False,

@@ -51,10 +51,12 @@ def main(argv=None) -> None:
         # switches=None: the serving exec path deploys no memory switches
         # (no optimizer to ZeRO-shard, no backward to remat), so the plan
         # must not claim feasibility through them
+        # allow_pipeline=False: GPipe is a training schedule (fill/drain
+        # over microbatches) — serving must never rank it
         plan = autotune(stats_for_model(mc, args.prompt_len + args.gen),
                         TimeModel(cpu_host_model()),
                         OracleConfig(B=B, D=B), n, fallback="serve_tp",
-                        switches=None)
+                        switches=None, allow_pipeline=False)
         print(plan.describe())
         strategy = plan.exec_strategy("decode")
         mesh = make_host_mesh(model=plan.p2 if n % plan.p2 == 0 else None)

@@ -81,19 +81,22 @@ def main(argv=None) -> None:
         from ..core.autotune import autotune, stats_for_model
         from ..core.hardware import cpu_host_model
         from ..core.oracle import OracleConfig, TimeModel
+        from ..parallel.pipeline import pipeline_supported
         n = len(jax.devices())
         plan = autotune(stats_for_model(mc, args.seq),
                         TimeModel(cpu_host_model()),
                         OracleConfig(B=args.batch, D=args.batch), n,
                         fallback=cfg.strategy,
-                        allow_remat=cfg.family != "cnn")
+                        allow_remat=cfg.family != "cnn",
+                        allow_pipeline=pipeline_supported(mc) is None,
+                        max_stages=getattr(mc, "n_layers", None))
         print(plan.describe())
         strategy = plan.exec_strategy("train")
         mesh = make_host_mesh(model=plan.p2 if n % plan.p2 == 0 else None)
         opt = OptimizerConfig(lr=args.lr, zero1=plan.zero1)
     else:
         mesh = make_host_mesh()
-        opt = OptimizerConfig(lr=args.lr, zero1=True)
+        opt = OptimizerConfig(lr=args.lr, zero1=strategy != "pipeline")
     rules = make_rules(strategy)
     ctx = ShardingCtx(mesh, rules)
 
@@ -103,8 +106,28 @@ def main(argv=None) -> None:
                       q_chunk=min(256, args.seq))
     if plan is not None and cfg.family in ("lm", "vlm", "encdec"):
         fwd_kw["remat"] = plan.remat    # deploy the plan's remat switch
-    step = jax.jit(make_train_step(model, opt, ctx, accum=args.accum, **fwd_kw),
-                   donate_argnums=(0,))
+    if strategy == "pipeline":
+        # GPipe stage schedule over the mesh's model axis; S = what the
+        # plan's projection assumed (default 8), clipped to divide the
+        # batch; stage cuts = the DP partitioner over per-block costs
+        from ..core.autotune import stats_for_model
+        from ..parallel.pipeline import (block_costs_from_stats,
+                                         clip_segments,
+                                         make_pipeline_train_step)
+        if args.accum != 1:
+            raise SystemExit("--accum > 1 is not supported with "
+                             "--strategy pipeline (the GPipe microbatches "
+                             "are the accumulation schedule)")
+        seg = plan.segments if plan is not None else 8
+        costs = block_costs_from_stats(stats_for_model(mc, args.seq),
+                                       mc.n_layers)
+        step = jax.jit(make_pipeline_train_step(
+            model, opt, ctx, block_costs=costs,
+            segments=clip_segments(args.batch, seg),
+            **fwd_kw), donate_argnums=(0,))
+    else:
+        step = jax.jit(make_train_step(model, opt, ctx, accum=args.accum,
+                                       **fwd_kw), donate_argnums=(0,))
     sspec = train_state_spec(model, opt)
     state = tree_init(sspec, jax.random.PRNGKey(args.seed))
 

@@ -10,7 +10,9 @@ paper §3.2 spatial   → seq (or image H/W) over model; params replicated ("ds"
                        when combined with batch over data)
 paper §3.3 filter    → heads/mlp/filters (output channels) over model
 paper §3.3 channel   → embed/input channels over model (row-parallel)
-paper §3.4 layer     → pipeline stages (parallel/pipeline.py)
+paper §3.4 layer     → pipeline stages: params shard over "layers", the
+                       GPipe schedule itself is parallel/pipeline.py's
+                       make_pipeline_train_step (deployable since ISSUE 3)
 paper §3.5 hybrid    → df / ds compositions
 beyond-paper         → ZeRO-1/3 (optimizer/param sharding over data),
                        expert parallelism, sequence-parallel residual stream
@@ -40,9 +42,15 @@ def _act_common(seq_parallel: bool = True):
 
 
 STRATEGIES: dict[str, dict] = {
-    # --- pure strategies (paper §3.1–3.3) --------------------------------
+    # --- pure strategies (paper §3.1–3.4) --------------------------------
     "data": {"batch": ALL},
     "spatial": {"spatial": "model", "seq": "model", "batch": DP},
+    # layer (pipeline): stage SCHEDULING lives in parallel/pipeline.py
+    # (make_pipeline_train_step); the rules table only places the stacked
+    # block parameters — their leading "layers" axis shards over the model
+    # axis so each rank holds its stages' weights, everything else
+    # replicates. Activations hop stages via gpipe's collective_permute.
+    "pipeline": {"layers": "model"},
     "filter": {**_act_common(), "heads": ("data", "model"),
                "kv_heads": ("data", "model"), "mlp": ("data", "model"),
                "conv_out": ("data", "model"), "batch": ("pod",)},

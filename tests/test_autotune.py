@@ -37,8 +37,10 @@ def _weak(p, per_pe=2.0):
     (1024, "df", (512, 2)),     # Fig. 5 regime: hybrid df past the p=512
 ])                              # data→df crossover (test_sweep golden)
 def test_autotune_resnet50_pins(p, want_strategy, want_split):
+    # CNN trunks cannot stack uniform stages, so the realistic call bars
+    # pipeline exactly as plan_for_arch does for cnn-family archs
     plan = autotune(stats_for(RESNET50), TM, _weak(p), p, mem_cap=CAP,
-                    fallback="data")
+                    fallback="data", allow_pipeline=False)
     assert plan.feasible and plan.source == "sweep"
     assert plan.strategy == want_strategy
     assert (plan.p1, plan.p2) == want_split
@@ -54,7 +56,7 @@ def test_autotune_cosmoflow_pins(p, want_strategy):
     B = max(int(round(0.25 * p)), 1)    # Fig-5 setting: 0.25 samples/PE
     cfg = OracleConfig(B=B, D=max(1584, B))
     plan = autotune(stats_for(CosmoFlowConfig(img=128)), TM, cfg, p,
-                    mem_cap=CAP, fallback="ds")
+                    mem_cap=CAP, fallback="ds", allow_pipeline=False)
     assert plan.feasible, plan
     assert plan.strategy == want_strategy, plan.describe()
     assert plan.p1 * plan.p2 == p

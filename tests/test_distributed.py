@@ -9,11 +9,23 @@ HELPER = os.path.join(os.path.dirname(__file__), "helpers",
                       "multidevice_checks.py")
 
 
-def run_check(name: str, timeout: int = 420):
+def run_check(name: str, timeout: int = 420, retries: int = 0):
+    """Run one multidevice check in a subprocess.
+
+    ``retries``: timing-based checks (calibrate-then-measure on a
+    CPU-quota-throttled container) can skew when the box stalls mid-check;
+    a retry must still pass the FULL check — assertions are never relaxed.
+    """
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, HELPER, name], env=env,
-                         capture_output=True, text=True, timeout=timeout)
+    for attempt in range(retries + 1):
+        out = subprocess.run([sys.executable, HELPER, name], env=env,
+                             capture_output=True, text=True, timeout=timeout)
+        if "CHECK-PASSED" in out.stdout:
+            return
+        if attempt < retries:
+            print(f"{name}: attempt {attempt + 1} failed, retrying "
+                  f"(timing-sensitive check)")
     assert "CHECK-PASSED" in out.stdout, \
         f"{name} failed:\nstdout:{out.stdout[-2000:]}\nstderr:{out.stderr[-3000:]}"
 
@@ -21,6 +33,26 @@ def run_check(name: str, timeout: int = 420):
 @pytest.mark.slow
 def test_pipeline_parallel():
     run_check("pipeline")
+
+
+@pytest.mark.slow
+def test_pipeline_train_step_gradient_parity():
+    run_check("pipeline_step_parity")
+
+
+@pytest.mark.slow
+def test_pipeline_plan_deploys_and_trains():
+    run_check("pipeline_deploy")
+
+
+@pytest.mark.slow
+def test_pipeline_validation_measures():
+    run_check("pipeline_validation", retries=1)
+
+
+@pytest.mark.slow
+def test_tuner_pick_beats_runner_up_measured():
+    run_check("tuner_loop", retries=1)
 
 
 @pytest.mark.slow
@@ -35,7 +67,7 @@ def test_dp_tp_numerics_match_single_device():
 
 @pytest.mark.slow
 def test_oracle_validation_harness():
-    run_check("oracle_validation")
+    run_check("oracle_validation", retries=1)
 
 
 @pytest.mark.slow

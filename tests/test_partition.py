@@ -1,0 +1,151 @@
+"""DP stage partitioner: brute-force parity, balanced-split dominance, and
+the oracle's non-uniform pipeline row built on top of it.
+
+Acceptance (ISSUE 3): the DP partition must match brute-force enumeration on
+≤12-layer tables, and on a skewed layer table the projected pipeline time
+with non-uniform stages must be strictly below the balanced(-layer-count)
+stage projection.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import OracleConfig, TimeModel, cpu_host_model, project
+from repro.core.layer_stats import LayerStat
+from repro.core.oracle import pipeline_stage_terms, precompute
+from repro.core.partition import (balanced_partition, cut_values,
+                                  min_max_partition, stage_sums)
+
+SYS = cpu_host_model(alpha=1e-5, beta=1e-9, flops=1e12)
+
+
+def brute_force_max(costs, k):
+    """Min over ALL contiguous k-partitions of the max stage sum."""
+    n = len(costs)
+    best = np.inf
+    for cuts in itertools.combinations(range(1, n), k - 1):
+        bounds = (0,) + cuts + (n,)
+        best = min(best, float(stage_sums(costs, bounds).max()))
+    return best
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("k", [1, 2, 3, 5])
+def test_dp_matches_brute_force(seed, k):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(k, 13))        # ≤ 12 layers: exhaustible
+    costs = rng.uniform(0.1, 10.0, n)
+    part = min_max_partition(costs, k)
+    assert part.bounds[0] == 0 and part.bounds[-1] == n
+    assert all(b < a for b, a in zip(part.bounds, part.bounds[1:]))
+    got = float(stage_sums(costs, part.bounds).max())
+    assert np.isclose(got, part.max_cost, rtol=1e-12)
+    assert np.isclose(got, brute_force_max(costs, k), rtol=1e-12)
+
+
+def test_dp_never_worse_than_balanced_counts():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        n = int(rng.integers(4, 40))
+        k = int(rng.integers(2, min(n, 9)))
+        costs = rng.uniform(0.0, 5.0, n)
+        dp = min_max_partition(costs, k)
+        bal = balanced_partition(n, k)
+        assert dp.max_cost <= float(stage_sums(costs, bal.bounds).max()) + 1e-15
+
+
+def test_dp_strictly_beats_balanced_on_skew():
+    """Skewed costs: one fat layer at the head; equal-count stages pair it
+    with neighbours while the DP isolates it."""
+    costs = np.array([10.0, 1, 1, 1, 1, 1, 1, 1])
+    dp = min_max_partition(costs, 4)
+    bal = balanced_partition(8, 4)
+    assert dp.max_cost == 10.0
+    assert float(stage_sums(costs, bal.bounds).max()) == 11.0
+    assert dp.max_cost < float(stage_sums(costs, bal.bounds).max())
+
+
+def test_cut_values_picks_boundary_layers():
+    y = np.array([5.0, 7.0, 2.0, 9.0, 1.0])
+    assert list(cut_values(y, (0, 2, 4, 5))) == [7.0, 9.0]
+    assert cut_values(y, (0, 5)).size == 0
+    assert balanced_partition(5, 2).counts() == (3, 2)
+
+
+def test_partition_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        min_max_partition(np.ones(3), 4)     # more stages than layers
+    with pytest.raises(ValueError):
+        min_max_partition(np.array([1.0, -1.0]), 1)
+    with pytest.raises(ValueError):
+        balanced_partition(3, 0)
+
+
+# ---------------------------------------------------------------------------
+# oracle integration: the pipeline row rides the DP cuts
+# ---------------------------------------------------------------------------
+
+def _skewed_stats():
+    """8 uniform-ish layers with one dominant head layer and one fat
+    activation in the middle (so cut placement matters for p2p too)."""
+    mk = lambda name, flops, y: LayerStat(   # noqa: E731
+        name, "conv", x=1024, y=y, w=4096, flops_fwd=flops, F=64, C=64,
+        spatial=32)
+    return [mk("l0", 8e9, 1024), mk("l1", 1e9, 1024), mk("l2", 1e9, 65536),
+            mk("l3", 1e9, 1024), mk("l4", 1e9, 1024), mk("l5", 1e9, 1024),
+            mk("l6", 1e9, 1024), mk("l7", 1e9, 1024)]
+
+
+def test_oracle_pipeline_uses_dp_cuts_not_balanced():
+    """Acceptance: projected pipeline time with DP stages strictly below the
+    balanced-layer-count stage projection on a skewed table."""
+    stats = _skewed_stats()
+    tm = TimeModel(SYS)
+    cfg = OracleConfig(B=64, D=640)
+    p, S = 4, cfg.segments
+    proj = project("pipeline", stats, tm, cfg, p)
+    T = precompute(stats, tm)
+    mfw, mbw, mwu, ycut, *_ = pipeline_stage_terms(T, p)
+    # DP bottleneck == what the oracle projected
+    want_comp = cfg.D * (p + S - 1) / S * (mfw + mbw) \
+        + proj.iterations * mwu
+    assert np.isclose(proj.comp_s, want_comp, rtol=1e-12)
+    # balanced-count projection is strictly worse on this table
+    bal = balanced_partition(T.n, p)
+    bal_fw = float(stage_sums(T.fw, bal.bounds).max())
+    bal_bw = float(stage_sums(T.bw, bal.bounds).max())
+    bal_comp = cfg.D * (p + S - 1) / S * (bal_fw + bal_bw) \
+        + proj.iterations * float(stage_sums(T.wu, bal.bounds).max())
+    assert proj.comp_s < bal_comp
+    # boundary activations come from the ACTUAL cut points of the deployed
+    # partition — not the global max layer output the old row used
+    bounds = min_max_partition(T.fw + T.bw, p).bounds
+    assert ycut == float(cut_values(T.y, bounds).max())
+
+
+def test_oracle_pipeline_p2p_zero_at_single_stage():
+    stats = _skewed_stats()
+    proj = project("pipeline", stats, TimeModel(SYS), OracleConfig(B=64, D=640), 1)
+    assert proj.comm_p2p_s == 0.0
+
+
+def test_phi_levels_table_overrides_defaults():
+    """Per-interconnect φ: a {'data': φ} entry rescales the hybrid gradient
+    exchange; no table preserves the phi_hybrid constant exactly."""
+    stats = _skewed_stats()
+    tm = TimeModel(SYS)
+    base = OracleConfig(B=256, D=2560)
+    same = OracleConfig(B=256, D=2560, phi_levels={"data": base.phi_hybrid})
+    up = OracleConfig(B=256, D=2560, phi_levels={"data": 4.0})
+    a = project("df", stats, tm, base, 16, p1=4, p2=4)
+    b = project("df", stats, tm, same, 16, p1=4, p2=4)
+    c = project("df", stats, tm, up, 16, p1=4, p2=4)
+    assert a.comm_ge_s == b.comm_ge_s
+    assert c.comm_ge_s > a.comm_ge_s
+    # model-level φ scales the FB bandwidth term (α part unchanged)
+    m = OracleConfig(B=256, D=2560, phi_levels={"model": 2.0})
+    f1 = project("filter", stats, tm, base, 8)
+    f2 = project("filter", stats, tm, m, 8)
+    assert f2.comm_fb_s > f1.comm_fb_s
+    assert same.phi_for("model") == 1.0 and up.phi_for("data", 2.0) == 4.0
