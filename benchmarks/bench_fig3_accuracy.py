@@ -41,7 +41,9 @@ def run():
     for pt in pts:
         rows.append((f"fig3/{pt.strategy}/p{pt.p}", pt.measured_s * 1e6,
                      f"projected_us={pt.projected_s*1e6:.1f};"
-                     f"accuracy={pt.accuracy*100:.1f}%"))
+                     f"accuracy={pt.accuracy*100:.1f}%;"
+                     f"serial_us={pt.projected_serial_s*1e6:.1f};"
+                     f"accuracy_serial={pt.accuracy_serial*100:.1f}%"))
     import numpy as np
     mean_acc = float(np.mean([pt.accuracy for pt in pts]))
     rows.append(("fig3/mean_accuracy", 0.0, f"accuracy={mean_acc*100:.2f}%"))

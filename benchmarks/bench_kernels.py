@@ -1,62 +1,136 @@
 """Kernel micro-benchmarks: Pallas (interpret) vs jnp reference wall time.
 
 interpret-mode timings are NOT TPU performance (the kernels target TPU; this
-box is CPU) — the derived column reports the ref wall time and the FLOPs the
-kernel would execute, which the roofline converts to TPU projections.
+box is CPU) — but they ARE a regression signal for the kernel bodies
+themselves, so every Pallas kernel is timed here alongside its reference,
+and the run lands in ``BENCH_kernels.json`` at the repo root so the perf
+trajectory records across PRs. The derived column carries the FLOPs/bytes
+the kernel would execute, which the roofline converts to TPU projections.
+
+``--smoke`` shrinks shapes/iters for the CI gate (scripts/check.sh): it
+still runs every kernel (a kernel that stops compiling fails the gate) and
+still writes the artifact.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import (attention_ref, conv2d_ref, rmsnorm_ref, ssd_chunk, ssd_ref)
+from repro.kernels import (attention_ref, conv2d_gemm, conv2d_ref,
+                           flash_attention, rmsnorm, rmsnorm_ref, ssd_chunk,
+                           ssd_ref)
 
 from .common import emit, note, timed
 
+_ROOT = os.path.dirname(os.path.dirname(__file__))
+ARTIFACT = os.path.join(_ROOT, "BENCH_kernels.json")
+# --smoke shapes/iters are incomparable with full runs, so the CI gate
+# writes its own (gitignored) artifact and never clobbers the committed
+# perf trajectory
+SMOKE_ARTIFACT = os.path.join(_ROOT, "BENCH_kernels_smoke.json")
 
-def run():
+
+def run(smoke: bool = False):
     key = jax.random.PRNGKey(0)
     rows = []
-    # flash attention
-    B, H, S, D = 1, 4, 512, 64
+    it = dict(iters=1, warmup=1) if smoke else dict(iters=3, warmup=1)
+
+    # flash attention — ref AND the Pallas kernel (interpret)
+    B, H, S, D = (1, 2, 128, 32) if smoke else (1, 4, 512, 64)
     q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, H, S, D))
                for i in range(3))
-    t_ref = timed(lambda: attention_ref(q, k, v))
     flops = 4 * B * H * S * S * D / 2
+    t_ref = timed(lambda: attention_ref(q, k, v), **it)
     rows.append((f"kernels/flash_attention/ref/S{S}", t_ref * 1e6,
                  f"flops={flops:.3e};tpu_proj_us={flops/197e12*1e6:.2f}"))
-    # ssd
-    Bs, Ss, Hs, P, N = 1, 512, 4, 16, 32
+    t_k = timed(lambda: flash_attention(q, k, v, causal=True, interpret=True),
+                **it)
+    rows.append((f"kernels/flash_attention/pallas_interpret/S{S}", t_k * 1e6,
+                 f"flops={flops:.3e};ref_ratio={t_k/t_ref:.2f}x"))
+
+    # ssd — naive recurrence, chunk kernel (interpret)
+    Bs, Ss, Hs, P, N = (1, 128, 2, 8, 16) if smoke else (1, 512, 4, 16, 32)
     x = jax.random.normal(key, (Bs, Ss, Hs, P)) * 0.5
     dt = jax.nn.softplus(jax.random.normal(key, (Bs, Ss, Hs)))
     A = -jnp.exp(jax.random.normal(key, (Hs,)) * 0.3)
     Bm = jax.random.normal(key, (Bs, Ss, Hs, N)) * 0.5
     Cm = jax.random.normal(key, (Bs, Ss, Hs, N)) * 0.5
-    t_ref = timed(lambda: ssd_ref(x, dt, A, Bm, Cm))
+    t_ref = timed(lambda: ssd_ref(x, dt, A, Bm, Cm), **it)
     rows.append((f"kernels/ssd/naive_ref/S{Ss}", t_ref * 1e6, "recurrence"))
-    t_k = timed(lambda: ssd_chunk(x, dt, A, Bm, Cm, chunk=64, interpret=True))
+    t_k = timed(lambda: ssd_chunk(x, dt, A, Bm, Cm, chunk=64, interpret=True),
+                **it)
     rows.append((f"kernels/ssd/chunk_interpret/S{Ss}", t_k * 1e6,
                  f"speedup_vs_naive={t_ref/t_k:.2f}x"))
-    # conv
-    xc = jax.random.normal(key, (4, 32, 32, 64))
-    wc = jax.random.normal(key, (3, 3, 64, 128)) * 0.1
-    t_ref = timed(lambda: conv2d_ref(xc, wc))
-    flops = 2 * 4 * 32 * 32 * 64 * 128 * 9
-    rows.append(("kernels/conv2d/ref/32x32x64x128", t_ref * 1e6,
+
+    # conv2d implicit GEMM — the CNN hot path: stride-1, ResNet's stride-2
+    # bottleneck shape, and the halo-aware entry (pre-exchanged tile)
+    HWC = (4, 16, 16, 32) if smoke else (4, 32, 32, 64)
+    F = 64 if smoke else 128
+    xc = jax.random.normal(key, HWC)
+    wc = jax.random.normal(key, (3, 3, HWC[-1], F)) * 0.1
+    flops = 2 * HWC[0] * HWC[1] * HWC[2] * HWC[3] * F * 9
+    t_ref = timed(lambda: conv2d_ref(xc, wc), **it)
+    shape_tag = "x".join(str(d) for d in HWC[1:]) + f"x{F}"
+    rows.append((f"kernels/conv2d/ref/{shape_tag}", t_ref * 1e6,
                  f"flops={flops:.3e};tpu_proj_us={flops/197e12*1e6:.2f}"))
-    # rmsnorm
-    xr = jax.random.normal(key, (4096, 1024))
-    sc = jnp.ones((1024,))
-    t_ref = timed(lambda: rmsnorm_ref(xr, sc))
-    rows.append(("kernels/rmsnorm/ref/4096x1024", t_ref * 1e6,
-                 f"bytes={xr.size*4*2:.3e};"
-                 f"tpu_proj_us={xr.size*4*2/819e9*1e6:.2f}"))
+    t_k = timed(lambda: conv2d_gemm(xc, wc, interpret=True), **it)
+    rows.append((f"kernels/conv2d/gemm_interpret/{shape_tag}", t_k * 1e6,
+                 f"flops={flops:.3e};ref_ratio={t_k/t_ref:.2f}x"))
+    t_s2 = timed(lambda: conv2d_gemm(xc, wc, strides=(2, 2), interpret=True),
+                 **it)
+    rows.append((f"kernels/conv2d/gemm_interpret_s2/{shape_tag}", t_s2 * 1e6,
+                 f"flops={flops/4:.3e};resnet_bottleneck_stride2"))
+    xh = jax.random.normal(key, (HWC[0], HWC[1] + 2, HWC[2], HWC[3]))
+    t_h = timed(lambda: conv2d_gemm(xh, wc, pad_h=False, interpret=True),
+                **it)
+    rows.append((f"kernels/conv2d/gemm_interpret_halo/{shape_tag}",
+                 t_h * 1e6, "pad_h=False;consumes pre-exchanged tile"))
+
+    # rmsnorm — ref AND kernel
+    R, Dm = (512, 256) if smoke else (4096, 1024)
+    xr = jax.random.normal(key, (R, Dm))
+    sc = jnp.ones((Dm,))
+    nbytes = xr.size * 4 * 2
+    t_ref = timed(lambda: rmsnorm_ref(xr, sc), **it)
+    rows.append((f"kernels/rmsnorm/ref/{R}x{Dm}", t_ref * 1e6,
+                 f"bytes={nbytes:.3e};tpu_proj_us={nbytes/819e9*1e6:.2f}"))
+    t_k = timed(lambda: rmsnorm(xr, sc, interpret=True), **it)
+    rows.append((f"kernels/rmsnorm/pallas_interpret/{R}x{Dm}", t_k * 1e6,
+                 f"bytes={nbytes:.3e};ref_ratio={t_k/t_ref:.2f}x"))
     return rows
 
 
-def main():
-    note("kernel micro-benchmarks (CPU wall; TPU projections in derived)")
-    emit(run())
+def write_artifact(rows, smoke: bool) -> str:
+    rec = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "backend": jax.default_backend(), "smoke": smoke,
+           "rows": [{"name": n, "us_per_call": round(us, 3), "derived": d}
+                    for n, us, d in rows]}
+    path = SMOKE_ARTIFACT if smoke else ARTIFACT
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.bench_kernels")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes, 1 timed iter (CI gate); still runs "
+                         "every Pallas kernel, writes the side artifact "
+                         "(the committed trajectory records full runs only)")
+    # parse_known_args: benchmarks.run invokes main() programmatically —
+    # a foreign sys.argv flag must not SystemExit the whole suite
+    args, _ = ap.parse_known_args(argv)
+    note("kernel micro-benchmarks (CPU wall incl. Pallas interpret mode; "
+         "TPU projections in derived)")
+    rows = run(smoke=args.smoke)
+    emit(rows)
+    note(f"wrote {write_artifact(rows, args.smoke)}")
 
 
 if __name__ == "__main__":

@@ -235,6 +235,61 @@ def crosscheck_section(recs: list) -> str:
     return "\n".join(out)
 
 
+OVERLAP_HDR = ("| strategy | p | measured ms | overlap model ms | accuracy |"
+               " serial model ms | accuracy |\n|---|---|---|---|---|---|---|")
+
+
+def overlap_section(here: pathlib.Path) -> str:
+    """Overlap-model vs serial-model accuracy on the measured ds step.
+
+    Reads the artifact written by the overlap smoke
+    (``python tests/helpers/multidevice_checks.py
+    spatial_overlap_validation --write
+    experiments/spatial_overlap_validation.json`` — scripts/check.sh runs
+    it).
+    """
+    out = ["### Overlap validation (oracle-with-overlap vs serial model "
+           "vs measured)", "",
+           "ISSUE 4: the oracle charges *exposed* communication — halo P2P "
+           "hides under interior conv compute (σ_model=0.9 by default), "
+           "the gradient exchange under backward compute (σ_data=0.8); "
+           "`--no-overlap` restores the paper's serial accounting. σ is a "
+           "per-system empirical parameter like α–β (ROADMAP φ/σ fitting), "
+           "so the host check follows the paper's calibrate-then-validate "
+           "methodology: one calibration, σ̂ fitted on the measured B=2 "
+           "spatial (`ds`) step, validated against the serial model on the "
+           "held-out B=4 step (`spatial_overlap_validation` multidevice "
+           "check).", ""]
+    art = here / "spatial_overlap_validation.json"
+    if not art.exists():
+        out.append("_no overlap validation artifact yet — run "
+                   "`scripts/check.sh` (or the `spatial_overlap_validation` "
+                   "multidevice check with `--write`)_")
+        return "\n".join(out)
+    rec = json.loads(art.read_text())
+    mesh = "×".join(str(v) for v in rec["mesh"].values())
+    sig = rec.get("sigma_fitted")
+    out += [f"Model `{rec['model']}` (GE-dominated comm), mesh {mesh}, "
+            f"held-out B={rec['B']}"
+            + (f", fitted σ̂={sig:.2f}" if sig is not None else "")
+            + ":", "", OVERLAP_HDR]
+    for pt in rec["points"]:
+        out.append(f"| {pt['strategy']} | {pt['p']} | "
+                   f"{pt['measured_s'] * 1e3:,.1f} | "
+                   f"{pt['projected_s'] * 1e3:,.1f} | "
+                   f"**{pt['accuracy'] * 100:.1f}%** | "
+                   f"{pt['projected_serial_s'] * 1e3:,.1f} | "
+                   f"{pt['accuracy_serial'] * 100:.1f}% |")
+    out += ["",
+            "Projection-side shift at scale (paper V100 model, CosmoFlow "
+            "0.25 samples/PE weak scaling): the spatial→ds crossover moves "
+            "from p=64 (serial accounting) to p=128 (overlap on) — pure "
+            "spatial stays ahead while its halo exchange is hidden; the "
+            "resnet50 data→df crossover stays at p=512 (GE overlap "
+            "discounts both sides alike)."]
+    return "\n".join(out)
+
+
 def pipeline_section(here: pathlib.Path) -> str:
     """Measured GPipe runs vs the oracle's non-uniform pipeline row.
 
@@ -292,8 +347,12 @@ def main():
                       "### Per-cell observations")
     t = ensure_marker(t, "### Oracle vs HLO cross-check",
                       "### Per-cell observations")
+    # order matters: "### Pipeline validation" must exist before it can
+    # anchor the overlap marker (legacy files predate both)
     t = ensure_marker(t, "### Pipeline validation",
                       "### Per-cell observations")
+    t = ensure_marker(t, "### Overlap validation",
+                      "### Pipeline validation")
     recs = load_dryrun(here)
     dry, n_base, n_opt = dryrun_sections(recs)
     t = replace_between(t, "### Baseline cells",
@@ -303,12 +362,15 @@ def main():
     t = replace_between(t, "### Auto-tuner decisions",
                         "### Oracle vs HLO cross-check", tuner_section())
     t = replace_between(t, "### Oracle vs HLO cross-check",
-                        "### Pipeline validation", crosscheck_section(recs))
+                        "### Overlap validation", crosscheck_section(recs))
+    t = replace_between(t, "### Overlap validation",
+                        "### Pipeline validation", overlap_section(here))
     t = replace_between(t, "### Pipeline validation",
                         "### Per-cell observations", pipeline_section(here))
     exp.write_text(t)
     print(f"refreshed: {n_base} baseline + {n_opt} variant dry-run cells "
-          f"+ oracle sweep / auto-tuner / cross-check / pipeline tables")
+          f"+ oracle sweep / auto-tuner / cross-check / overlap / pipeline "
+          f"tables")
 
 
 if __name__ == "__main__":

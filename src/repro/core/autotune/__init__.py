@@ -326,7 +326,8 @@ def _smoke() -> int:
 
 
 def main(argv=None) -> int:
-    from ..sweep import _SYSTEMS, _model_config, _model_stats
+    from ..sweep import (_SYSTEMS, _model_config, _model_stats,
+                         parse_sigma_table)
     ap = argparse.ArgumentParser(
         prog="python -m repro.core.autotune",
         description="Oracle-in-the-loop auto-tuner: what should I run on "
@@ -353,11 +354,18 @@ def main(argv=None) -> int:
                          "'pipeline' to force a stage-parallel plan)")
     ap.add_argument("--no-switches", action="store_true",
                     help="pin memory switches off instead of sweeping all 16")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="rank under the paper's serial comm accounting "
+                         "instead of the overlap model (DESIGN.md §10)")
+    ap.add_argument("--sigma", default=None, metavar="LVL=SIG[,LVL=SIG...]",
+                    help="per-interconnect overlap efficiency table, e.g. "
+                         "'model=0.9,data=0.8' (the defaults)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny self-check (CI gate)")
     args = ap.parse_args(argv)
     if args.smoke:
         return _smoke()
+    sigma = parse_sigma_table(args.sigma)
 
     stats, default_D = _model_stats(args.model, args.seq)
     # the CLI's recommendations must honor the same deployability gates as
@@ -377,7 +385,8 @@ def main(argv=None) -> int:
     for p in p_grid:
         B = args.batch or max(int(round(args.batch_per_pe * p)), 1)
         D = max(args.dataset or default_D, B)
-        cfg = OracleConfig(B=B, D=D)
+        cfg = OracleConfig(B=B, D=D, overlap=not args.no_overlap,
+                           sigma_levels=sigma)
         plan = autotune(stats, tm, cfg, p, mem_cap=cap,
                         switches=None if args.no_switches else "all",
                         fallback=args.fallback,

@@ -37,6 +37,15 @@ STRATEGY_NAMES = ("serial", "data", "spatial", "pipeline", "filter", "channel",
 # layer kinds that expose a filter/channel split dimension (paper Table 2)
 SPLIT_KINDS = ("conv", "fc", "attn", "ffn", "moe", "ssm", "rec")
 
+# Default per-interconnect overlap efficiencies σ ∈ [0, 1] (DESIGN.md §10).
+# The paper — like its Table 3 — charges every comm term serially; the
+# executor does not: the halo exchange runs under the interior convolution
+# (parallel/halo.py, after Dryden et al. — near-full hiding, σ ≈ 0.9) and
+# the gradient allreduce pipelines under backward compute (σ ≈ 0.8, the
+# standard DP bucketing overlap). ``OracleConfig.overlap=False`` restores
+# the paper's serial accounting exactly (σ ≡ 0).
+SIGMA_DEFAULTS = {"model": 0.9, "data": 0.8}
+
 
 @dataclass(frozen=True)
 class TimeModel:
@@ -109,6 +118,16 @@ class OracleConfig:
     # FB/halo/P2P terms to 1.0. No term crosses the pod/DCI hop separately
     # yet, so a "pod" entry has nothing to scale (the CLI rejects it).
     phi_levels: "dict | tuple | None" = None
+    # comm/compute overlap model (DESIGN.md §10). ``overlap=False``
+    # reproduces the paper's serial accounting bit-for-bit; with it on, the
+    # halo P2P hides under the halo layers' interior compute (model level)
+    # and the gradient exchange under backward compute (data level), each
+    # discounted by a per-interconnect efficiency σ — SIGMA_DEFAULTS unless
+    # a calibrated ``sigma_levels`` table overrides them. FB collectives
+    # (filter/channel allgathers) and pipeline stage P2P stay serial: their
+    # consumers data-depend on the transfer.
+    overlap: bool = True
+    sigma_levels: "dict | tuple | None" = None
     segments: int = 8             # pipeline micro-batch segments S
     zero1: bool = False           # shard WU across DP ranks ([52], §5.3.3)
     # beyond-paper memory-model extensions (DESIGN.md §3):
@@ -129,6 +148,19 @@ class OracleConfig:
             if k == level:
                 return float(v)
         return default
+
+    def sigma_for(self, level: str) -> float:
+        """Overlap efficiency for one interconnect level; 0 (fully serial,
+        the paper's model) when ``overlap`` is off. Clamped to [0, 1]."""
+        if not self.overlap:
+            return 0.0
+        t = self.sigma_levels
+        if t is not None:
+            items = t.items() if isinstance(t, dict) else t
+            for k, v in items:
+                if k == level:
+                    return min(max(float(v), 0.0), 1.0)
+        return SIGMA_DEFAULTS.get(level, 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +191,8 @@ class StatTable:
     y_max: float                 # pipeline stage-boundary bound
     n_halo: int
     halo_sum: float
+    halo_fw_bw: float            # Σ_{l: halo>0} (fw_l + bw_l) — the interior
+                                 # compute a spatial halo exchange hides under
     sp_min: int                  # min spatial extent over conv/attn layers
     any_recurrent: bool
     minF: int | None             # over SPLIT_KINDS layers; None = no such layer
@@ -212,6 +246,7 @@ def _build_table(stats, tm: TimeModel) -> StatTable:
         xy_sum=float(np.sum(x + y)), y_head_sum=float(np.sum(y[:-1])),
         y_max=float(y.max()) if len(y) else 0.0,
         n_halo=int(hm.sum()), halo_sum=float(halo[hm].sum()),
+        halo_fw_bw=float((fw[hm] + bw[hm]).sum()),
         sp_min=int(sp_cand.min()) if sp_cand.size else 1,
         any_recurrent=bool(rec.any()),
         minF=int(F[split].min()) if split.any() else None,
@@ -310,6 +345,30 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
     phi_ge = cfg.phi_for("data", cfg.phi_hybrid)
     phi_m = cfg.phi_for("model", 1.0)
 
+    # comm/compute overlap (DESIGN.md §10): a comm term T with a concurrent
+    # compute window W is charged at its EXPOSED cost T − σ·min(W, T), i.e.
+    # the step pays max(W', φT) + (1−σ)·min(W', φT) instead of W' + φT over
+    # the window. σ = 0 (overlap off) restores the paper's serial sum
+    # exactly. The halo exchange hides under the halo layers' interior
+    # fw+bw (the overlapped executor, parallel/halo.py); the gradient
+    # exchange hides under backward compute (DP bucketing).
+    sig_m = cfg.sigma_for("model")
+    sig_d = cfg.sigma_for("data")
+
+    def exposed(comm, window, sigma):
+        return comm - sigma * np.minimum(window, comm)
+
+    def halo_and_ge(halo_full, ge_full, bw_epoch):
+        """Exposed (halo, ge) for the spatial strategies. The halo hides
+        under the halo layers' fw+bw; the gradient exchange under backward
+        compute — but the halo layers' bw is a subset of BW, so the GE
+        window must exclude the compute seconds the halo already consumed
+        (one second of backward hides one second of comm, once)."""
+        win_halo = D / p * T.halo_fw_bw
+        halo_hidden = sig_m * np.minimum(win_halo, halo_full)
+        win_ge = np.maximum(bw_epoch - halo_hidden, 0.0)
+        return halo_full - halo_hidden, exposed(ge_full, win_ge, sig_d)
+
     def halo_term(batch):
         # Σ_{l: halo>0} 2·(2α + 2·batch·halo_l·δ·β·φ), closed form
         return iters * (4.0 * lvl_model.alpha * T.n_halo
@@ -333,15 +392,17 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
     if strategy == "data":
         out["feasible"] = p <= B
         out["comp"] = D / p * (FW + BW) + iters * (WU / p if cfg.zero1 else WU)
-        out["ge"] = iters * lvl_data.allreduce_v(p, Wbytes)
+        out["ge"] = exposed(iters * lvl_data.allreduce_v(p, Wbytes),
+                            D / p * BW, sig_d)
         out["mem"] = mem(act_div=p, dp=p) + zeros
         return out
 
     if strategy == "spatial":
         out["feasible"] = (p <= T.sp_min) & (not T.any_recurrent)
         out["comp"] = D / p * (FW + BW) + iters * WU
-        out["ge"] = iters * lvl_data.allreduce_v(p, Wbytes)
-        out["halo"] = halo_term(B)
+        out["halo"], out["ge"] = halo_and_ge(
+            halo_term(B), iters * lvl_data.allreduce_v(p, Wbytes),
+            D / p * BW)
         out["mem"] = mem(act_div=p) + zeros
         return out
 
@@ -379,7 +440,9 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
         out["comp"] = D / p * (FW + BW) + iters * (
             WU / p if cfg.zero1 else WU / p2)
         out["fb"] = fb_term(p2)
-        out["ge"] = iters * lvl_data.allreduce_v(p1, Wbytes / p2, phi=phi_ge)
+        out["ge"] = exposed(
+            iters * lvl_data.allreduce_v(p1, Wbytes / p2, phi=phi_ge),
+            D / p * BW, sig_d)
         out["mem"] = mem(act_div=p1, w_div=p2, dp=p1) + zeros
         return out
 
@@ -388,8 +451,10 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
                            & (not T.any_recurrent))
         out["comp"] = D / p * (FW + BW) + iters * (
             WU / p if cfg.zero1 else WU)
-        out["halo"] = halo_term(B / p1)
-        out["ge"] = iters * lvl_data.allreduce_v(p, Wbytes, phi=phi_ge)
+        out["halo"], out["ge"] = halo_and_ge(
+            halo_term(B / p1),
+            iters * lvl_data.allreduce_v(p, Wbytes, phi=phi_ge),
+            D / p * BW)
         out["mem"] = mem(act_div=p, dp=p1) + zeros
         return out
 
@@ -404,7 +469,9 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
         out["fb"] = np.where(p2 > 1, 4.0 * iters * (p2 - 1) * (
             lvl_model.alpha * T.n_moe
             + B * delta * lvl_model.beta / (p1 * p2) * T.moe_y_sum), 0.0)
-        out["ge"] = iters * lvl_data.allreduce_v(p1, Wbytes / p2, phi=phi_ge)
+        out["ge"] = exposed(
+            iters * lvl_data.allreduce_v(p1, Wbytes / p2, phi=phi_ge),
+            D / p * BW, sig_d)
         out["mem"] = mem(act_div=p1, w_div=p2, dp=p1) + zeros
         return out
 

@@ -56,9 +56,25 @@ class Roofline:
         return self.model_flops / self.hlo_flops_total if self.hlo_flops_total else 0.0
 
     @property
+    def serial_s(self) -> float:
+        """Fully-serial upper bound: compute + memory + collectives, nothing
+        hidden — the paper's accounting."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
     def step_time_s(self) -> float:
-        """No-overlap upper bound: max of the three terms."""
+        """Full-overlap lower bound: max of the three terms."""
         return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def overlapped_s(self, sigma: float = 0.8) -> float:
+        """Overlap-model estimate between the two bounds (DESIGN.md §10):
+        collectives hide under the on-chip work with efficiency σ —
+        T = max(T_chip, T_coll) + (1−σ)·min(T_chip, T_coll), where T_chip
+        is the compute/HBM bound max(compute_s, memory_s). σ=1 recovers
+        ``step_time_s``; σ=0 charges collectives serially."""
+        chip = max(self.compute_s, self.memory_s)
+        return max(chip, self.collective_s) \
+            + (1.0 - sigma) * min(chip, self.collective_s)
 
     @property
     def ideal_s(self) -> float:
@@ -74,7 +90,7 @@ class Roofline:
         """Achievable bound: ideal step time / bound step time."""
         return self.ideal_s / self.step_time_s if self.step_time_s else 0.0
 
-    def to_json(self) -> dict:
+    def to_json(self, sigma: float = 0.8) -> dict:
         return {
             "compute_s": self.compute_s, "memory_s": self.memory_s,
             "collective_s": self.collective_s,
@@ -84,6 +100,9 @@ class Roofline:
             "hlo_flops_total": self.hlo_flops_total,
             "useful_ratio": self.useful_ratio,
             "step_time_bound_s": self.step_time_s,
+            "serial_s": self.serial_s,
+            "overlapped_s": self.overlapped_s(sigma),
+            "overlap_sigma": sigma,      # which σ the field above assumed
             "ideal_s": self.ideal_s,
             "roofline_fraction": self.roofline_fraction,
             "temp_bytes": self.temp_bytes,

@@ -73,9 +73,8 @@ def factor_pairs(p: int) -> list[tuple[int, int]]:
 PHI_LEVELS = ("data", "model")   # levels the oracle's terms consume today
 
 
-def parse_phi_table(spec: str | None):
-    """'data=2.0,model=1.2' → ((level, φ), ...) for OracleConfig.phi_levels;
-    None/empty → None (the paper's single phi_hybrid constant applies).
+def _parse_level_table(spec: str | None, flag: str):
+    """'data=2.0,model=1.2' → ((level, value), ...); None/empty → None.
     Rejects unknown level names — a typo (or a level the α–β terms do not
     yet consume, like the pod/DCI hop) must not silently change nothing."""
     if not spec:
@@ -84,13 +83,25 @@ def parse_phi_table(spec: str | None):
     for part in spec.split(","):
         lvl, _, val = part.partition("=")
         if not val:
-            raise ValueError(f"--phi entry {part!r} is not LEVEL=VALUE")
+            raise ValueError(f"{flag} entry {part!r} is not LEVEL=VALUE")
         lvl = lvl.strip()
         if lvl not in PHI_LEVELS:
-            raise ValueError(f"--phi level {lvl!r} is not consumed by the "
+            raise ValueError(f"{flag} level {lvl!r} is not consumed by the "
                              f"oracle; known levels: {PHI_LEVELS}")
         out.append((lvl, float(val)))
     return tuple(out)
+
+
+def parse_phi_table(spec: str | None):
+    """Contention table for OracleConfig.phi_levels (paper's single
+    phi_hybrid constant applies when absent)."""
+    return _parse_level_table(spec, "--phi")
+
+
+def parse_sigma_table(spec: str | None):
+    """Overlap-efficiency table for OracleConfig.sigma_levels
+    (SIGMA_DEFAULTS apply when absent)."""
+    return _parse_level_table(spec, "--sigma")
 
 
 def parse_p_grid(spec: str) -> list[int]:
@@ -482,6 +493,14 @@ def main(argv=None) -> int:
                     help="per-interconnect contention table, e.g. "
                          "'data=2.0,model=1.2' (default: the paper's single "
                          "phi_hybrid=2.0 on the hybrid gradient exchange)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="charge every comm term serially — the paper's "
+                         "original accounting (default: halo P2P and the "
+                         "gradient exchange hide under compute, DESIGN.md "
+                         "§10)")
+    ap.add_argument("--sigma", default=None, metavar="LVL=SIG[,LVL=SIG...]",
+                    help="per-interconnect overlap efficiency table, e.g. "
+                         "'model=0.9,data=0.8' (the defaults)")
     ap.add_argument("--strategies", default=",".join(STRATEGY_NAMES))
     ap.add_argument("--crossover", nargs=2, metavar=("BASE", "CHALLENGER"),
                     default=("data", "df"),
@@ -504,7 +523,9 @@ def main(argv=None) -> int:
     cfg = OracleConfig(B=batch_of(max(p_grid)), D=max(D, batch_of(max(p_grid))),
                        remat=args.remat, zero1=args.zero1, zero3=args.zero3,
                        seq_parallel=args.seq_parallel,
-                       phi_levels=parse_phi_table(args.phi))
+                       phi_levels=parse_phi_table(args.phi),
+                       overlap=not args.no_overlap,
+                       sigma_levels=parse_sigma_table(args.sigma))
     cap = (args.mem_cap_gib * 2 ** 30 if args.mem_cap_gib
            else tm.system.mem_capacity)
     strategies = tuple(s for s in args.strategies.split(",") if s)
@@ -525,7 +546,8 @@ def main(argv=None) -> int:
 
     print(f"# model={args.model} system={tm.system.name} "
           f"D={cfg.D} mem_cap={cap/2**30:.1f}GiB "
-          f"B={'fixed %d' % args.batch if args.batch else 'weak %.3g/PE' % args.batch_per_pe}")
+          f"B={'fixed %d' % args.batch if args.batch else 'weak %.3g/PE' % args.batch_per_pe} "
+          f"overlap={'off (serial comm, paper model)' if args.no_overlap else 'on'}")
     print(f"# lattice: {len(res)} points "
           f"({len(p_grid)} p-values × strategies × exhaustive p1·p2 splits); "
           f"'!' rows are infeasible at that p")

@@ -1,10 +1,19 @@
 """Implicit-GEMM conv2d Pallas kernel (the paper's CNN compute hot spot).
 
 Hardware adaptation (DESIGN.md §6): cuDNN's implicit GEMM tiles for SMs/shared
-memory; on TPU the conv is re-expressed as kh·kw shifted (H·W, C) × (C, F)
+memory; on TPU the conv is re-expressed as kh·kw shifted (Ho·Wo, C) × (C, F)
 matmuls accumulated in fp32 — each contraction feeds the 128×128 MXU, the
 image tile + filter block live in VMEM. Grid: (batch, F/BF). Input is
-pre-padded in ops.py so the kernel body is branch-free.
+pre-padded in the wrapper so the kernel body is branch-free.
+
+Strided convolutions (ResNet's stride-2 bottlenecks) decimate each shifted
+patch with a slice-then-reshape — `(sh·Ho, …) → (Ho, sh, …)[:, 0]` — static
+shapes only, no gather, so the same body serves every stride.
+
+The halo-aware entry (``pad_h=False``) consumes a tile whose leading spatial
+dim ALREADY carries its kh−1 boundary rows (the spatial-parallel halo
+exchange delivered them — parallel/halo.py); only the W dim is padded here,
+so the sharded path pays no second `jnp.pad` round-trip over H.
 """
 from __future__ import annotations
 
@@ -15,39 +24,70 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _conv_kernel(x_ref, w_ref, o_ref, *, H: int, W: int, kh: int, kw: int,
-                 c: int, bf: int):
-    x = x_ref[...]                      # (H+kh-1, W+kw-1, C) padded tile
-    acc = jnp.zeros((H * W, bf), jnp.float32)
+def _decimate(patch, Ho: int, Wo: int, sh: int, sw: int, c: int):
+    """Keep every (sh, sw)-th pixel of a (sh·Ho, sw·Wo, C) patch."""
+    if sh > 1:
+        patch = patch.reshape(Ho, sh, patch.shape[1], c)[:, 0]
+    if sw > 1:
+        patch = patch.reshape(Ho, Wo, sw, c)[:, :, 0]
+    return patch
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, Ho: int, Wo: int, kh: int, kw: int,
+                 sh: int, sw: int, c: int, bf: int):
+    x = x_ref[...]                      # (Hp, Wp, C) padded tile
+    acc = jnp.zeros((Ho * Wo, bf), jnp.float32)
     for di in range(kh):
         for dj in range(kw):
-            patch = jax.lax.dynamic_slice(x, (di, dj, 0), (H, W, c))
-            mat = patch.reshape(H * W, c)
+            patch = jax.lax.dynamic_slice(x, (di, dj, 0),
+                                          (sh * Ho, sw * Wo, c))
+            mat = _decimate(patch, Ho, Wo, sh, sw, c).reshape(Ho * Wo, c)
             wk = w_ref[di, dj]          # (C, BF)
             acc += jax.lax.dot(mat, wk, preferred_element_type=jnp.float32)
-    o_ref[...] = acc.reshape(H, W, bf).astype(o_ref.dtype)
+    o_ref[...] = acc.reshape(Ho, Wo, bf).astype(o_ref.dtype)
 
 
-def conv2d_gemm(x, w, *, block_f: int = 128, interpret: bool = False):
-    """Stride-1 SAME conv. x: (B,H,W,C); w: (kh,kw,C,F) → (B,H,W,F)."""
+def conv2d_gemm(x, w, *, strides=(1, 1), block_f: int = 128,
+                pad_h: bool = True, interpret: bool = False):
+    """SAME conv with arbitrary strides. x: (B,H,W,C); w: (kh,kw,C,F).
+
+    ``pad_h=False`` is the halo-aware variant: H is treated as pre-padded —
+    the tile already holds its kh−1 boundary rows (stride 1 only; the
+    spatial executor never strides a halo conv) and the output has
+    H − kh + 1 rows (VALID over H, SAME over W).
+    """
     B, H, W, C = x.shape
     kh, kw, _, F = w.shape
+    sh, sw = (strides, strides) if isinstance(strides, int) else strides
+    if not pad_h and (sh, sw) != (1, 1):
+        raise ValueError(f"halo-aware conv2d_gemm is stride-1 only, "
+                         f"got strides={(sh, sw)}")
+    Ho = H - kh + 1 if not pad_h else -(-H // sh)
+    Wo = -(-W // sw)
     bf = min(block_f, F)
     while F % bf:
         bf -= 1
-    ph, pw = kh // 2, kw // 2
-    xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    # padded extents cover the largest shifted patch, di + sh·Ho ≤ Hp
+    Hp = (kh - 1) + sh * Ho
+    Wp = (kw - 1) + sw * Wo
+    if pad_h:
+        lo_h = max((Ho - 1) * sh + kh - H, 0) // 2   # XLA SAME convention
+        pads_h = (lo_h, Hp - H - lo_h)
+    else:
+        pads_h = (0, Hp - H)                          # Hp == H: no-op
+    lo_w = max((Wo - 1) * sw + kw - W, 0) // 2
+    xp = jnp.pad(x, ((0, 0), pads_h, (lo_w, Wp - W - lo_w), (0, 0)))
 
-    kernel = functools.partial(_conv_kernel, H=H, W=W, kh=kh, kw=kw, c=C, bf=bf)
+    kernel = functools.partial(_conv_kernel, Ho=Ho, Wo=Wo, kh=kh, kw=kw,
+                               sh=sh, sw=sw, c=C, bf=bf)
     return pl.pallas_call(
         kernel,
         grid=(B, F // bf),
         in_specs=[
-            pl.BlockSpec((None, H + kh - 1, W + kw - 1, C),
-                         lambda b, f: (b, 0, 0, 0)),
+            pl.BlockSpec((None, Hp, Wp, C), lambda b, f: (b, 0, 0, 0)),
             pl.BlockSpec((kh, kw, C, bf), lambda b, f: (0, 0, 0, f)),
         ],
-        out_specs=pl.BlockSpec((None, H, W, bf), lambda b, f: (b, 0, 0, f)),
-        out_shape=jax.ShapeDtypeStruct((B, H, W, F), x.dtype),
+        out_specs=pl.BlockSpec((None, Ho, Wo, bf), lambda b, f: (b, 0, 0, f)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, F), x.dtype),
         interpret=interpret,
     )(xp, w)

@@ -8,9 +8,11 @@ from .conv2d_gemm import conv2d_gemm as _conv2d_gemm
 from .ref import conv2d_ref
 
 
-@partial(jax.jit, static_argnames=("block_f", "interpret"))
-def conv2d_gemm(x, w, *, block_f: int = 128, interpret: bool = False):
-    return _conv2d_gemm(x, w, block_f=block_f, interpret=interpret)
+@partial(jax.jit, static_argnames=("strides", "block_f", "pad_h", "interpret"))
+def conv2d_gemm(x, w, *, strides=(1, 1), block_f: int = 128,
+                pad_h: bool = True, interpret: bool = False):
+    return _conv2d_gemm(x, w, strides=strides, block_f=block_f,
+                        pad_h=pad_h, interpret=interpret)
 
 
 __all__ = ["conv2d_gemm", "conv2d_ref"]

@@ -1,10 +1,11 @@
-"""Pure-jnp oracle: stride-1 SAME 2-D convolution (channels-last)."""
+"""Pure-jnp oracle: SAME 2-D convolution, any stride (channels-last)."""
 import jax
 
 
-def conv2d_ref(x, w):
-    """x: (B, H, W, C); w: (kh, kw, C, F) → (B, H, W, F)."""
+def conv2d_ref(x, w, strides=(1, 1)):
+    """x: (B, H, W, C); w: (kh, kw, C, F) → (B, ⌈H/sh⌉, ⌈W/sw⌉, F)."""
+    sh, sw = (strides, strides) if isinstance(strides, int) else strides
     dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
                                         ("NHWC", "HWIO", "NHWC"))
-    return jax.lax.conv_general_dilated(x, w, (1, 1), "SAME",
+    return jax.lax.conv_general_dilated(x, w, (sh, sw), "SAME",
                                         dimension_numbers=dn)

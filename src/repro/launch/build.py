@@ -124,8 +124,11 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = No
                q_chunk: int = 1024, kv_chunk: int = 1024,
                opt: OptimizerConfig | None = None, accum: int = 1,
                override_layers: int | None = None, plan=None,
-               system=None) -> BuiltCell:
+               system=None, use_pallas: bool = False) -> BuiltCell:
     """Assemble one (arch × shape) cell under a strategy on a mesh.
+
+    ``use_pallas`` routes CNN convolutions through the implicit-GEMM Pallas
+    kernel (interpret-mode fallback off-TPU) — see ShardingCtx.use_pallas.
 
     ``strategy="auto"`` asks the oracle: the sweep-driven auto-tuner
     (core/autotune.py) picks the cheapest feasible (strategy, p1·p2 split,
@@ -158,8 +161,8 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = No
         mc = _with_layers(mc, override_layers)
         cfg = dataclasses.replace(cfg, model=mc, smoke_model=mc)
     model = build_model(cfg, smoke=smoke)
-    ctx = ShardingCtx(mesh, rules)
-    kw = dict(scan_layers=scan_layers)
+    ctx = ShardingCtx(mesh, rules, use_pallas=use_pallas)
+    kw = {} if cfg.family == "cnn" else dict(scan_layers=scan_layers)
     if cfg.family in ("lm", "vlm"):
         kw.update(q_chunk=q_chunk, kv_chunk=kv_chunk)
         if unroll_attn:
@@ -205,7 +208,9 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = No
             "opt": tree_abstract(sspec["opt"], mesh=mesh, rules=state_rules),
             "step": tree_abstract(sspec["step"], mesh=mesh, rules=rules),
         }
-        batch = batch_specs(cfg, shape, mesh, rules, smoke)
+        batch = (cnn_batch_specs(cfg, shape.global_batch, mesh, rules, smoke)
+                 if cfg.family == "cnn"
+                 else batch_specs(cfg, shape, mesh, rules, smoke))
         return BuiltCell(cfg.name, shape_name, strategy, model, ctx, step,
                          (state, batch), "train", _scan_groups(model), meta)
 

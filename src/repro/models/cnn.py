@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from ..nn.layers import BatchNorm, Conv, Dense, global_avg_pool, max_pool
 from ..nn.module import NULL_CTX, ShardingCtx, tree_num_params
+from ..parallel.halo import HaloConv
 
 
 # ---------------------------------------------------------------------------
@@ -49,12 +50,15 @@ class Bottleneck:
         return self.mid_ch * 4
 
     def convs(self):
+        # the 3×3 is the spatial hot spot: HaloConv runs it as the
+        # overlapped halo pipeline under spatial/ds sharding (stride-2
+        # bottleneck entries fall back to the plain path automatically)
         return {
             "conv1": Conv(self.in_ch, self.mid_ch, (1, 1), use_bias=False,
                           dtype=self.dtype),
-            "conv2": Conv(self.mid_ch, self.mid_ch, (3, 3),
-                          strides=(self.stride, self.stride), use_bias=False,
-                          dtype=self.dtype),
+            "conv2": HaloConv(self.mid_ch, self.mid_ch, (3, 3),
+                              strides=(self.stride, self.stride),
+                              use_bias=False, dtype=self.dtype),
             "conv3": Conv(self.mid_ch, self.out_ch, (1, 1), use_bias=False,
                           dtype=self.dtype),
         }
@@ -110,8 +114,8 @@ class ResNet:
     def params_spec(self):
         c = self.cfg
         spec = {
-            "stem": Conv(3, c.width, (7, 7), strides=(2, 2), use_bias=False,
-                         dtype=c.dtype).params_spec(),
+            "stem": HaloConv(3, c.width, (7, 7), strides=(2, 2),
+                             use_bias=False, dtype=c.dtype).params_spec(),
             "bn_stem": BatchNorm(c.width).params_spec(),
             "blocks": [b.params_spec() for b in self._blocks()],
             "head": Dense(512 * 4, c.n_classes, use_bias=True, in_axis="mlp",
@@ -121,8 +125,8 @@ class ResNet:
 
     def apply(self, params, x, ctx: ShardingCtx = NULL_CTX, train=True):
         c = self.cfg
-        h = Conv(3, c.width, (7, 7), strides=(2, 2), use_bias=False,
-                 dtype=c.dtype).apply(params["stem"], x, ctx)
+        h = HaloConv(3, c.width, (7, 7), strides=(2, 2), use_bias=False,
+                     dtype=c.dtype).apply(params["stem"], x, ctx)
         h = jax.nn.relu(BatchNorm(c.width).apply(params["bn_stem"], h, ctx, train))
         h = max_pool(h, (3, 3), (2, 2), "SAME")
         for i, b in enumerate(self._blocks()):
@@ -165,7 +169,7 @@ class VGG:
             if v == "M":
                 convs.append("M")
             else:
-                convs.append(Conv(in_ch, v, (3, 3), dtype=self.cfg.dtype))
+                convs.append(HaloConv(in_ch, v, (3, 3), dtype=self.cfg.dtype))
                 in_ch = v
         return convs
 
@@ -235,7 +239,7 @@ class CosmoFlow:
         convs, in_ch = [], c.in_ch
         for i in range(c.n_conv):
             out = c.width * (2 ** i)
-            convs.append(Conv(in_ch, out, (3, 3, 3), dtype=c.dtype))
+            convs.append(HaloConv(in_ch, out, (3, 3, 3), dtype=c.dtype))
             in_ch = out
         return convs
 

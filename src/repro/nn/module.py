@@ -265,10 +265,17 @@ def tree_num_bytes(spec_tree, default_dtype=jnp.float32) -> int:
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class ShardingCtx:
-    """Mesh + rules, closed over by model apply fns for activation constraints."""
+    """Mesh + rules, closed over by model apply fns for activation constraints.
+
+    ``use_pallas`` routes the CNN hot path (HaloConv / conv2d) through the
+    implicit-GEMM Pallas kernel (kernels/conv2d_gemm) instead of
+    ``lax.conv`` — interpret-mode off-TPU, so it is correct (if slow)
+    everywhere and MXU-shaped where it matters.
+    """
 
     mesh: Mesh | None
     rules: Rules
+    use_pallas: bool = False
 
     def constrain(self, x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
         if self.mesh is None:

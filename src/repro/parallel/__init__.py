@@ -3,4 +3,4 @@ from .pipeline import (block_costs_from_stats, clip_segments, gpipe,
                        make_masked_stage_fn, make_pipeline_train_step,
                        make_stage_fn, pipeline_supported, stack_stage_bounds,
                        stack_stages)
-from .halo import halo_exchange, spatial_conv2d
+from .halo import HaloConv, halo_exchange, spatial_conv2d

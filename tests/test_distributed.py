@@ -9,17 +9,18 @@ HELPER = os.path.join(os.path.dirname(__file__), "helpers",
                       "multidevice_checks.py")
 
 
-def run_check(name: str, timeout: int = 420, retries: int = 0):
+def run_check(name: str, timeout: int = 420, retries: int = 0, args=()):
     """Run one multidevice check in a subprocess.
 
     ``retries``: timing-based checks (calibrate-then-measure on a
     CPU-quota-throttled container) can skew when the box stalls mid-check;
     a retry must still pass the FULL check — assertions are never relaxed.
+    ``args``: extra argv for parametrized checks (e.g. halo_edge cases).
     """
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     for attempt in range(retries + 1):
-        out = subprocess.run([sys.executable, HELPER, name], env=env,
+        out = subprocess.run([sys.executable, HELPER, name, *args], env=env,
                              capture_output=True, text=True, timeout=timeout)
         if "CHECK-PASSED" in out.stdout:
             return
@@ -58,6 +59,32 @@ def test_tuner_pick_beats_runner_up_measured():
 @pytest.mark.slow
 def test_halo_spatial_conv():
     run_check("halo")
+
+
+@pytest.mark.slow
+def test_halo_overlap_bit_exact():
+    """Overlapped interior/boundary-split halo conv == serial pipeline ==
+    unsharded SAME conv, bit-exact, incl. the deployed HaloConv + Pallas."""
+    run_check("halo_overlap")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["thin", "even", "p1", "stride", "padding"])
+def test_halo_edge_cases(case):
+    """H_local < halo raises; even kernel widths (asymmetric halos, incl.
+    the Pallas path's empty lo=0 boundary) and p=1 stay bit-exact; strides
+    are rejected with a clear error; non-SAME padding falls back to the
+    plain conv instead of silently computing SAME."""
+    run_check("halo_edge", args=(case,))
+
+
+@pytest.mark.slow
+def test_spatial_overlap_validation():
+    """The measured ds (spatial-hybrid) step lands closer to the overlap
+    oracle than to the serial-comm model (ISSUE-4 acceptance). Doubly
+    timing-sensitive (calibrate-then-measure × model comparison), so it
+    gets the widest retry budget; every retry re-runs the FULL check."""
+    run_check("spatial_overlap_validation", timeout=560, retries=2)
 
 
 @pytest.mark.slow

@@ -56,6 +56,62 @@ def test_conv2d_gemm_sweep(key, HW, C, F, k, dtype):
                                ref.astype(jnp.float32), rtol=tol, atol=tol)
 
 
+# ResNet-50's strided conv shapes: the 3×3 stride-2 bottleneck entries of
+# stages 1–3 and the 1×1 stride-2 projection (ISSUE-4 acceptance: ≤ 1e-5)
+RESNET50_STRIDE2 = [((56, 56), 64, 64, 3), ((28, 28), 128, 128, 3),
+                    ((14, 14), 256, 256, 3), ((56, 56), 256, 512, 1)]
+
+
+@pytest.mark.parametrize("HW,C,F,k", RESNET50_STRIDE2)
+def test_conv2d_gemm_stride2_resnet50_shapes(key, HW, C, F, k):
+    H, W = HW
+    x = jax.random.normal(key, (2, H, W, C))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, k, C, F)) * 0.1
+    out = conv2d_gemm(x, w, strides=(2, 2), interpret=True)
+    ref = conv2d_ref(x, w, strides=(2, 2))
+    assert out.shape == ref.shape == (2, H // 2, W // 2, F)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("HW,C,F,k,s", [((15, 13), 8, 16, 5, 2),
+                                        ((16, 12), 8, 16, 2, 2),
+                                        ((32, 32), 16, 32, 3, 4)])
+def test_conv2d_gemm_strided_odd_shapes(key, HW, C, F, k, s):
+    """Non-dividing extents and even kernels keep the XLA SAME semantics."""
+    H, W = HW
+    x = jax.random.normal(key, (2, H, W, C))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, k, C, F)) * 0.1
+    out = conv2d_gemm(x, w, strides=(s, s), interpret=True)
+    ref = conv2d_ref(x, w, strides=(s, s))
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_conv2d_gemm_halo_aware_consumes_padded_tile(key):
+    """pad_h=False: the tile already carries its kh−1 boundary rows (the
+    halo exchange delivered them) — VALID over H, SAME over W."""
+    H, W, C, F, k = 12, 16, 8, 16, 3
+    x = jax.random.normal(key, (2, H + k - 1, W, C))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, k, C, F)) * 0.1
+    out = conv2d_gemm(x, w, pad_h=False, interpret=True)
+    assert out.shape == (2, H, W, F)
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    ref = jax.lax.conv_general_dilated(
+        x, w, (1, 1), ((0, 0), (k // 2, k // 2)), dimension_numbers=dn)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_conv2d_gemm_halo_aware_rejects_strides(key):
+    x = jax.random.normal(key, (1, 10, 8, 4))
+    w = jax.random.normal(key, (3, 3, 4, 8))
+    with pytest.raises(ValueError, match="stride-1 only"):
+        conv2d_gemm(x, w, strides=(2, 2), pad_h=False, interpret=True)
+
+
 @pytest.mark.parametrize("shape", [(4, 37, 128), (2, 256), (1, 8, 8, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rmsnorm_sweep(key, shape, dtype):

@@ -1,0 +1,173 @@
+"""Comm/compute overlap model (ISSUE 4, DESIGN.md §10).
+
+Acceptance pins:
+  * ``overlap=False`` reproduces the pre-overlap oracle bit-for-bit
+    (hard-coded seed values, ≤ 1e-12 relative);
+  * with overlap on, comm-carrying strategies get cheaper, never costlier,
+    and the exposed comm is bounded below by the full-overlap floor
+    ``T_comm − σ·window``;
+  * the tuner's spatial-vs-data/ds crossovers shift measurably (the
+    cosmoflow spatial→ds handoff moves from p=64 to p=128);
+  * sweep/scalar parity holds under the overlap model too (test_sweep
+    already runs the whole lattice with the overlap-on default).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (OracleConfig, PAPER_V100_CLUSTER, TimeModel, project,
+                        stats_for)
+from repro.core.oracle import SIGMA_DEFAULTS
+from repro.core.sweep import parse_sigma_table, sweep
+from repro.models.cnn import RESNET50, CosmoFlowConfig, VGGConfig
+
+TM = TimeModel(PAPER_V100_CLUSTER)
+
+STATS = {"resnet50": lambda: stats_for(RESNET50),
+         "cosmoflow": lambda: stats_for(CosmoFlowConfig(img=128)),
+         "vgg16": lambda: stats_for(VGGConfig())}
+CFGS = {"resnet50": dict(B=2048, D=1_281_167),
+        "cosmoflow": dict(B=64, D=1584),
+        "vgg16": dict(B=1024, D=1_281_167)}
+
+# total_s of the SEED oracle (pre-overlap, PR 3) at these exact points —
+# captured before this PR's change; overlap=False must reproduce them.
+SEED_TOTALS = [
+    ("resnet50", "data", 64, None, None, 17.717688568713932),
+    ("resnet50", "spatial", 8, None, None, 130.83503134527038),
+    ("resnet50", "ds", 64, 16, 4, 25.201475262273775),
+    ("resnet50", "df", 64, 16, 4, 215.69785131118573),
+    ("resnet50", "filter", 16, None, None, 4057.0648010982854),
+    ("resnet50", "pipeline", 8, None, None, 267.9387961854857),
+    ("cosmoflow", "data", 64, None, None, 0.10918292916105143),
+    ("cosmoflow", "spatial", 8, None, None, 0.4342121355284114),
+    ("cosmoflow", "ds", 64, 16, 4, 0.14470936428105144),
+    ("cosmoflow", "df", 64, 16, 4, 1.0624493250010516),
+    ("cosmoflow", "filter", 16, None, None, 20.092509570004207),
+    ("cosmoflow", "pipeline", 8, None, None, 20.08302239396389),
+    ("vgg16", "data", 64, None, None, 102.43584695960134),
+    ("vgg16", "spatial", 8, None, None, 458.3659308441157),
+    ("vgg16", "ds", 64, 16, 4, 161.43786360482852),
+    ("vgg16", "df", 64, 16, 4, 314.83667451658596),
+    ("vgg16", "filter", 16, None, None, 5058.80612177751),
+    ("vgg16", "pipeline", 8, None, None, 2357.09044051548),
+]
+
+
+def _project(model, strat, p, p1, p2, **cfg_kw):
+    cfg = OracleConfig(**CFGS[model], **cfg_kw)
+    kw = {} if p1 is None else dict(p1=p1, p2=p2)
+    return project(strat, STATS[model](), TM, cfg, p, **kw)
+
+
+@pytest.mark.parametrize("model,strat,p,p1,p2,want", SEED_TOTALS)
+def test_no_overlap_reproduces_seed_oracle(model, strat, p, p1, p2, want):
+    got = _project(model, strat, p, p1, p2, overlap=False).total_s
+    assert abs(got - want) <= 1e-12 * want, (got, want)
+
+
+@pytest.mark.parametrize("model,strat,p,p1,p2,want", SEED_TOTALS)
+def test_overlap_never_costlier_and_comp_invariant(model, strat, p, p1, p2,
+                                                   want):
+    on = _project(model, strat, p, p1, p2)
+    off = _project(model, strat, p, p1, p2, overlap=False)
+    assert on.total_s <= off.total_s + 1e-15
+    assert on.comp_s == off.comp_s          # overlap discounts comm only
+    assert on.mem_bytes == off.mem_bytes
+    # FB collectives and pipeline P2P stay serial (data-dependent)
+    assert on.comm_fb_s == off.comm_fb_s
+    assert on.comm_p2p_s == off.comm_p2p_s
+
+
+def test_exposed_comm_matches_closed_form():
+    """exposed = T_comm − σ·min(window, T_comm): check the halo and GE terms
+    against the definition, via σ=0 / σ=1 runs that bracket the default."""
+    full = _project("cosmoflow", "spatial", 8, None, None, overlap=False)
+    zero = _project("cosmoflow", "spatial", 8, None, None,
+                    sigma_levels={"model": 0.0, "data": 0.0})
+    one = _project("cosmoflow", "spatial", 8, None, None,
+                   sigma_levels={"model": 1.0, "data": 1.0})
+    dflt = _project("cosmoflow", "spatial", 8, None, None)
+    # σ=0 with overlap "on" is the serial model
+    assert np.isclose(zero.total_s, full.total_s, rtol=1e-15)
+    # defaults interpolate between the σ=1 floor and the serial ceiling
+    assert one.comm_halo_s <= dflt.comm_halo_s <= full.comm_halo_s
+    assert one.comm_ge_s <= dflt.comm_ge_s <= full.comm_ge_s
+    # σ=1 on a comm term smaller than its window exposes nothing
+    if full.comm_halo_s <= full.comp_s:
+        assert one.comm_halo_s <= 1e-15 * full.total_s
+    # default σ line up with SIGMA_DEFAULTS exactly
+    w_halo = full.comm_halo_s - one.comm_halo_s      # min(window, comm)
+    assert np.isclose(dflt.comm_halo_s,
+                      full.comm_halo_s - SIGMA_DEFAULTS["model"] * w_halo,
+                      rtol=1e-12)
+
+
+def test_sigma_monotone_in_levels():
+    prev = None
+    for s in (0.0, 0.25, 0.5, 0.75, 1.0):
+        t = _project("resnet50", "ds", 64, 16, 4,
+                     sigma_levels={"model": s, "data": s}).total_s
+        if prev is not None:
+            assert t <= prev + 1e-15
+        prev = t
+
+
+def test_overlap_shifts_cosmoflow_spatial_ds_crossover():
+    """The tentpole's measurable re-ranking: with the halo exchange hidden
+    under interior compute, pure spatial stays ahead of the ds hybrid
+    longer — the crossover moves from p=64 (paper/serial accounting) to
+    p=128 under the overlap model (0.25 samples/PE weak scaling)."""
+    stats = stats_for(CosmoFlowConfig(img=128))
+    batch_of = lambda p: max(int(round(0.25 * p)), 1)   # noqa: E731
+    grid = [2 ** k for k in range(11)]
+    cap = TM.system.mem_capacity
+    res_serial = sweep(stats, TM,
+                       OracleConfig(B=batch_of(1024), D=1584, overlap=False),
+                       grid, batch_for_p=batch_of, mem_cap=cap)
+    res_overlap = sweep(stats, TM,
+                        OracleConfig(B=batch_of(1024), D=1584),
+                        grid, batch_for_p=batch_of, mem_cap=cap)
+    assert res_serial.crossover("spatial", "ds") == 64
+    assert res_overlap.crossover("spatial", "ds") == 128
+
+
+def test_overlap_preserves_resnet_data_df_crossover():
+    """GE overlap discounts data AND df alike: the resnet50 data→df
+    crossover stays at p=512 (test_sweep's golden) under both models."""
+    stats = stats_for(RESNET50)
+    batch_of = lambda p: max(2 * p, 4)   # noqa: E731
+    grid = [2 ** k for k in range(11)]
+    for overlap in (False, True):
+        res = sweep(stats, TM,
+                    OracleConfig(B=batch_of(1024), D=1_281_167,
+                                 overlap=overlap),
+                    grid, batch_for_p=batch_of,
+                    mem_cap=TM.system.mem_capacity)
+        assert res.crossover("data", "df") == 512, overlap
+
+
+def test_parse_sigma_table_and_rejects_unknown_levels():
+    assert parse_sigma_table(None) is None
+    assert parse_sigma_table("model=0.5,data=0.25") == (("model", 0.5),
+                                                        ("data", 0.25))
+    with pytest.raises(ValueError, match="--sigma"):
+        parse_sigma_table("pod=0.5")
+    cfg = OracleConfig(B=8, D=8, sigma_levels=(("model", 2.0),))
+    assert cfg.sigma_for("model") == 1.0        # clamped into [0, 1]
+    assert cfg.sigma_for("data") == SIGMA_DEFAULTS["data"]
+    off = OracleConfig(B=8, D=8, overlap=False,
+                       sigma_levels=(("model", 0.9),))
+    assert off.sigma_for("model") == 0.0        # overlap off wins
+
+
+def test_roofline_overlap_bounds():
+    from repro.core.roofline import Roofline
+    r = Roofline(compute_s=1.0, memory_s=0.4, collective_s=0.5,
+                 collective_by_axis={}, model_flops=1.0, hlo_flops_total=1.0,
+                 chips=1, temp_bytes=0, fits_hbm=True)
+    assert r.serial_s == pytest.approx(1.9)
+    assert r.step_time_s == pytest.approx(1.0)
+    assert r.overlapped_s(1.0) == pytest.approx(1.0)    # full overlap
+    assert r.overlapped_s(0.0) == pytest.approx(1.5)    # coll fully exposed
+    assert r.step_time_s <= r.overlapped_s(0.8) <= r.serial_s
+    assert "overlapped_s" in r.to_json() and "serial_s" in r.to_json()
