@@ -1,29 +1,34 @@
-"""Paper Fig. 6 / §4.3: contention coefficient φ and congested outliers.
+"""Paper Fig. 6 / §4.3: contention coefficient φ — projected and measured.
 
-The paper observed congested runs up to 4× the φ=1 prediction. We sweep φ
-over the df hybrid's gradient exchange and report the slowdown curve — the
-model the paper fits its outliers against (plus the φ=2 value used for the
-df results in Fig. 3).
+The paper observed congested runs up to 4× the φ=1 prediction. Two parts:
+
+  * projection — sweep φ over the df hybrid's gradient exchange through the
+    ``Oracle`` session facade and report the slowdown curve (the model the
+    paper fits its outliers against, plus the φ=2 value used for Fig. 3);
+  * measurement — with > 1 (virtual) host device, time one saturating
+    allreduce alone vs two concurrent flows (``core.calibration.
+    measure_contention``) and fit φ per mesh axis via
+    ``ClusterSpec.fitted_from`` — the same records
+    ``python -m repro.api --calibrate`` writes into
+    experiments/cluster_fit.json.
 """
 from __future__ import annotations
 
 import time
 
-from repro.core import OracleConfig, PAPER_V100_CLUSTER, TimeModel, project, stats_for
-from repro.models.cnn import RESNET50
+from repro.api import Oracle
 
 from .common import emit, note
 
 
 def run():
-    stats = stats_for(RESNET50)
-    tm = TimeModel(PAPER_V100_CLUSTER)
     rows = []
     base = None
     for phi in (1.0, 2.0, 3.0, 4.0):
-        cfg = OracleConfig(B=2048, D=1_281_167, phi_hybrid=phi)
+        ses = Oracle("resnet50", "train_4k", "paper", batch=2048,
+                     dataset=1_281_167, phi_hybrid=phi)
         t0 = time.perf_counter()
-        proj = project("df", stats, tm, cfg, 512, p1=128, p2=4)
+        proj = ses.project("df", 512, p1=128, p2=4)
         us = (time.perf_counter() - t0) * 1e6
         if base is None:
             base = proj.comm_ge_s
@@ -33,9 +38,35 @@ def run():
     return rows
 
 
+def run_measured():
+    """Measured self-contention per mesh axis (skips on 1 device)."""
+    import jax
+    if len(jax.devices()) < 2:
+        note("fig6 measured φ: single device — skipping (run under "
+             "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return []
+    from repro.core.calibration import measure_contention
+    from repro.core.cluster import ClusterSpec
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    rows = []
+    for axis in mesh.shape:
+        if mesh.shape[axis] <= 1:
+            continue
+        t0 = time.perf_counter()
+        m = measure_contention(mesh, axis)
+        us = (time.perf_counter() - t0) * 1e6
+        phi = dict(ClusterSpec.fitted_from([m], base="host").phi)[axis]
+        rows.append((f"fig6/measured/{axis}", us,
+                     f"alone_ms={m.alone_s*1e3:.3f};"
+                     f"shared_ms={m.shared_s*1e3:.3f};phi_fit={phi:.2f}"))
+    return rows
+
+
 def main():
     note("Fig 6 — contention penalty sweep (paper's 4x congestion outliers)")
     emit(run())
+    emit(run_measured())
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Quickstart: the ParaDL oracle on the paper's headline question.
 
 "Which parallel strategy should train ResNet-50 / VGG16 on a 1024-GPU
-cluster?" (paper §5) — and the same question for qwen3-32b on a TPU v5e pod.
+cluster?" (paper §5) — and the same question for qwen3-32b on a TPU v5e
+pod — through the ``Oracle`` session facade (DESIGN.md §11): bind
+(arch × shape × ClusterSpec) once, then ask.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,14 +11,12 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.configs import get_config
-from repro.core import (OracleConfig, PAPER_V100_CLUSTER, TPU_V5E_POD,
-                        TimeModel, advise, breakdown_table, stats_for)
-from repro.models.cnn import RESNET50, VGGConfig
+from repro.api import Oracle, Torus
+from repro.core import breakdown_table
 
 
-def headline(title, stats, tm, cfg, p, mem_cap):
-    rec = advise(stats, tm, cfg, p, mem_cap=mem_cap)
+def headline(title, ses, p):
+    rec = ses.advise(p)
     print(f"\n=== {title} (p={p}) ===")
     print(breakdown_table(rec.ranked))
     if rec.best:
@@ -29,21 +29,32 @@ def headline(title, stats, tm, cfg, p, mem_cap):
 
 
 def main():
-    tm_gpu = TimeModel(PAPER_V100_CLUSTER)
     # paper scales: weak scaling, V100 memory cap 16 GB
     for p in (64, 256, 1024):
         headline("ResNet-50 / ImageNet / V100 cluster",
-                 stats_for(RESNET50), tm_gpu,
-                 OracleConfig(B=2 * p, D=1_281_167), p, 16e9)
-    headline("VGG16 / ImageNet / V100 cluster", stats_for(VGGConfig()),
-             tm_gpu, OracleConfig(B=1024, D=1_281_167), 1024, 16e9)
+                 Oracle("resnet50", "train_4k", "paper", batch=2 * p,
+                        dataset=1_281_167, mem_cap=16e9), p)
+    headline("VGG16 / ImageNet / V100 cluster",
+             Oracle("vgg16", "train_4k", "paper", batch=1024,
+                    dataset=1_281_167, mem_cap=16e9), 1024)
 
     # beyond paper: the same oracle on a TPU v5e pod for an assigned arch
-    lm = get_config("qwen3-32b").model
     headline("qwen3-32b / 4k seq / TPU v5e pod",
-             stats_for(lm, 4096), TimeModel(TPU_V5E_POD),
-             OracleConfig(B=256, D=256 * 100, zero1=True, remat=True,
-                          zero3=True, seq_parallel=True), 256, 16e9)
+             Oracle("qwen3-32b", "train_4k", "tpu", batch=256,
+                    dataset=256 * 100, mem_cap=16e9, zero1=True, remat=True,
+                    zero3=True, seq_parallel=True), 256)
+
+    # the machine is one argument: constrain the model axis to one torus
+    # dim and the tuner reroutes around the pruned factorizations
+    import dataclasses
+    ses = Oracle("cosmoflow", "train_4k", "paper", batch=2, dataset=1584)
+    free = ses.tune(8)
+    bound = ses.with_cluster(dataclasses.replace(
+        ses.cluster, topology=Torus((4, 2)))).tune(8)
+    print(f"\n=== CosmoFlow p=8: topology changes the plan ===")
+    print(f"unconstrained: {free.strategy} {free.p1}x{free.p2}")
+    print(f"(4,2)-torus:   {bound.strategy} {bound.p1}x{bound.p2} "
+          f"(no 8-wide model ring exists)")
 
 
 if __name__ == "__main__":

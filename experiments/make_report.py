@@ -39,6 +39,9 @@ XCHECK_HDR = ("| arch | shape | mesh | strategy | HLO bound ms | oracle ms |"
 PIPE_HDR = ("| strategy | p | measured ms | projected ms | accuracy |\n"
             "|---|---|---|---|---|")
 
+CLUSTER_HDR = ("| level | α (µs) | β⁻¹ (GB/s) | φ | σ | fit residual |\n"
+               "|---|---|---|---|---|---|")
+
 # oracle-vs-HLO tolerance: both are coarse bounds (no-overlap roofline vs
 # α–β analytical model), so only order-of-magnitude drift is flagged
 TOL = 3.0
@@ -58,6 +61,8 @@ Auto-generated tables — run `PYTHONPATH=src python experiments/make_report.py`
 ### Oracle vs HLO cross-check (dry-run cells)
 
 ### Pipeline validation (oracle vs measured)
+
+### Cluster calibration
 
 ### Per-cell observations
 
@@ -91,28 +96,24 @@ def dryrun_sections(recs: list) -> tuple[str, int, int]:
 
 
 def sweep_section() -> str:
-    from repro.core import OracleConfig, PAPER_V100_CLUSTER, TimeModel, stats_for
-    from repro.core.sweep import sweep
-    from repro.models.cnn import CosmoFlowConfig, RESNET50, VGGConfig
+    from repro.api import Oracle
 
-    tm = TimeModel(PAPER_V100_CLUSTER)
     grid = [2 ** k for k in range(11)]
     out = ["### Oracle sweep (vectorized strategy × scale projections)", "",
            "Best deployable split per (model, p) on the paper's V100 "
-           "cluster model, weak scaling 2 samples/PE; from "
-           "`python -m repro.core.sweep`. Pipeline rows are excluded here: "
-           "these are CNN trunks, which the GPipe executor cannot stack "
-           "(DESIGN.md §4) — the raw sweep CLI still projects them.",
+           "cluster model, weak scaling 2 samples/PE; from the `Oracle` "
+           "session facade (= `python -m repro.core.sweep`). Pipeline rows "
+           "are excluded here: these are CNN trunks, which the GPipe "
+           "executor cannot stack (DESIGN.md §4) — the raw sweep CLI still "
+           "projects them.",
            "", SWEEP_HDR]
-    models = {"resnet50": (RESNET50, 1_281_167),
-              "vgg16": (VGGConfig(), 1_281_167),
-              "cosmoflow": (CosmoFlowConfig(img=128), 1584)}
-    for name, (mc, D) in models.items():
-        stats = stats_for(mc)
+    models = {"resnet50": 1_281_167, "vgg16": 1_281_167, "cosmoflow": 1584}
+    for name, D in models.items():
         batch_of = lambda p: max(2 * p, 4)            # noqa: E731
-        cfg = OracleConfig(B=batch_of(grid[-1]), D=max(D, batch_of(grid[-1])))
-        res = sweep(stats, tm, cfg, grid, batch_for_p=batch_of,
-                    mem_cap=tm.system.mem_capacity)
+        ses = Oracle(name, "train_4k", "paper", batch=batch_of(grid[-1]),
+                     dataset=max(D, batch_of(grid[-1])))
+        res = ses.sweep(grid, batch_for_p=batch_of,
+                        mem_cap=ses.tm.system.mem_capacity)
         res = res.select(res.strategy != "pipeline")
         best = res.best_per_p()
         for p in grid:
@@ -134,31 +135,25 @@ def sweep_section() -> str:
 
 def tuner_section() -> str:
     """What ``strategy="auto"`` actually deploys, per (model, p)."""
-    from repro.configs import get_config
-    from repro.core import OracleConfig, PAPER_V100_CLUSTER, TimeModel, stats_for
-    from repro.core.autotune import autotune
-    from repro.models.cnn import CosmoFlowConfig, RESNET50, VGGConfig
+    from repro.api import Oracle
 
-    tm = TimeModel(PAPER_V100_CLUSTER)
     out = ["### Auto-tuner decisions (what strategy=\"auto\" deploys)", "",
            "Cheapest feasible (strategy, p1·p2 split, memory switches) per "
            "(model, p) on the paper's V100 cluster model, weak scaling "
            "2 samples/PE; ties go to the arch config's registered strategy. "
-           "From `python -m repro.core.autotune`.", "", TUNER_HDR]
-    models = {"resnet50": (RESNET50, 1_281_167),
-              "vgg16": (VGGConfig(), 1_281_167),
-              "cosmoflow": (CosmoFlowConfig(img=128), 1584)}
-    for name, (mc, D) in models.items():
-        stats = stats_for(mc)
-        fallback = get_config(name).strategy
+           "From `Oracle(model, shape, \"paper\").tune(p)` "
+           "(= `python -m repro.core.autotune`).", "", TUNER_HDR]
+    models = {"resnet50": 1_281_167, "vgg16": 1_281_167, "cosmoflow": 1584}
+    for name, D in models.items():
         for p in (8, 64, 512, 1024):
             B = max(2 * p, 4)
-            # all three models are CNNs — their forwards can't checkpoint
-            # and their heterogeneous trunks can't stack pipeline stages, so
-            # the table must never show a remat or pipeline plan
-            plan = autotune(stats, tm, OracleConfig(B=B, D=max(D, B)), p,
-                            mem_cap=tm.system.mem_capacity, fallback=fallback,
-                            allow_remat=False, allow_pipeline=False)
+            # all three models are CNNs: the session's tune() derives
+            # allow_remat=False (no checkpointing in CNN forwards) and
+            # allow_pipeline=False (heterogeneous trunks can't stack
+            # stages) from the arch registry, so the table never shows a
+            # remat or pipeline plan
+            plan = Oracle(name, "train_4k", "paper", batch=B,
+                          dataset=max(D, B)).tune(p)
             mark = "" if plan.feasible else " (fallback!)"
             out.append(f"| {name} | {p} | {plan.strategy}{mark} | "
                        f"{plan.p1}×{plan.p2} | {plan.switch_str()} | "
@@ -321,6 +316,62 @@ def pipeline_section(here: pathlib.Path) -> str:
     return "\n".join(out)
 
 
+def cluster_section(here: pathlib.Path) -> str:
+    """Fitted ClusterSpec (α/β, φ, σ per interconnect level + residuals).
+
+    Reads the artifact written by the calibration harness
+    (``python -m repro.api --calibrate --out experiments/cluster_fit.json``)
+    — the measured machine description ``ClusterSpec.from_json`` loads and
+    any entry point consumes via ``--cluster experiments/cluster_fit.json``.
+    """
+    out = ["### Cluster calibration (fitted ClusterSpec)", "",
+           "ISSUE 5 / ROADMAP φ–σ fitting: the measurement harness "
+           "(`core/calibration.calibrate_cluster`) times ring collectives "
+           "at several sizes (Hockney α/β least squares), concurrent "
+           "flows (contention φ, §4.3) and independent compute+comm "
+           "programs (overlap σ, DESIGN.md §10) per mesh axis, and "
+           "`ClusterSpec.fitted_from` turns the raw measurements into a "
+           "deployable machine description. Reload it anywhere with "
+           "`--cluster experiments/cluster_fit.json` or "
+           "`ClusterSpec.from_json(...)`.", ""]
+    art = here / "cluster_fit.json"
+    if not art.exists():
+        out.append("_no fitted-cluster artifact yet — run "
+                   "`PYTHONPATH=src python -m repro.api --calibrate "
+                   "--out experiments/cluster_fit.json`_")
+        return "\n".join(out)
+    rec = json.loads(art.read_text())
+    meta = rec.get("meta", {})
+    mesh = "×".join(str(v) for v in meta.get("mesh", {}).values()) or "?"
+    out += [f"`{rec['name']}` — mesh {mesh} "
+            f"({meta.get('devices', '?')} virtual host devices, "
+            f"jax {meta.get('jax', '?')}); peak "
+            f"{rec['peak_flops'] / 1e9:.1f} GFLOP/s/PE measured:", "",
+            CLUSTER_HDR]
+    phi = rec.get("phi") or {}
+    sigma = rec.get("sigma") or {}
+    resid = rec.get("fit_residuals", {})
+    for ax, lv in rec["levels"].items():
+        r = resid.get(f"{ax}/alpha_beta")
+        fitted = f"{ax}/alpha_beta" in resid
+        out.append(
+            f"| {ax} | {lv['alpha'] * 1e6:,.1f} | "
+            f"{1 / lv['beta'] / 1e9:.2f} | "
+            + (f"{phi[ax]:.2f}" if ax in phi else "—") + " | "
+            + (f"{sigma[ax]:.2f}" if ax in sigma else "—") + " | "
+            + (f"{r:.3f}" if r is not None else "(defaults)") + " |"
+            + ("" if fitted else "  _not measured (axis absent or "
+                                 "extent 1 on the calibration mesh)_"))
+    n_ms = len(rec.get("measurements", []))
+    out += ["", f"{n_ms} raw measurements are embedded in the artifact "
+            "(collective timings, contention pairs, overlap triples) — "
+            "`ClusterSpec.fitted_from(rec['measurements'])` reproduces "
+            "the fit. φ > 1 is real self-contention on the timeshared "
+            "host core; σ is what XLA actually hid when compute and an "
+            "independent collective shared one program."]
+    return "\n".join(out)
+
+
 def replace_between(text: str, start_marker: str, end_marker: str,
                     new: str) -> str:
     start = text.index(start_marker)
@@ -353,6 +404,8 @@ def main():
                       "### Per-cell observations")
     t = ensure_marker(t, "### Overlap validation",
                       "### Pipeline validation")
+    t = ensure_marker(t, "### Cluster calibration",
+                      "### Per-cell observations")
     recs = load_dryrun(here)
     dry, n_base, n_opt = dryrun_sections(recs)
     t = replace_between(t, "### Baseline cells",
@@ -366,11 +419,13 @@ def main():
     t = replace_between(t, "### Overlap validation",
                         "### Pipeline validation", overlap_section(here))
     t = replace_between(t, "### Pipeline validation",
-                        "### Per-cell observations", pipeline_section(here))
+                        "### Cluster calibration", pipeline_section(here))
+    t = replace_between(t, "### Cluster calibration",
+                        "### Per-cell observations", cluster_section(here))
     exp.write_text(t)
     print(f"refreshed: {n_base} baseline + {n_opt} variant dry-run cells "
           f"+ oracle sweep / auto-tuner / cross-check / overlap / pipeline "
-          f"tables")
+          f"/ cluster-fit tables")
 
 
 if __name__ == "__main__":

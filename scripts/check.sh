@@ -22,6 +22,16 @@ python -m repro.core.sweep --smoke
 echo "== auto-tuner smoke =="
 python -m repro.core.autotune --smoke
 
+echo "== session API parity gate =="
+# legacy-shim imports must emit DeprecationWarning but keep behaving, and
+# the Oracle session facade must answer within 1e-12 of the legacy
+# project/sweep/advise/autotune/plan_for_arch signatures (DESIGN.md §11)
+python -m repro.api --parity
+
+echo "== session API smoke =="
+# project → tune → build → dryrun on cpu_host_model through the session
+python -m repro.api --smoke
+
 echo "== pipeline deploy+validate smoke =="
 # deploys a TunedPlan[strategy=pipeline] through build_cell and trains one
 # step, then measures the GPipe executor against the oracle's DP-partitioned

@@ -1,0 +1,424 @@
+"""Session facade: ``Oracle(arch, shape, cluster)`` — one object from
+calibration to deployment (DESIGN.md §11).
+
+The paper's workflow is a loop: describe the machine, project strategies,
+pick a plan, deploy it, measure, and feed the measurements back into the
+machine description. Before this module each arrow was a differently-shaped
+function call (stats + TimeModel + OracleConfig threaded positionally
+through ``project``/``sweep``/``autotune``/``build_cell``/``validate``);
+the session binds (arch × input shape × ClusterSpec) once and exposes the
+loop as methods:
+
+    from repro.api import Oracle
+    ses  = Oracle("resnet50", "train_4k", "paper")
+    proj = ses.project("df", 64)          # one Table-3 row
+    res  = ses.sweep([8, 64, 1024])       # the vectorized lattice
+    plan = ses.tune(64)                   # cheapest deployable TunedPlan
+    cell = ses.build(mesh)                # deploy the plan on a mesh
+    pts  = ses.validate(mesh)             # measured vs projected (Fig. 3)
+    fit  = ses.calibrate(mesh)            # fitted ClusterSpec (α/β/φ/σ) —
+                                          # applied to the session, so the
+                                          # next .project() uses it
+
+Swapping machines is one argument: ``Oracle(arch, shape, "tpu")`` vs a
+fitted ``ClusterSpec.from_json("experiments/cluster_fit.json")`` vs a
+topology-constrained ``replace(spec, topology=Torus((4, 2)))`` — and the
+tuner prunes p1·p2 factorizations the torus cannot host instead of
+deploying them.
+
+Everything delegates to the same engines the legacy entry points use
+(core/oracle, core/sweep, core/autotune, core/validation, launch/build),
+so session results are bit-identical (≤1e-12) to the legacy calls —
+enforced by ``python -m repro.api --parity`` and tests/test_api.py.
+
+CLI:  python -m repro.api --smoke       # project→tune→build→dryrun smoke
+      python -m repro.api --parity      # session ↔ legacy parity gate
+      python -m repro.api --calibrate --out experiments/cluster_fit.json
+
+Module-level imports stay jax-free so the CLI can set XLA_FLAGS (virtual
+host devices) before any platform initialization.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .core.cluster import ClusterSpec, Torus  # noqa: F401 (re-export)
+
+_SES_DEFAULT_CLUSTER = "tpu"     # the deployment target plan_for_arch assumes
+
+
+class Oracle:
+    """One oracle session over (arch × input shape × ClusterSpec).
+
+    ``arch``: a registered arch name (``repro.configs.get_config``) or an
+    ``ArchConfig``. ``shape``: a ``SHAPES`` name (default ``train_4k``) or
+    a ``ShapeSpec``. ``cluster``: a ClusterSpec | preset name
+    ("paper"/"tpu"/"host") | SystemModel; defaults to the TPU deployment
+    target, matching ``plan_for_arch``. ``batch``/``dataset`` override the
+    shape's global batch / samples-per-epoch (both default to one
+    iteration per epoch, so projections rank per-iteration time);
+    remaining keywords (``overlap``, ``segments``, ``zero1`` …) flow into
+    the session's ``OracleConfig``.
+    """
+
+    def __init__(self, arch, shape: str = "train_4k", cluster=None, *,
+                 smoke: bool = False, batch: int | None = None,
+                 dataset: int | None = None, seq: int | None = None,
+                 mem_cap: float | None = None, **oracle_kw):
+        from .configs.base import SHAPES
+        from .core.autotune import stats_for_model
+        self.arch_cfg = self._resolve_arch(arch)
+        self.shape = SHAPES[shape] if isinstance(shape, str) else shape
+        self.smoke = smoke
+        self.model_cfg = (self.arch_cfg.smoke_model if smoke
+                          else self.arch_cfg.model)
+        self.seq = seq or self.shape.seq_len
+        self.stats = stats_for_model(self.model_cfg, self.seq)
+        self.B = batch or self.shape.global_batch
+        self.D = dataset or self.B
+        self.mem_cap = mem_cap
+        self._oracle_kw = dict(oracle_kw)
+        self._bind(ClusterSpec.coerce(cluster) or
+                   ClusterSpec.of(_SES_DEFAULT_CLUSTER))
+
+    @staticmethod
+    def _resolve_arch(arch):
+        from .configs import get_config
+        return get_config(arch) if isinstance(arch, str) else arch
+
+    def _bind(self, cluster: ClusterSpec) -> None:
+        """(Re)derive the projection state from a machine description —
+        the one place TimeModel/OracleConfig are built."""
+        from .core.oracle import TimeModel
+        self.cluster = cluster
+        self.tm = TimeModel(cluster.system)
+        self.cfg = cluster.oracle_config(B=self.B, D=self.D,
+                                         **self._oracle_kw)
+
+    def with_cluster(self, cluster) -> "Oracle":
+        """A new session on a different machine — everything else shared."""
+        ses = object.__new__(Oracle)
+        ses.__dict__.update(self.__dict__)
+        ses._oracle_kw = dict(self._oracle_kw)
+        ses._bind(ClusterSpec.coerce(cluster))
+        return ses
+
+    # -- projection ----------------------------------------------------------
+
+    def project(self, strategy: str, p: int, p1: int | None = None,
+                p2: int | None = None):
+        """One Table-3 row at p PEs (oracle.project on the session state)."""
+        from .core.oracle import project
+        return project(strategy, self.stats, self.tm, self.cfg, p,
+                       p1=p1, p2=p2)
+
+    def project_all(self, p: int, strategies=None):
+        from .core.oracle import STRATEGY_NAMES, project_all
+        return project_all(self.stats, self.tm, self.cfg, p,
+                           strategies or STRATEGY_NAMES)
+
+    def sweep(self, p_grid, strategies=None, **kw):
+        """The vectorized strategy × p × p1·p2 lattice; the session's
+        cluster topology prunes unhostable splits (sweep(cluster=...))."""
+        from .core.oracle import STRATEGY_NAMES
+        from .core.sweep import sweep
+        kw.setdefault("cluster", self.cluster)
+        return sweep(self.stats, self.tm, self.cfg, p_grid,
+                     strategies or STRATEGY_NAMES, **kw)
+
+    def advise(self, p: int, **kw):
+        from .core.advisor import advise
+        kw.setdefault("mem_cap", self.mem_cap)
+        kw.setdefault("cluster", self.cluster)
+        return advise(self.stats, self.tm, self.cfg, p, **kw)
+
+    def roofline_hw(self):
+        """This cluster as a roofline HardwareSpec (dry-run cross-checks)."""
+        from .core.roofline import HardwareSpec
+        return HardwareSpec.from_cluster(self.cluster)
+
+    # -- decision ------------------------------------------------------------
+
+    def tune(self, p: int, *, switches="all",
+             model_width: int | None = None):
+        """Cheapest deployable (strategy, p1·p2, switches) TunedPlan at p,
+        honoring the cluster's torus topology (infeasible factorizations
+        are pruned, not silently deployed)."""
+        from .core.autotune import plan_for_arch
+        return plan_for_arch(self.arch_cfg, self.shape.name, p,
+                             cluster=self.cluster, cfg=self.cfg,
+                             stats=self.stats,
+                             smoke=self.smoke, mem_cap=self.mem_cap,
+                             switches=switches, model_width=model_width)
+
+    # -- deployment ----------------------------------------------------------
+
+    def build(self, mesh, plan=None, **kw):
+        """Deploy a plan (default: ``tune()`` at the mesh's device count,
+        constrained to its model width) as a BuiltCell — step fn + sharded
+        abstract inputs, via launch.build.build_cell."""
+        from .launch.build import build_cell, mesh_device_count
+        if plan is None:
+            plan = self.tune(mesh_device_count(mesh),
+                             model_width=None if mesh is None
+                             else mesh.shape.get("model"))
+        return build_cell(self.arch_cfg, self.shape.name, mesh, "auto",
+                          smoke=self.smoke, plan=plan, **kw)
+
+    def dryrun(self, mesh=None, plan=None, **kw):
+        """Build, lower and compile the cell (proves the plan deploys);
+        returns the plan + compiled memory analysis."""
+        import jax
+        from .launch.mesh import make_host_mesh
+        mesh = mesh if mesh is not None else make_host_mesh()
+        cell = self.build(mesh, plan=plan, **kw)
+        compiled = jax.jit(cell.step_fn).lower(*cell.args).compile()
+        ma = compiled.memory_analysis()
+        return {
+            "arch": cell.arch, "shape": cell.shape, "kind": cell.kind,
+            "strategy": cell.strategy, "plan": cell.meta.get("plan"),
+            "mesh": {k: int(v) for k, v in mesh.shape.items()},
+            "memory": {"args_gib": ma.argument_size_in_bytes / 2 ** 30,
+                       "temp_gib": ma.temp_size_in_bytes / 2 ** 30,
+                       "out_gib": ma.output_size_in_bytes / 2 ** 30},
+        }
+
+    # -- measurement (closing the loop) --------------------------------------
+
+    def _measured_setup(self, mesh, batch_size=None, seq=None):
+        """Reduced model + synthetic batch for measured runs (always the
+        smoke config — full configs don't fit host devices)."""
+        from .core.autotune import stats_for_model
+        from .data.pipeline import ShardedLoader
+        from .launch.build import build_model
+        from .launch.train import data_config_for
+        mc = self.arch_cfg.smoke_model
+        model = build_model(self.arch_cfg, smoke=True)
+        b = batch_size or max(int(mesh.size), 8)
+        S = seq or min(self.seq, 128)
+        loader = ShardedLoader(data_config_for(mc, b, S), mesh)
+        batch = loader.batch_at(0)
+        stats = stats_for_model(mc, S)
+        flops = float(sum(s.flops_fwd for s in stats))
+        return model, mc, batch, b, S, flops
+
+    def validate(self, mesh, strategies=("data",), *, batch_size=None,
+                 seq=None, use_cluster: bool = False):
+        """Measure vs project each strategy at p = mesh size (paper Fig. 3)
+        on the reduced model. Default recalibrates the host in place (the
+        legacy path); ``use_cluster=True`` projects with THIS session's
+        cluster instead — pair with ``calibrate()`` to check the fitted
+        description against fresh measurements."""
+        from .core.validation import validate
+        model, mc, batch, b, S, flops = self._measured_setup(
+            mesh, batch_size, seq)
+        # project under the SAME model the session's projections use: the
+        # cluster's φ/σ tables plus any per-session OracleConfig overrides
+        # (overlap=False, phi_hybrid, segments, ...)
+        kw = {**self.cluster.oracle_kw(), **self._oracle_kw}
+        return validate(model, mc, batch, mesh, strategies,
+                        flops_per_sample=flops, B=b, S=S,
+                        oracle_cfg_kw=kw,
+                        cluster=self.cluster if use_cluster else None)
+
+    def calibrate(self, mesh=None, *, apply: bool = True,
+                  compute: bool = True, batch_size: int = 8,
+                  seq: int | None = None):
+        """Run the measurement harness (core/calibration.calibrate_cluster)
+        on a mesh: α/β per axis, contention φ, overlap σ — and compute
+        efficiency from a serial step of the reduced model when
+        ``compute``. Returns the fitted ClusterSpec; with ``apply`` (the
+        default) the session rebinds to it, so subsequent projections use
+        the measured machine. The raw measurements are kept on
+        ``self.last_measurements`` for the JSON artifact."""
+        from .core.calibration import calibrate_cluster
+        from .launch.mesh import make_host_mesh
+        mesh = mesh if mesh is not None else make_host_mesh()
+        kw = {}
+        if compute:
+            import jax
+            from .nn.module import tree_init
+            model, mc, batch, b, S, flops = self._measured_setup(
+                mesh, batch_size, seq)
+            params = tree_init(model.params_spec(), jax.random.PRNGKey(0))
+            kw = dict(loss_fn=lambda p_, b_: model.loss_fn(p_, b_),
+                      params=params, batch=batch,
+                      flops_per_step=flops * b)
+        spec, ms = calibrate_cluster(mesh, base=self.cluster, **kw)
+        self.last_measurements = ms
+        if apply:
+            self._bind(spec)
+        return spec
+
+    def describe(self) -> str:
+        return (f"Oracle[{self.arch_cfg.name} × {self.shape.name}"
+                f"{' (smoke)' if self.smoke else ''}] B={self.cfg.B} "
+                f"D={self.cfg.D}\n{self.cluster.describe()}")
+
+
+# ---------------------------------------------------------------------------
+# CLI: smoke / parity / calibrate
+# ---------------------------------------------------------------------------
+
+def _smoke(devices: int) -> int:
+    """Session smoke (check.sh gate): project → tune → build → dryrun on
+    the cpu_host_model cluster, virtual host devices."""
+    ses = Oracle("qwen1.5-4b", "train_4k", "host", smoke=True,
+                 batch=8, seq=128)
+    print(ses.describe())
+    p = devices
+    proj = ses.project("data", p)
+    assert proj.total_s > 0 and proj.feasible, proj
+    plan = ses.tune(p)
+    print(plan.describe())
+    assert plan.p == p and plan.p1 * plan.p2 == p
+    # the sweep sees the same numbers the per-point path printed
+    import numpy as np
+    res = ses.sweep([p], ("data",), switches=None)
+    i = int(np.flatnonzero((res.p1 == proj.p1) & (res.p2 == proj.p2))[0])
+    assert abs(res.total_s[i] - proj.total_s) <= 1e-12 * abs(proj.total_s)
+    out = ses.dryrun()   # host mesh; compiles the deployed step
+    print(f"dryrun: strategy={out['strategy']} mesh={out['mesh']} "
+          f"args={out['memory']['args_gib']:.3f}GiB "
+          f"temp={out['memory']['temp_gib']:.3f}GiB")
+    assert out["plan"] is not None and out["kind"] == "train"
+    print("repro.api --smoke OK")
+    return 0
+
+
+def _parity() -> int:
+    """Legacy ↔ session parity gate (check.sh): the deprecation shims warn
+    but behave identically, and session results match the legacy
+    signatures to ≤1e-12."""
+    import warnings
+
+    import numpy as np
+
+    from .core import advisor, oracle
+    from .core.autotune import autotune, plan_for_arch
+    from .core.hardware import PAPER_V100_CLUSTER
+    from .core.layer_stats import stats_for
+    from .core.sweep import parse_phi_table as legacy_phi
+    from .core.sweep import parse_sigma_table as legacy_sigma
+    from .core.sweep import sweep as legacy_sweep
+    from .models.cnn import RESNET50
+
+    # 1. shims: same result, plus a DeprecationWarning
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = legacy_phi("data=2.0,model=1.2")
+        legacy_s = legacy_sigma("model=0.5")
+    assert sum(issubclass(x.category, DeprecationWarning) for x in w) == 2, \
+        "legacy parse_*_table shims must emit DeprecationWarning"
+    from .core.cluster import parse_phi_table, parse_sigma_table
+    assert legacy == parse_phi_table("data=2.0,model=1.2")
+    assert legacy_s == parse_sigma_table("model=0.5")
+
+    # 2. numeric parity: session vs legacy call signatures
+    stats = stats_for(RESNET50)
+    tm = oracle.TimeModel(PAPER_V100_CLUSTER)
+    worst = 0.0
+    for p in (8, 64, 1024):
+        cfg = oracle.OracleConfig(B=2 * p, D=1_281_167)
+        ses = Oracle("resnet50", "train_4k", "paper", batch=2 * p,
+                     dataset=1_281_167)
+        for s in ("data", "df", "filter", "spatial"):
+            a = oracle.project(s, stats, tm, cfg, p).total_s
+            b = ses.project(s, p).total_s
+            worst = max(worst, abs(a - b) / max(abs(a), 1e-30))
+        ra = legacy_sweep(stats, tm, cfg, [p])
+        rb = ses.sweep([p])
+        assert len(ra) == len(rb)
+        worst = max(worst, float(np.max(
+            np.abs(ra.total_s - rb.total_s) /
+            np.maximum(np.abs(ra.total_s), 1e-30))))
+        reca = advisor.advise(stats, tm, cfg, p)
+        recb = ses.advise(p)
+        assert reca.best.strategy == recb.best.strategy
+        worst = max(worst, abs(reca.best.total_s - recb.best.total_s)
+                    / abs(reca.best.total_s))
+        # the legacy tuner and the session agree on the same cfg
+        pa = autotune(stats, tm, cfg, p, allow_pipeline=False)
+        pb = autotune(stats, tm, cfg, p, allow_pipeline=False,
+                      cluster=ses.cluster)
+        assert pa == pb, (pa, pb)
+    # 3. tune parity against the legacy plan_for_arch signature
+    from .configs import get_config
+    for p in (8, 64):
+        want = plan_for_arch(get_config("resnet50"), "train_4k", p)
+        got = Oracle("resnet50", "train_4k").tune(p)
+        assert want == got, (want, got)
+    assert worst <= 1e-12, f"session/legacy drift {worst:.2e}"
+    print(f"repro.api --parity OK (max rel drift {worst:.2e})")
+    return 0
+
+
+def _calibrate(out: str | None, devices: int) -> int:
+    import platform
+
+    import jax
+
+    from .launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    ses = Oracle("resnet50", "train_4k", "host", smoke=True)
+    spec = ses.calibrate(mesh)
+    print(spec.describe())
+    print("fit residuals:", dict(spec.fit_residuals))
+    if out:
+        rec = spec.to_json()
+        rec["meta"] = {
+            "harness": "python -m repro.api --calibrate",
+            "mesh": {k: int(v) for k, v in mesh.shape.items()},
+            "devices": devices, "backend": jax.default_backend(),
+            "host": platform.machine(),
+            "jax": jax.__version__,
+        }
+        rec["measurements"] = [m.to_json() for m in ses.last_measurements]
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"wrote {out}")
+        # the artifact round-trips into a usable ClusterSpec
+        again = ClusterSpec.from_json(out)
+        assert again.level("data").alpha == spec.level("data").alpha
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.api",
+        description="Oracle session facade utilities (DESIGN.md §11).")
+    ap.add_argument("--smoke", action="store_true",
+                    help="project→tune→build→dryrun on cpu_host_model "
+                         "(CI gate)")
+    ap.add_argument("--parity", action="store_true",
+                    help="legacy-shim DeprecationWarning + session↔legacy "
+                         "1e-12 parity gate (CI gate)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the measurement harness on the host mesh and "
+                         "fit a ClusterSpec (α/β, φ, σ per level)")
+    ap.add_argument("--out", default=None,
+                    help="--calibrate: write the fitted-cluster JSON "
+                         "artifact here (e.g. experiments/cluster_fit.json)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="virtual host device count for --smoke/--calibrate")
+    args = ap.parse_args(argv)
+    if args.smoke or args.calibrate:
+        # must precede any jax import (the module header stays jax-free)
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.devices}")
+    if args.parity:
+        return _parity()
+    if args.calibrate:
+        return _calibrate(args.out, args.devices)
+    if args.smoke:
+        return _smoke(args.devices)
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,11 +2,15 @@
 
 oracle.py (Table-3 projections), sweep.py (vectorized strategy × scale
 lattice engine), advisor.py (strategy selection), hardware.py (α–β system
-models), layer_stats.py (Table-2 tensor stats), calibration.py (§4.4
-empirical parametrization), validation.py (Fig-3 accuracy harness),
-hlo_analysis.py + roofline.py (dry-run cost extraction — beyond-paper,
-TPU-native).
+models), cluster.py (ClusterSpec: the first-class machine description —
+levels + topology + fitted φ/σ, DESIGN.md §11), layer_stats.py (Table-2
+tensor stats), calibration.py (§4.4 empirical parametrization),
+validation.py (Fig-3 accuracy harness), hlo_analysis.py + roofline.py
+(dry-run cost extraction — beyond-paper, TPU-native). The session facade
+over all of it lives one level up in ``repro.api``.
 """
+from .cluster import (ClusterSpec, Measurement, Torus, add_cluster_args,
+                      parse_phi_table, parse_sigma_table)
 from .hardware import (Level, PAPER_V100_CLUSTER, SystemModel, TPU_V5E_POD,
                        cpu_host_model)
 from .layer_stats import LayerStat, stats_for

@@ -31,9 +31,13 @@ def _split_candidates(p: int):
 def advise(stats: list[LayerStat], tm: TimeModel, cfg: OracleConfig, p: int,
            mem_cap: float | None = None,
            strategies=("data", "spatial", "pipeline", "filter", "channel",
-                       "df", "ds", "ep")) -> Recommendation:
+                       "df", "ds", "ep"), cluster=None) -> Recommendation:
+    """Rank strategies at p. ``cluster`` (a ClusterSpec) additionally
+    rejects splits its torus topology cannot host — they land in
+    ``rejected`` with the placement reason, like any scaling limit."""
     mem_cap = mem_cap or tm.system.mem_capacity
-    res = sweep(stats, tm, cfg, [p], strategies, mem_cap=mem_cap)
+    res = sweep(stats, tm, cfg, [p], strategies, mem_cap=mem_cap,
+                cluster=cluster)
     ranked, rejected = [], []
     for i, proj in enumerate(res.to_projections()):
         if not proj.feasible:

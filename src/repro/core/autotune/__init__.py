@@ -32,7 +32,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..hardware import SystemModel, TPU_V5E_POD
+from ..cluster import ClusterSpec, add_cluster_args
+from ..hardware import TPU_V5E_POD
 from ..oracle import OracleConfig, TimeModel
 from ..sweep import (HYBRID_STRATEGIES, SweepResult, parse_p_grid,
                      switch_label, sweep)
@@ -177,6 +178,7 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
              switches="all", fallback: str | None = None,
              allow_remat: bool = True, allow_pipeline: bool = True,
              max_stages: int | None = None, model_width: int | None = None,
+             cluster: "ClusterSpec | None" = None,
              rtol: float = 1e-9) -> TunedPlan:
     """Pick the cheapest deployable (strategy, p1·p2, switches) point at p.
 
@@ -190,7 +192,11 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
     uniform block stack — ``parallel.pipeline.pipeline_supported``).
     ``model_width`` constrains hybrid plans to one p2 — pass the mesh's
     model-axis size when the mesh is already shaped and cannot be
-    refactorized.
+    refactorized. ``cluster``: a ClusterSpec whose torus topology prunes
+    p1·p2 factorizations the machine cannot physically host (model axis
+    must ring within one allowed torus dim — cluster.Torus); pruned points
+    are never deployed, they fall out of the lattice like any other
+    infeasibility.
     """
     mem_cap = mem_cap if mem_cap is not None else tm.system.mem_capacity
     fallback = ORACLE_OF_EXEC.get(fallback, fallback)
@@ -207,7 +213,7 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
                 "pipeline_supported)")
         strategies = tuple(s for s in strategies if s != "pipeline")
     res = sweep(stats, tm, cfg, [p], strategies, mem_cap=mem_cap,
-                switches=switches)
+                switches=switches, cluster=cluster)
     if len(res) == 0:
         raise ValueError(f"no strategy in {strategies} applies to this model")
     keep = deployable_switch_mask(res, allow_remat=allow_remat)
@@ -266,26 +272,43 @@ def stats_for_model(mc, seq: int | None = None):
 
 
 def plan_for_arch(arch_cfg, shape_name: str, p: int, *,
-                  system: SystemModel | None = None, smoke: bool = False,
+                  system=None, cluster: "ClusterSpec | None" = None,
+                  smoke: bool = False,
                   mem_cap: float | None = None, switches="all",
-                  model_width: int | None = None) -> TunedPlan:
+                  model_width: int | None = None,
+                  cfg: OracleConfig | None = None,
+                  stats=None) -> TunedPlan:
     """Auto-tune a registered arch at one input shape on p PEs.
 
-    ``system`` defaults to the TPU-v5e deployment target (projection mode);
-    the oracle config is one epoch of exactly the shape's global batch, so
-    the plan ranks per-iteration time. ``model_width``: see ``autotune``.
+    ``system`` (a SystemModel or a ClusterSpec) defaults to the TPU-v5e
+    deployment target (projection mode); the oracle config is one epoch of
+    exactly the shape's global batch, so the plan ranks per-iteration time
+    (``cfg`` and ``stats`` override both — the session facade passes its
+    own so tune() ranks exactly what project()/sweep() report).
+    ``cluster`` supplies the machine description in one argument: α–β
+    system, φ/σ tables, and the torus topology that prunes unrealizable
+    p1·p2 factorizations. ``model_width``: see ``autotune``.
     """
     from ...configs.base import SHAPES
     from ...parallel.pipeline import pipeline_supported
+    if isinstance(system, ClusterSpec) and cluster is None:
+        cluster = system
+    cluster = ClusterSpec.coerce(cluster)
+    if cluster is not None:
+        system = cluster.system
     mc = arch_cfg.smoke_model if smoke else arch_cfg.model
     shape = SHAPES[shape_name]
-    stats = stats_for_model(mc, shape.seq_len)
+    if stats is None:
+        stats = stats_for_model(mc, shape.seq_len)
     tm = TimeModel(system or TPU_V5E_POD)
-    cfg = OracleConfig(B=shape.global_batch, D=shape.global_batch)
+    if cfg is None:
+        B = shape.global_batch
+        cfg = (cluster.oracle_config(B=B, D=B) if cluster is not None
+               else OracleConfig(B=B, D=B))
     can_pipe = (shape.kind == "train" and pipeline_supported(mc) is None)
     return autotune(stats, tm, cfg, p, mem_cap=mem_cap, switches=switches,
                     fallback=arch_cfg.strategy_for(shape_name),
-                    model_width=model_width,
+                    model_width=model_width, cluster=cluster,
                     allow_remat=arch_cfg.family != "cnn",
                     allow_pipeline=can_pipe,
                     max_stages=getattr(mc, "n_layers", None))
@@ -326,8 +349,7 @@ def _smoke() -> int:
 
 
 def main(argv=None) -> int:
-    from ..sweep import (_SYSTEMS, _model_config, _model_stats,
-                         parse_sigma_table)
+    from ..sweep import _model_config, _model_stats
     ap = argparse.ArgumentParser(
         prog="python -m repro.core.autotune",
         description="Oracle-in-the-loop auto-tuner: what should I run on "
@@ -337,7 +359,6 @@ def main(argv=None) -> int:
                     help="resnet50 | vgg16 | cosmoflow | any configs/ LM name")
     ap.add_argument("--p", default="64",
                     help="PE count(s): '64', '8,64,1024', '1..1024' (pow2)")
-    ap.add_argument("--system", default="paper", choices=sorted(_SYSTEMS))
     ap.add_argument("--batch", type=int, default=None,
                     help="fixed global batch B (default: weak scaling)")
     ap.add_argument("--batch-per-pe", type=float, default=2.0,
@@ -354,18 +375,16 @@ def main(argv=None) -> int:
                          "'pipeline' to force a stage-parallel plan)")
     ap.add_argument("--no-switches", action="store_true",
                     help="pin memory switches off instead of sweeping all 16")
+    add_cluster_args(ap, default_system="paper")
     ap.add_argument("--no-overlap", action="store_true",
                     help="rank under the paper's serial comm accounting "
                          "instead of the overlap model (DESIGN.md §10)")
-    ap.add_argument("--sigma", default=None, metavar="LVL=SIG[,LVL=SIG...]",
-                    help="per-interconnect overlap efficiency table, e.g. "
-                         "'model=0.9,data=0.8' (the defaults)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny self-check (CI gate)")
     args = ap.parse_args(argv)
     if args.smoke:
         return _smoke()
-    sigma = parse_sigma_table(args.sigma)
+    cluster = ClusterSpec.from_cli_args(args)
 
     stats, default_D = _model_stats(args.model, args.seq)
     # the CLI's recommendations must honor the same deployability gates as
@@ -373,23 +392,23 @@ def main(argv=None) -> int:
     from ...parallel.pipeline import pipeline_supported
     mc = _model_config(args.model)
     can_pipe = pipeline_supported(mc) is None
-    tm = TimeModel(_SYSTEMS[args.system])
+    tm = TimeModel(cluster.system)
     cap = (args.mem_cap_gib * 2 ** 30 if args.mem_cap_gib
            else tm.system.mem_capacity)
     p_grid = parse_p_grid(args.p)
     print(f"# model={args.model} system={tm.system.name} "
           f"mem_cap={cap / 2**30:.1f}GiB switches="
-          f"{'off' if args.no_switches else 'all 16 combos'}")
+          f"{'off' if args.no_switches else 'all 16 combos'}"
+          + (f" topology={cluster.topology}" if cluster.topology else ""))
     print(f"{'p':>6s} {'strategy':10s} {'p1xp2':>11s} {'switches':24s} "
           f"{'ms/iter':>9s} {'mem_GiB':>8s}  bottleneck")
     for p in p_grid:
         B = args.batch or max(int(round(args.batch_per_pe * p)), 1)
         D = max(args.dataset or default_D, B)
-        cfg = OracleConfig(B=B, D=D, overlap=not args.no_overlap,
-                           sigma_levels=sigma)
+        cfg = cluster.oracle_config(B=B, D=D, overlap=not args.no_overlap)
         plan = autotune(stats, tm, cfg, p, mem_cap=cap,
                         switches=None if args.no_switches else "all",
-                        fallback=args.fallback,
+                        fallback=args.fallback, cluster=cluster,
                         allow_pipeline=can_pipe,
                         max_stages=getattr(mc, "n_layers", None),
                         strategies=tuple(s for s in

@@ -1,6 +1,6 @@
 """Empirical parametrization (paper §4.4).
 
-Two measured ingredients feed the oracle:
+Measured ingredients feed the oracle:
   * compute: serial per-sample step time → an effective ``compute_efficiency``
     for the host SystemModel (the paper profiles FW_l/BW_l per layer on V100;
     on this box we calibrate the aggregate and apportion by FLOPs, which is
@@ -8,7 +8,12 @@ Two measured ingredients feed the oracle:
     groups),
   * communication: timed Allreduce/Allgather at several message sizes across
     the available (virtual) devices, least-squares fit of the ring formulas
-    to recover α and β.
+    to recover α and β,
+  * contention φ and overlap efficiency σ per interconnect level
+    (``measure_contention`` / ``measure_overlap``): the raw observations are
+    emitted as ``cluster.Measurement`` records and fitted by
+    ``ClusterSpec.fitted_from`` — ``calibrate_cluster`` runs the whole
+    harness and closes the loop back into projections (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .cluster import ClusterSpec, Measurement
 from .hardware import Level, SystemModel, cpu_host_model
 
 
@@ -36,42 +42,150 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     return float(np.median(times))
 
 
+def _collective_fn(mesh, axis: str, pattern: str):
+    """A jitted ring collective over one mesh axis (ar: allreduce-shaped,
+    ag: allgather-shaped replication)."""
+    sharding = NamedSharding(mesh, P(axis, None))
+    if pattern == "ar":
+        @jax.jit
+        def coll(x):
+            return jax.lax.with_sharding_constraint(
+                jnp.broadcast_to(jnp.sum(x, axis=0, keepdims=True),
+                                 x.shape), sharding)
+    else:
+        rep = NamedSharding(mesh, P(None, None))
+
+        @jax.jit
+        def coll(x):
+            return jax.lax.with_sharding_constraint(x, rep)
+    return coll, sharding
+
+
+def measure_collective(mesh, axis: str = "data",
+                       sizes=(1 << 12, 1 << 16, 1 << 20, 1 << 23),
+                       pattern: str = "ar") -> Measurement:
+    """Time one ring collective at several message sizes; the raw
+    observations (not a fit) — ``ClusterSpec.fitted_from`` recovers α/β."""
+    p = mesh.shape[axis]
+    coll, sharding = _collective_fn(mesh, axis, pattern)
+    ts = []
+    for nbytes in sizes:
+        x = jax.device_put(jnp.zeros((p, nbytes // 4), jnp.float32), sharding)
+        ts.append(time_fn(coll, x))
+    return Measurement(level=axis, kind="collective", pattern=pattern,
+                       p=p, nbytes=tuple(sizes), seconds=tuple(ts))
+
+
 def measure_alpha_beta(mesh, axis: str = "data",
                        sizes=(1 << 12, 1 << 16, 1 << 20, 1 << 23),
                        pattern: str = "ar") -> Level:
     """Fit ring-model α/β over measured collectives.
 
     pattern "ar": T = 2(p−1)(α + m/p·β);  "ag": T = (p−1)(α + m/p·β).
+    (Thin wrapper: one ``measure_collective`` run through the shared
+    Hockney fit in cluster.py.)
     """
+    m = measure_collective(mesh, axis, sizes, pattern)
+    spec = ClusterSpec.fitted_from([m], base=cpu_host_model())
+    lvl = spec.level(axis)
+    return Level(f"measured-{axis}-{pattern}", alpha=lvl.alpha, beta=lvl.beta)
+
+
+def measure_contention(mesh, axis: str = "data", nbytes: int = 1 << 20,
+                       flows: int = 2) -> Measurement:
+    """Self-contention φ (paper §4.3): one saturating collective alone vs
+    ``flows`` independent copies dispatched in a single jitted program —
+    sharing the level's links. φ = wall(shared) / wall(alone), clamped to
+    [1, flows] by the fit (1 = perfectly concurrent, flows = serialized)."""
     p = mesh.shape[axis]
-    rows, ts = [], []
-    for nbytes in sizes:
-        n = nbytes // 4
-        x = jnp.zeros((p, n), jnp.float32)
-        sharding = NamedSharding(mesh, P(axis, None))
-        x = jax.device_put(x, sharding)
-        if pattern == "ar":
-            @jax.jit
-            def coll(x):
-                return jax.lax.with_sharding_constraint(
-                    jnp.broadcast_to(jnp.sum(x, axis=0, keepdims=True),
-                                     x.shape), sharding)
-            factor = 2 * (p - 1)
-        else:
-            rep = NamedSharding(mesh, P(None, None))
+    coll, sharding = _collective_fn(mesh, axis, "ar")
+    xs = [jax.device_put(jnp.full((p, nbytes // 4), float(i + 1),
+                                  jnp.float32), sharding)
+          for i in range(flows)]
 
-            @jax.jit
-            def coll(x):
-                return jax.lax.with_sharding_constraint(x, rep)
-            factor = (p - 1)
+    @jax.jit
+    def many(*arrs):
+        return [jax.lax.with_sharding_constraint(
+            jnp.broadcast_to(jnp.sum(a, axis=0, keepdims=True), a.shape),
+            sharding) for a in arrs]
 
-        t = time_fn(coll, x)
-        rows.append([factor, factor / p * nbytes])
-        ts.append(t)
-    A = np.array(rows)
-    coef, *_ = np.linalg.lstsq(A, np.array(ts), rcond=None)
-    alpha, beta = float(max(coef[0], 1e-9)), float(max(coef[1], 1e-12))
-    return Level(f"measured-{axis}-{pattern}", alpha=alpha, beta=beta)
+    alone = time_fn(coll, xs[0])
+    shared = time_fn(many, *xs)
+    return Measurement(level=axis, kind="contention", alone_s=alone,
+                       shared_s=shared, flows=flows)
+
+
+def measure_overlap(mesh, axis: str = "data", nbytes: int = 1 << 21,
+                    matmul_dim: int = 256, matmul_iters: int = 8
+                    ) -> Measurement:
+    """Overlap efficiency σ (DESIGN.md §10): independent compute and comm
+    timed separately and fused into one program whose comm result does NOT
+    feed the compute — everything the runtime hides shows up as
+    both < comp + comm. σ = (comp + comm − both)/min(comp, comm)."""
+    p = mesh.shape[axis]
+    coll, sharding = _collective_fn(mesh, axis, "ar")
+    x = jax.device_put(jnp.ones((p, nbytes // 4), jnp.float32), sharding)
+    a = jax.device_put(
+        jnp.ones((p, matmul_dim, matmul_dim), jnp.float32) * 1e-3,
+        NamedSharding(mesh, P(axis, None, None)))
+
+    @jax.jit
+    def comp(a):
+        y = a
+        for _ in range(matmul_iters):
+            y = jnp.einsum("pij,pjk->pik", y, a)
+        return y
+
+    @jax.jit
+    def both(a, x):
+        y = a
+        for _ in range(matmul_iters):
+            y = jnp.einsum("pij,pjk->pik", y, a)
+        return y, coll(x)
+
+    t_comp = time_fn(comp, a)
+    t_comm = time_fn(coll, x)
+    t_both = time_fn(both, a, x)
+    return Measurement(level=axis, kind="overlap", comp_s=t_comp,
+                       comm_s=t_comm, both_s=t_both)
+
+
+def calibrate_cluster(mesh, *, base: ClusterSpec | None = None,
+                      loss_fn=None, params=None, batch=None,
+                      flops_per_step: float | None = None,
+                      sizes=(1 << 12, 1 << 16, 1 << 20, 1 << 23),
+                      per_pe_compute: bool = True
+                      ) -> tuple[ClusterSpec, list]:
+    """Run the full measurement harness on a mesh and fit a ClusterSpec.
+
+    Per mesh axis with extent > 1: α/β (allreduce + allgather patterns),
+    contention φ, and overlap σ. With ``loss_fn``/``params``/``batch``/
+    ``flops_per_step`` given, also calibrates compute; virtual host devices
+    timeshare one core, so ``per_pe_compute`` divides the measured
+    throughput by the device count (per-PE capability, paper §4.4).
+
+    Returns ``(fitted ClusterSpec, raw measurements)`` — the measurements
+    serialize into the ``experiments/cluster_fit.json`` artifact and
+    round-trip through ``ClusterSpec.fitted_from``.
+    """
+    base = ClusterSpec.coerce(base) or ClusterSpec.of("host")
+    if loss_fn is not None:
+        sysm = calibrate_compute(loss_fn, params, batch, flops_per_step,
+                                 base=base.system)
+        if per_pe_compute:
+            p = int(np.prod(list(mesh.shape.values())))
+            sysm = replace(sysm, peak_flops=sysm.peak_flops / max(p, 1))
+        base = replace(base, peak_flops=sysm.peak_flops,
+                       compute_efficiency=sysm.compute_efficiency)
+    ms: list[Measurement] = []
+    for axis in mesh.shape:
+        if mesh.shape[axis] <= 1:
+            continue
+        ms.append(measure_collective(mesh, axis, sizes, "ar"))
+        ms.append(measure_collective(mesh, axis, sizes, "ag"))
+        ms.append(measure_contention(mesh, axis))
+        ms.append(measure_overlap(mesh, axis))
+    return ClusterSpec.fitted_from(ms, base=base), ms
 
 
 def calibrate_compute(loss_fn, params, batch, flops_per_step: float,

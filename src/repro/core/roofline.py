@@ -26,6 +26,17 @@ class HardwareSpec:
     dci_bw: float = 25e9             # B/s per chip across pods (assumption)
     hbm_bytes: float = 16e9          # v5e HBM capacity
 
+    @classmethod
+    def from_cluster(cls, spec) -> "HardwareSpec":
+        """Roofline view of a ClusterSpec: intra-pod links from the
+        'model' level's β, the cross-pod hop from 'pod' — so dry-run
+        rooflines and oracle projections read one machine description."""
+        return cls(name=spec.name, peak_bf16=spec.peak_flops,
+                   hbm_bw=spec.hbm_bw,
+                   ici_bw=1.0 / spec.level("model").beta,
+                   dci_bw=1.0 / spec.level("pod").beta,
+                   hbm_bytes=spec.mem_capacity)
+
 
 V5E = HardwareSpec()
 

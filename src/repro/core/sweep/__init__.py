@@ -24,10 +24,14 @@ CLI (Fig-5-style scaling table):
 from __future__ import annotations
 
 import argparse
+import warnings
 from dataclasses import dataclass, replace
 
 import numpy as np
 
+from ..cluster import PHI_LEVELS, ClusterSpec, add_cluster_args
+from ..cluster import parse_phi_table as _parse_phi_table
+from ..cluster import parse_sigma_table as _parse_sigma_table
 from ..hardware import (PAPER_V100_CLUSTER, SystemModel, TPU_V5E_POD,
                        cpu_host_model)
 from ..oracle import (OracleConfig, Projection, STRATEGY_NAMES, StatTable,
@@ -70,38 +74,24 @@ def factor_pairs(p: int) -> list[tuple[int, int]]:
     return sorted(out)
 
 
-PHI_LEVELS = ("data", "model")   # levels the oracle's terms consume today
-
-
-def _parse_level_table(spec: str | None, flag: str):
-    """'data=2.0,model=1.2' → ((level, value), ...); None/empty → None.
-    Rejects unknown level names — a typo (or a level the α–β terms do not
-    yet consume, like the pod/DCI hop) must not silently change nothing."""
-    if not spec:
-        return None
-    out = []
-    for part in spec.split(","):
-        lvl, _, val = part.partition("=")
-        if not val:
-            raise ValueError(f"{flag} entry {part!r} is not LEVEL=VALUE")
-        lvl = lvl.strip()
-        if lvl not in PHI_LEVELS:
-            raise ValueError(f"{flag} level {lvl!r} is not consumed by the "
-                             f"oracle; known levels: {PHI_LEVELS}")
-        out.append((lvl, float(val)))
-    return tuple(out)
-
-
 def parse_phi_table(spec: str | None):
-    """Contention table for OracleConfig.phi_levels (paper's single
-    phi_hybrid constant applies when absent)."""
-    return _parse_level_table(spec, "--phi")
+    """DEPRECATED shim — moved to ``repro.core.cluster.parse_phi_table``
+    (``ClusterSpec.from_cli_args`` wires the CLI flags). Same behavior."""
+    warnings.warn(
+        "repro.core.sweep.parse_phi_table moved to repro.core.cluster; "
+        "import it from there (or use ClusterSpec.from_cli_args)",
+        DeprecationWarning, stacklevel=2)
+    return _parse_phi_table(spec)
 
 
 def parse_sigma_table(spec: str | None):
-    """Overlap-efficiency table for OracleConfig.sigma_levels
-    (SIGMA_DEFAULTS apply when absent)."""
-    return _parse_level_table(spec, "--sigma")
+    """DEPRECATED shim — moved to ``repro.core.cluster.parse_sigma_table``
+    (``ClusterSpec.from_cli_args`` wires the CLI flags). Same behavior."""
+    warnings.warn(
+        "repro.core.sweep.parse_sigma_table moved to repro.core.cluster; "
+        "import it from there (or use ClusterSpec.from_cli_args)",
+        DeprecationWarning, stacklevel=2)
+    return _parse_sigma_table(spec)
 
 
 def parse_p_grid(spec: str) -> list[int]:
@@ -306,7 +296,8 @@ def _lattice(strategy: str, p_grid, batch_of) -> tuple | None:
 
 def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
           strategies=STRATEGY_NAMES, *, batch_for_p=None,
-          mem_cap: float | None = None, switches=None) -> SweepResult:
+          mem_cap: float | None = None, switches=None,
+          cluster: "ClusterSpec | None" = None) -> SweepResult:
     """Evaluate the whole (strategy × p × p1·p2 [× switches]) lattice
     vectorized.
 
@@ -317,6 +308,11 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
     evaluates only the combination already set on ``cfg``; ``"all"``
     enumerates all 16 (remat, zero1, zero3, seq_parallel) combinations as a
     16× lattice axis; or pass an explicit iterable of 4-bool tuples.
+    ``cluster``: a ClusterSpec whose torus topology (if any) additionally
+    prunes lattice points whose model axis cannot embed as a physical ring
+    (cluster.Torus.split_mask; DESIGN.md §11) — the α–β terms themselves
+    still come from ``tm``/``cfg``, so a cluster with ``topology=None``
+    changes nothing.
     """
     unknown = set(strategies) - set(STRATEGY_NAMES)
     if unknown:
@@ -364,6 +360,12 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
                                            (n,)).copy())
         feas = np.broadcast_to(np.asarray(evals[0][1]["feasible"], bool),
                                (n,)).copy()
+        topo = None if cluster is None else cluster.topology
+        topo_ok = None
+        if topo is not None:
+            topo_ok = np.broadcast_to(
+                topo.split_mask(p, p1, p2, strategy=s), (n,)).copy()
+            feas &= topo_ok
         memo: dict = {}   # limit strings only vary with (B, feasible)
 
         def limit_of(Bi: int, fi: bool) -> str:
@@ -375,6 +377,11 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
         limits = np.array(
             [limit_of(int(Bi), bool(fi)) for Bi, fi in zip(B, feas)],
             dtype=object)
+        if topo_ok is not None and not topo_ok.all():
+            # topology-pruned points carry the placement reason, not the
+            # (possibly satisfied) scaling limit
+            limits = np.where(topo_ok, limits,
+                              topo.limit_str(s)).astype(object)
         for combo, r in evals:
             cols["strategy"].append(np.full(n, s, dtype="U8"))
             cols["p"].append(p)
@@ -420,8 +427,9 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
 # CLI
 # ---------------------------------------------------------------------------
 
-_SYSTEMS = {"paper": PAPER_V100_CLUSTER, "tpu": TPU_V5E_POD,
-            "host": cpu_host_model()}
+# legacy alias — the preset table now lives in cluster.py (one source);
+# kept because external callers imported it from here
+from ..cluster import _NAMED_SYSTEMS as _SYSTEMS  # noqa: E402
 _CNN_DATASETS = {"resnet50": 1_281_167, "vgg16": 1_281_167,
                  "cosmoflow": 1584}
 
@@ -476,7 +484,6 @@ def main(argv=None) -> int:
                     help="resnet50 | vgg16 | cosmoflow | any configs/ LM name")
     ap.add_argument("--p", default="1..1024",
                     help="p grid: '1..1024' (pow2), '4..64:4' (step), '4,6,12'")
-    ap.add_argument("--system", default="paper", choices=sorted(_SYSTEMS))
     ap.add_argument("--batch", type=int, default=None,
                     help="fixed global batch B (default: weak scaling)")
     ap.add_argument("--batch-per-pe", type=float, default=2.0,
@@ -489,18 +496,12 @@ def main(argv=None) -> int:
     for flag in ("remat", "zero1", "zero3", "seq-parallel"):
         ap.add_argument(f"--{flag}", action="store_true",
                         help=f"memory-model switch (DESIGN.md §3)")
-    ap.add_argument("--phi", default=None, metavar="LVL=PHI[,LVL=PHI...]",
-                    help="per-interconnect contention table, e.g. "
-                         "'data=2.0,model=1.2' (default: the paper's single "
-                         "phi_hybrid=2.0 on the hybrid gradient exchange)")
+    add_cluster_args(ap, default_system="paper")
     ap.add_argument("--no-overlap", action="store_true",
                     help="charge every comm term serially — the paper's "
                          "original accounting (default: halo P2P and the "
                          "gradient exchange hide under compute, DESIGN.md "
                          "§10)")
-    ap.add_argument("--sigma", default=None, metavar="LVL=SIG[,LVL=SIG...]",
-                    help="per-interconnect overlap efficiency table, e.g. "
-                         "'model=0.9,data=0.8' (the defaults)")
     ap.add_argument("--strategies", default=",".join(STRATEGY_NAMES))
     ap.add_argument("--crossover", nargs=2, metavar=("BASE", "CHALLENGER"),
                     default=("data", "df"),
@@ -513,24 +514,23 @@ def main(argv=None) -> int:
         return _smoke()
 
     stats, default_D = _model_stats(args.model, args.seq)
-    tm = TimeModel(_SYSTEMS[args.system])
+    cluster = ClusterSpec.from_cli_args(args)
+    tm = TimeModel(cluster.system)
     p_grid = parse_p_grid(args.p)
     D = args.dataset or default_D
     if args.batch is not None:
         batch_of = lambda p: args.batch          # noqa: E731
     else:
         batch_of = lambda p: max(int(round(args.batch_per_pe * p)), 1)  # noqa: E731
-    cfg = OracleConfig(B=batch_of(max(p_grid)), D=max(D, batch_of(max(p_grid))),
-                       remat=args.remat, zero1=args.zero1, zero3=args.zero3,
-                       seq_parallel=args.seq_parallel,
-                       phi_levels=parse_phi_table(args.phi),
-                       overlap=not args.no_overlap,
-                       sigma_levels=parse_sigma_table(args.sigma))
+    cfg = cluster.oracle_config(
+        B=batch_of(max(p_grid)), D=max(D, batch_of(max(p_grid))),
+        remat=args.remat, zero1=args.zero1, zero3=args.zero3,
+        seq_parallel=args.seq_parallel, overlap=not args.no_overlap)
     cap = (args.mem_cap_gib * 2 ** 30 if args.mem_cap_gib
            else tm.system.mem_capacity)
     strategies = tuple(s for s in args.strategies.split(",") if s)
     res = sweep(stats, tm, cfg, p_grid, strategies, batch_for_p=batch_of,
-                mem_cap=cap)
+                mem_cap=cap, cluster=cluster)
 
     if args.csv:
         print("strategy,p,p1,p2,B,comp_s,comm_ge_s,comm_fb_s,comm_halo_s,"

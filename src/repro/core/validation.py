@@ -116,21 +116,35 @@ def measure_step(model, model_cfg, batch, mesh, strategy: str,
 
 def validate(model, model_cfg, batch, mesh, strategies, *,
              flops_per_sample: float, B: int, S: int = 128,
-             oracle_cfg_kw: dict | None = None) -> list[ValidationPoint]:
-    """Measure + project each strategy at p = mesh size; paper Fig. 3."""
+             oracle_cfg_kw: dict | None = None,
+             cluster=None) -> list[ValidationPoint]:
+    """Measure + project each strategy at p = mesh size; paper Fig. 3.
+
+    ``cluster``: a (typically fitted) ClusterSpec describing PER-PE
+    capability — projections then use its α–β/φ/σ instead of calibrating
+    the host in place, closing the calibrate→project loop
+    (``Oracle.calibrate`` → ``Oracle.validate``). Without it, the host is
+    calibrated here as before.
+    """
+    import dataclasses
     stats = stats_for(model_cfg, S)
     flops_step = flops_per_sample * B
-    sysm = calibrate_host_system(
-        lambda p, b: model.loss_fn(p, b),
-        tree_init(model.params_spec(), jax.random.PRNGKey(0)), batch,
-        flops_step, mesh=mesh)
     p = int(np.prod(list(mesh.shape.values())))
-    # virtual host devices timeshare ONE core: a PE delivers 1/p of the
-    # measured serial throughput. The oracle's system model describes actual
-    # per-PE capability (paper §4.4), so divide.
-    import dataclasses
-    sysm = dataclasses.replace(sysm, peak_flops=sysm.peak_flops / p)
-    cfg = OracleConfig(B=B, D=B, **(oracle_cfg_kw or {}))  # 1 iteration/epoch
+    kw = dict(oracle_cfg_kw or {})
+    if cluster is not None:
+        sysm = cluster.system
+        for k, v in cluster.oracle_kw().items():
+            kw.setdefault(k, v)
+    else:
+        sysm = calibrate_host_system(
+            lambda p, b: model.loss_fn(p, b),
+            tree_init(model.params_spec(), jax.random.PRNGKey(0)), batch,
+            flops_step, mesh=mesh)
+        # virtual host devices timeshare ONE core: a PE delivers 1/p of the
+        # measured serial throughput. The oracle's system model describes
+        # actual per-PE capability (paper §4.4), so divide.
+        sysm = dataclasses.replace(sysm, peak_flops=sysm.peak_flops / p)
+    cfg = OracleConfig(B=B, D=B, **kw)  # 1 iteration/epoch
     tm = TimeModel(sysm)
     points = []
     for s in strategies:

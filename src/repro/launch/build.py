@@ -137,7 +137,11 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = No
     optimizer setting derived from the plan's switches — never from
     substring-matching the strategy name). Pass ``plan`` to reuse a plan
     already computed (e.g. by a launch driver that also shaped the mesh
-    from it); ``system`` overrides the tuner's system model.
+    from it); ``system`` overrides the tuner's machine model — a
+    SystemModel or a ClusterSpec (whose torus topology then prunes splits
+    the machine cannot host). The session facade (``repro.api.Oracle``)
+    calls this with its own plan; prefer ``Oracle(...).build(mesh)`` in new
+    code.
     """
     shape = SHAPES[shape_name]
     strategy = strategy or cfg.strategy_for(shape_name)

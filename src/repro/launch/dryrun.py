@@ -94,7 +94,10 @@ def model_flops_of(model, shape, kind: str) -> float:
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
              strategy: str | None = None, kv_shards: int | None = None,
              tag: str = "", verbose: bool = True,
-             mesh_shape: str | None = None) -> dict:
+             mesh_shape: str | None = None, cluster=None) -> dict:
+    """``cluster``: optional ClusterSpec the auto-tuner plans against
+    (α–β/φ/σ + torus placement constraints); default stays the TPU-v5e
+    deployment target."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     strategy = strategy or default_strategy(cfg, shape_name)
@@ -112,7 +115,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
         else:
             chips_planned = mesh_device_count(
                 make_production_mesh(multi_pod=multi_pod))
-        plan = plan_for_arch(cfg, shape_name, chips_planned)
+        plan = plan_for_arch(cfg, shape_name, chips_planned, cluster=cluster)
         strategy = plan.exec_strategy(shape.kind)
         if mesh_shape is None:
             if not multi_pod:
@@ -235,7 +238,11 @@ def main() -> None:
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--mesh-shape", default=None,
                     help="override mesh, e.g. 64x4 (oracle-guided variants)")
+    from ..core.cluster import add_cluster_args
+    add_cluster_args(ap, default_system="tpu")
     args = ap.parse_args()
+    from ..core.cluster import ClusterSpec
+    cluster = ClusterSpec.from_cli_args(args)
     out = Path(args.out)
 
     cells = []
@@ -263,7 +270,7 @@ def main() -> None:
         try:
             run_cell(arch, shape, mp, out, strategy=args.strategy,
                      kv_shards=args.kv_shards, tag=args.tag,
-                     mesh_shape=args.mesh_shape)
+                     mesh_shape=args.mesh_shape, cluster=cluster)
         except Exception as e:  # noqa: BLE001 — report, continue, fail at end
             failures.append((arch, shape, mp, repr(e)))
             print(f"FAIL {arch} × {shape} multi_pod={mp}: {e}")

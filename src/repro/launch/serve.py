@@ -32,6 +32,9 @@ def main(argv=None) -> None:
                          "auto-tuner pick the serving layout")
     ap.add_argument("--kv-shards", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    # machine description for --strategy auto (ClusterSpec flags)
+    from ..core.cluster import add_cluster_args
+    add_cluster_args(ap, default_system="host")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -44,18 +47,20 @@ def main(argv=None) -> None:
     if strategy == "auto":
         # the tuner picks the hybrid split; serving deploys its model width
         from ..core.autotune import autotune, stats_for_model
-        from ..core.hardware import cpu_host_model
-        from ..core.oracle import OracleConfig, TimeModel
+        from ..core.cluster import ClusterSpec
+        from ..core.oracle import TimeModel
         n = len(jax.devices())
         B = args.batch
+        cluster = ClusterSpec.from_cli_args(args)
         # switches=None: the serving exec path deploys no memory switches
         # (no optimizer to ZeRO-shard, no backward to remat), so the plan
         # must not claim feasibility through them
         # allow_pipeline=False: GPipe is a training schedule (fill/drain
         # over microbatches) — serving must never rank it
         plan = autotune(stats_for_model(mc, args.prompt_len + args.gen),
-                        TimeModel(cpu_host_model()),
-                        OracleConfig(B=B, D=B), n, fallback="serve_tp",
+                        TimeModel(cluster.system),
+                        cluster.oracle_config(B=B, D=B), n,
+                        fallback="serve_tp", cluster=cluster,
                         switches=None, allow_pipeline=False)
         print(plan.describe())
         strategy = plan.exec_strategy("decode")

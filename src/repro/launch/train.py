@@ -69,6 +69,10 @@ def main(argv=None) -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scan-layers", action="store_true", default=True)
+    # machine description for --strategy auto (default: the host box;
+    # --cluster takes a fitted experiments/cluster_fit.json artifact)
+    from ..core.cluster import add_cluster_args
+    add_cluster_args(ap, default_system="host")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -77,16 +81,18 @@ def main(argv=None) -> None:
     strategy, plan = args.strategy, None
     if strategy == "auto":
         # oracle-in-the-loop: tune (strategy, mesh split, memory switches)
-        # for this box, then deploy the plan (DESIGN.md §8)
+        # for the machine the cluster flags describe (default: this box),
+        # then deploy the plan (DESIGN.md §8/§11)
         from ..core.autotune import autotune, stats_for_model
-        from ..core.hardware import cpu_host_model
-        from ..core.oracle import OracleConfig, TimeModel
+        from ..core.cluster import ClusterSpec
+        from ..core.oracle import TimeModel
         from ..parallel.pipeline import pipeline_supported
         n = len(jax.devices())
+        cluster = ClusterSpec.from_cli_args(args)
         plan = autotune(stats_for_model(mc, args.seq),
-                        TimeModel(cpu_host_model()),
-                        OracleConfig(B=args.batch, D=args.batch), n,
-                        fallback=cfg.strategy,
+                        TimeModel(cluster.system),
+                        cluster.oracle_config(B=args.batch, D=args.batch), n,
+                        fallback=cfg.strategy, cluster=cluster,
                         allow_remat=cfg.family != "cnn",
                         allow_pipeline=pipeline_supported(mc) is None,
                         max_stages=getattr(mc, "n_layers", None))
