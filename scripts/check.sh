@@ -62,6 +62,15 @@ for attempt in 1 2 3; do
     fi
 done
 
+echo "== chaos-gate: elastic recovery on virtual devices =="
+# slice death mid-run: the survivors' ClusterSpec is re-tuned, the
+# checkpoint is resharded plan-to-plan, and the resumed loss trajectory is
+# bit-exact vs the planned-reshape reference (DESIGN.md §12). The full
+# scenario matrix (straggler burst, torn checkpoint, spaced transients)
+# lives behind the chaos marker — kept out of the tier-1 fast path
+python -m repro.api --chaos
+python -m pytest -q -m chaos tests/test_chaos.py
+
 echo "== kernel bench smoke =="
 # every Pallas kernel must run (interpret mode); a kernel that stops
 # compiling fails the gate. The smoke writes its own (gitignored) side

@@ -143,16 +143,20 @@ class Oracle:
     # -- decision ------------------------------------------------------------
 
     def tune(self, p: int, *, switches="all",
-             model_width: int | None = None):
+             model_width: int | None = None,
+             allow_pipeline: bool | None = None):
         """Cheapest deployable (strategy, p1·p2, switches) TunedPlan at p,
         honoring the cluster's torus topology (infeasible factorizations
-        are pruned, not silently deployed)."""
+        are pruned, not silently deployed). ``allow_pipeline=False`` bars
+        the GPipe schedule (the elastic controller's rebind path deploys
+        plain SPMD steps only — runtime/elastic.py)."""
         from .core.autotune import plan_for_arch
         return plan_for_arch(self.arch_cfg, self.shape.name, p,
                              cluster=self.cluster, cfg=self.cfg,
                              stats=self.stats,
                              smoke=self.smoke, mem_cap=self.mem_cap,
-                             switches=switches, model_width=model_width)
+                             switches=switches, model_width=model_width,
+                             allow_pipeline=allow_pipeline)
 
     # -- deployment ----------------------------------------------------------
 
@@ -356,6 +360,108 @@ def _parity() -> int:
     return 0
 
 
+def _chaos(devices: int) -> int:
+    """Chaos smoke (check.sh chaos-gate; DESIGN.md §12): kill a torus slice
+    mid-run and prove the elastic loop end-to-end — the tuner re-plans on
+    the surviving ClusterSpec, the checkpoint reshards plan-to-plan, and
+    the resumed loss trajectory is bit-exact vs an uninterrupted baseline
+    (prefix) and vs a clean continuation planned on the degraded machine
+    (suffix): recovery ≡ planned reshape, bit for bit.
+
+    Self-contained (no tests/ imports): a tiny uniform LM on the virtual
+    host mesh, a (2,4) torus losing dim 0 → a (4)-torus at step 10 of 16.
+    The richer scenario matrix lives in tests/test_chaos.py.
+    """
+    import tempfile
+    from dataclasses import replace as _replace
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from .checkpoint.checkpointing import Checkpointer
+    from .configs.base import SHAPES, ArchConfig, ShapeSpec
+    from .data.pipeline import DataConfig
+    from .models import LMConfig, TransformerLM
+    from .nn import AttentionConfig, FFNConfig
+    from .optim.optimizers import OptimizerConfig
+    from .runtime.elastic import bind_plan, run_elastic
+    from .runtime.fault_tolerance import SliceLost
+    from .training.steps import train_state_spec
+
+    V, D, L, B, S, N, KILL = 64, 32, 2, 8, 32, 16, 10
+    mc = LMConfig(name="t", vocab=V, d_model=D, n_layers=L,
+                  attn=AttentionConfig(D, 4, 2, 8, dtype=jnp.float32),
+                  ffn=FFNConfig(D, 2 * D, dtype=jnp.float32),
+                  dtype=jnp.float32)
+    model = TransformerLM(mc)
+    SHAPES["train_tiny"] = ShapeSpec("train_tiny", S, B, "train")
+    acfg = ArchConfig(name="chaos-smoke", family="lm", model=mc,
+                      smoke_model=mc, source="chaos", strategy="df")
+    cluster = _replace(ClusterSpec.of("host"),
+                       topology=Torus((2, 4), model_dims=(1,)))
+    ses = Oracle(acfg, "train_tiny", cluster, batch=B, seq=S)
+    data_cfg = DataConfig("lm", batch=B, seq_len=S, vocab=V)
+    opt = OptimizerConfig(lr=1e-2, name="adamw", zero1=False)
+    fwd = dict(attn_impl="plain", scan_layers=False, remat=False)
+
+    def run(inject, ckpt):
+        traj = {}
+        state, step, events = run_elastic(
+            ses, data_cfg, ckpt, n_steps=N, model=model, opt=opt,
+            ckpt_every=4, inject=inject, fwd_kw=fwd, seed=0,
+            on_metrics=lambda s, m: traj.__setitem__(s, float(m["loss"])))
+        params = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                              state["params"])
+        return traj, events, params
+
+    fired = set()
+
+    def kill(step):
+        if step == KILL and step not in fired:
+            fired.add(step)
+            raise SliceLost(step, dim=0, reason="injected slice death")
+
+    with tempfile.TemporaryDirectory() as da, \
+            tempfile.TemporaryDirectory() as db:
+        ck_a, ck_b = Checkpointer(da, keep=10), Checkpointer(db, keep=10)
+        traj_a, ev_a, _ = run(None, ck_a)          # uninterrupted baseline
+        traj_b, ev_b, params_b = run(kill, ck_b)   # chaos run
+        assert ev_a == [] and len(ev_b) == 1, (ev_a, ev_b)
+        ev = ev_b[0]
+        assert (ev.p_before, ev.p_after) == (8, 4), ev
+        # the re-tuned plan is valid on the shrunken topology
+        degraded = cluster.degraded(dim=0)
+        assert degraded.topology.size == 4
+        p1, p2 = ev.mesh_shape
+        assert p1 * p2 == 4, ev
+        assert bool(degraded.topology.split_mask(4, p1, p2, ev.strategy)), ev
+        resumed = ev.resumed_from
+        assert 0 < resumed <= KILL and resumed % 4 == 0, ev
+        # prefix: bit-exact vs the uninterrupted run (same mesh, same plan)
+        for s in range(resumed):
+            assert traj_b[s] == traj_a[s], (s, traj_b[s], traj_a[s])
+        # suffix: bit-exact vs a PLANNED degraded continuation from the
+        # baseline's own checkpoint — recovery ≡ planned reshape
+        b2 = bind_plan(ses.with_cluster(degraded), jax.devices()[:4],
+                       data_cfg, model, opt, fwd)
+        st, s0 = ck_a.restore(train_state_spec(model, opt), step=resumed,
+                              shardings=b2.shardings)
+        for s in range(s0, N):
+            st, m = b2.step_fn(st, b2.loader.batch_at(s))
+            assert traj_b[s] == float(m["loss"]), (s, traj_b[s],
+                                                   float(m["loss"]))
+        jax.tree.map(
+            np.testing.assert_array_equal, params_b,
+            jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                         st["params"]))
+    print(f"repro.api --chaos OK (slice death @ step {KILL}: p 8→4 on "
+          f"{degraded.topology}, re-tuned {ev.strategy} {p1}x{p2}, resumed "
+          f"@ {resumed}; trajectory + final params bit-exact vs planned "
+          f"reshape)")
+    return 0
+
+
 def _calibrate(out: str | None, devices: int) -> int:
     import platform
 
@@ -399,13 +505,19 @@ def main(argv=None) -> int:
     ap.add_argument("--calibrate", action="store_true",
                     help="run the measurement harness on the host mesh and "
                          "fit a ClusterSpec (α/β, φ, σ per level)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="elastic-training chaos smoke: kill a simulated "
+                         "torus slice mid-run, re-tune on the surviving "
+                         "ClusterSpec, reshard plan-to-plan, and pin the "
+                         "resumed trajectory bit-exact (DESIGN.md §12)")
     ap.add_argument("--out", default=None,
                     help="--calibrate: write the fitted-cluster JSON "
                          "artifact here (e.g. experiments/cluster_fit.json)")
     ap.add_argument("--devices", type=int, default=8,
-                    help="virtual host device count for --smoke/--calibrate")
+                    help="virtual host device count for --smoke/--calibrate/"
+                         "--chaos")
     args = ap.parse_args(argv)
-    if args.smoke or args.calibrate:
+    if args.smoke or args.calibrate or args.chaos:
         # must precede any jax import (the module header stays jax-free)
         os.environ.setdefault(
             "XLA_FLAGS",
@@ -414,6 +526,8 @@ def main(argv=None) -> int:
         return _parity()
     if args.calibrate:
         return _calibrate(args.out, args.devices)
+    if args.chaos:
+        return _chaos(args.devices)
     if args.smoke:
         return _smoke(args.devices)
     ap.print_help()

@@ -10,7 +10,10 @@ Layout:  <dir>/step_<n>/
 ``save`` can run in a background thread (async checkpointing: the train loop
 donates nothing and continues while the host thread serializes), and
 ``latest_step``/``restore`` implement the fault-tolerant restart contract
-used by runtime/fault_tolerance.py.
+used by runtime/fault_tolerance.py. Directory mutation (commit-rename and
+retention GC) and the read paths share one lock, so an async save's GC can
+never yank a checkpoint out from under a concurrent ``completed_steps`` /
+``restore`` — the elastic controller reads while saves are in flight.
 """
 from __future__ import annotations
 
@@ -62,6 +65,9 @@ class Checkpointer:
         self.keep = keep
         self.config_tag = config_tag
         self._thread: threading.Thread | None = None
+        # serializes directory mutation (commit, GC) against readers; RLock
+        # because _gc runs under save's commit section which already holds it
+        self._lock = threading.RLock()
 
     # -- write ------------------------------------------------------------
     def save(self, state, step: int, blocking: bool = True) -> Path:
@@ -84,10 +90,11 @@ class Checkpointer:
                      **{p.replace("/", "|"): v for p, v in leaves.items()})
             (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
             (tmp / ".complete").write_text("ok")
-            if path.exists():
-                shutil.rmtree(path)
-            tmp.rename(path)
-            self._gc()
+            with self._lock:
+                if path.exists():
+                    shutil.rmtree(path)
+                tmp.rename(path)
+                self._gc()
 
         if blocking:
             write()
@@ -103,17 +110,19 @@ class Checkpointer:
             self._thread = None
 
     def _gc(self):
-        steps = sorted(self.completed_steps())
-        for s in steps[:-self.keep]:
-            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+        with self._lock:
+            steps = sorted(self.completed_steps())
+            for s in steps[:-self.keep]:
+                shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
 
     # -- read -------------------------------------------------------------
     def completed_steps(self) -> list[int]:
-        out = []
-        for p in self.dir.glob("step_*"):
-            if (p / ".complete").exists():
-                out.append(int(p.name.split("_")[1]))
-        return sorted(out)
+        with self._lock:
+            out = []
+            for p in self.dir.glob("step_*"):
+                if (p / ".complete").exists():
+                    out.append(int(p.name.split("_")[1]))
+            return sorted(out)
 
     def latest_step(self) -> int | None:
         steps = self.completed_steps()
@@ -122,18 +131,23 @@ class Checkpointer:
     def restore(self, skeleton, step: int | None = None, shardings=None):
         """Restore into the structure of ``skeleton``; optionally re-shard
         (elastic restart onto a different mesh)."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
-        path = self.dir / f"step_{step:08d}"
-        manifest = json.loads((path / "manifest.json").read_text())
-        if self.config_tag and manifest["config_tag"] and \
-                manifest["config_tag"] != self.config_tag:
-            raise ValueError(
-                f"checkpoint config_tag {manifest['config_tag']} != "
-                f"{self.config_tag}: refusing to restore a mismatched model")
-        npz = np.load(path / "arrays.npz")
-        leaves = {k.replace("|", "/"): npz[k] for k in npz.files}
+        # the lock pins the chosen step until its leaves are fully in
+        # memory — a concurrent async save's GC cannot remove it mid-read
+        with self._lock:
+            step = step if step is not None else self.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no complete checkpoint in {self.dir}")
+            path = self.dir / f"step_{step:08d}"
+            manifest = json.loads((path / "manifest.json").read_text())
+            if self.config_tag and manifest["config_tag"] and \
+                    manifest["config_tag"] != self.config_tag:
+                raise ValueError(
+                    f"checkpoint config_tag {manifest['config_tag']} != "
+                    f"{self.config_tag}: refusing to restore a mismatched "
+                    f"model")
+            npz = np.load(path / "arrays.npz")
+            leaves = {k.replace("|", "/"): npz[k] for k in npz.files}
         tree = _unflatten_into(skeleton, leaves)
         if shardings is not None:
             tree = jax.tree.map(

@@ -277,7 +277,8 @@ def plan_for_arch(arch_cfg, shape_name: str, p: int, *,
                   mem_cap: float | None = None, switches="all",
                   model_width: int | None = None,
                   cfg: OracleConfig | None = None,
-                  stats=None) -> TunedPlan:
+                  stats=None,
+                  allow_pipeline: bool | None = None) -> TunedPlan:
     """Auto-tune a registered arch at one input shape on p PEs.
 
     ``system`` (a SystemModel or a ClusterSpec) defaults to the TPU-v5e
@@ -288,6 +289,10 @@ def plan_for_arch(arch_cfg, shape_name: str, p: int, *,
     ``cluster`` supplies the machine description in one argument: α–β
     system, φ/σ tables, and the torus topology that prunes unrealizable
     p1·p2 factorizations. ``model_width``: see ``autotune``.
+    ``allow_pipeline``: None (default) lets the model's block structure
+    decide; False bars the GPipe schedule even where it is deployable —
+    the elastic controller (runtime/elastic.py) passes False because its
+    rebind path rebuilds a plain SPMD step, not the stage schedule.
     """
     from ...configs.base import SHAPES
     from ...parallel.pipeline import pipeline_supported
@@ -305,7 +310,8 @@ def plan_for_arch(arch_cfg, shape_name: str, p: int, *,
         B = shape.global_batch
         cfg = (cluster.oracle_config(B=B, D=B) if cluster is not None
                else OracleConfig(B=B, D=B))
-    can_pipe = (shape.kind == "train" and pipeline_supported(mc) is None)
+    can_pipe = (shape.kind == "train" and pipeline_supported(mc) is None
+                and allow_pipeline is not False)
     return autotune(stats, tm, cfg, p, mem_cap=mem_cap, switches=switches,
                     fallback=arch_cfg.strategy_for(shape_name),
                     model_width=model_width, cluster=cluster,

@@ -52,6 +52,55 @@ def data_config_for(mc, batch: int, seq: int, seed: int = 0) -> DataConfig:
     raise TypeError(type(mc))
 
 
+def _main_elastic(args, cfg, mc, model) -> None:
+    """--elastic: the oracle-guided elastic loop (runtime/elastic.py).
+
+    The Oracle session owns the machine description the cluster flags
+    build; the controller tunes for the live device count, and on
+    SliceLost (slice death, or ``--straggler-patience`` consecutive
+    straggler alerts) it degrades the ClusterSpec, re-tunes, reshards the
+    checkpoint plan-to-plan, and resumes."""
+    from ..api import Oracle
+    from ..core.cluster import ClusterSpec
+    from ..runtime.elastic import run_elastic
+    ses = Oracle(cfg, "train_4k", ClusterSpec.from_cli_args(args),
+                 smoke=args.smoke, batch=args.batch, seq=args.seq)
+    fwd_kw = {}
+    if cfg.family in ("lm", "vlm"):
+        fwd_kw = dict(scan_layers=args.scan_layers, attn_impl="chunked",
+                      q_chunk=min(256, args.seq))
+    opt = OptimizerConfig(lr=args.lr)     # zero1 follows each plan's switch
+    ckpt = Checkpointer(f"{args.ckpt_dir}/{args.arch}",
+                        config_tag=config_hash((args.arch, args.smoke)))
+    dcfg = data_config_for(mc, args.batch, args.seq, args.seed)
+
+    t_start = time.time()
+    losses = []
+
+    def on_metrics(s, m):
+        losses.append(float(m["loss"]))
+        if s % args.log_every == 0:
+            print(f"step {s:5d} loss {float(m['loss']):.4f} "
+                  f"grad_norm {float(m['grad_norm']):.3f} "
+                  f"({(time.time()-t_start):.1f}s)", flush=True)
+
+    state, final, events = run_elastic(
+        ses, dcfg, ckpt, n_steps=args.steps, model=model, opt=opt,
+        ckpt_every=args.ckpt_every, seed=args.seed, fwd_kw=fwd_kw,
+        straggler_patience=args.straggler_patience, on_metrics=on_metrics)
+    for ev in events:
+        print(f"elastic event @ step {ev.step}: {ev.cause}, "
+              f"p {ev.p_before}→{ev.p_after}, re-tuned {ev.strategy} "
+              f"(mesh {ev.mesh_shape[0]}x{ev.mesh_shape[1]}), resumed "
+              f"from step {ev.resumed_from}")
+    if losses:
+        print(f"done at step {final}; loss {losses[0]:.4f} → "
+              f"{losses[-1]:.4f} ({len(events)} elastic event(s))")
+    else:
+        print(f"done at step {final}; no new steps "
+              f"(checkpoint already at --steps)")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -69,6 +118,15 @@ def main(argv=None) -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scan-layers", action="store_true", default=True)
+    ap.add_argument("--elastic", action="store_true",
+                    help="oracle-guided elastic loop (runtime/elastic.py): "
+                         "tune for the current devices; on slice loss or "
+                         "repeated stragglers, re-tune on the surviving "
+                         "ClusterSpec, reshard the checkpoint plan-to-plan "
+                         "and resume (DESIGN.md §12)")
+    ap.add_argument("--straggler-patience", type=int, default=3,
+                    help="--elastic: consecutive StragglerAlerts before the "
+                         "loop checkpoints and remeshes around the slow host")
     # machine description for --strategy auto (default: the host box;
     # --cluster takes a fitted experiments/cluster_fit.json artifact)
     from ..core.cluster import add_cluster_args
@@ -78,6 +136,8 @@ def main(argv=None) -> None:
     cfg = get_config(args.arch)
     mc = cfg.smoke_model if args.smoke else cfg.model
     model = build_model(cfg, smoke=args.smoke)
+    if args.elastic:
+        return _main_elastic(args, cfg, mc, model)
     strategy, plan = args.strategy, None
     if strategy == "auto":
         # oracle-in-the-loop: tune (strategy, mesh split, memory switches)

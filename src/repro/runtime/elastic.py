@@ -1,0 +1,201 @@
+"""Oracle-guided elastic training: failure is a planning event (DESIGN.md §12).
+
+The paper's oracle targets runs of up to 1024 GPUs — a scale where slice
+loss and stragglers are routine, and where the interesting part of recovery
+is not the restart but the *re-plan*: the surviving machine is a different
+``ClusterSpec`` (a torus with one dimension shrunk, the model-axis ring
+constraint re-indexed), so the plan that was cheapest on the full machine
+may be infeasible — or merely slow — on what is left. This module closes
+that loop:
+
+    failure / repeated stragglers  →  SliceLost
+      → derive the surviving ClusterSpec       (ClusterSpec.degraded)
+      → re-run the tuner on the degraded spec  (Oracle session .tune)
+      → reshard the checkpoint plan-to-plan    (Checkpointer.restore with
+        the NEW plan's shardings; remesh_state for in-memory trees)
+      → rebuild the jitted step on the surviving mesh and resume.
+
+The inner loop is ``run_with_recovery`` unchanged: transient faults
+restore-and-replay on the same mesh; only ``SliceLost`` — abrupt slice
+death, or the patience-exceeded straggler escalation (which checkpoints
+first) — surfaces here and triggers a rebind.
+
+Recovery contract (what tests/test_chaos.py pins, bit for bit): resuming
+on the degraded machine is indistinguishable from having *planned* the
+degraded run from that checkpoint — same loader stream (the data pipeline
+is (seed, step)-addressable and mesh-independent in content), same state
+bits (remesh is pure data movement), same step math under the new plan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any
+
+import jax
+
+from ..checkpoint.checkpointing import Checkpointer
+from ..data.pipeline import DataConfig, ShardedLoader
+from ..launch.compat import make_mesh
+from ..nn.module import ShardingCtx, tree_init, tree_shardings
+from ..optim.optimizers import OptimizerConfig, zero1_rules
+from ..parallel.strategies import make_rules
+from ..training.steps import make_train_step, train_state_spec
+from .fault_tolerance import (SliceLost, StepTimer, remesh_state,
+                              run_with_recovery)
+
+
+def state_shardings(model, opt: OptimizerConfig, mesh, rules):
+    """Per-leaf NamedShardings for a full train state under one plan: the
+    same split launch/build.py deploys — params and step on the strategy
+    rules, optimizer state on ``zero1_rules`` when ZeRO-1 is on."""
+    sspec = train_state_spec(model, opt)
+    srules = zero1_rules(rules) if opt.zero1 else rules
+    return {"params": tree_shardings(sspec["params"], mesh, rules),
+            "opt": tree_shardings(sspec["opt"], mesh, srules),
+            "step": tree_shardings(sspec["step"], mesh, rules)}
+
+
+@dataclass(frozen=True)
+class ElasticEvent:
+    """One recovery: what died, what the tuner chose, where we resumed."""
+
+    step: int            # step at which the loss surfaced
+    cause: str           # "failure" | "straggler"
+    p_before: int
+    p_after: int
+    strategy: str        # re-tuned plan's oracle strategy
+    mesh_shape: tuple    # (p1, p2) deployed on the survivors
+    resumed_from: int    # checkpoint step the run resumed at
+    cluster: str         # surviving ClusterSpec name
+
+
+@dataclass
+class Binding:
+    """One deployed plan: everything the loop needs on the current mesh."""
+
+    ses: Any             # Oracle session bound to the current ClusterSpec
+    plan: Any            # TunedPlan
+    mesh: Any
+    rules: Any
+    step_fn: Any
+    loader: ShardedLoader
+    shardings: Any       # full-state sharding tree (state_shardings)
+
+
+def bind_plan(ses, devices, data_cfg: DataConfig, model,
+              opt: OptimizerConfig, fwd_kw: dict | None = None, *,
+              allow_pipeline: bool = False) -> Binding:
+    """Tune for ``len(devices)`` PEs and deploy the plan: mesh on exactly
+    those devices, rules table, jitted step, loader, state shardings.
+
+    The plan's ZeRO-1 switch is applied to the optimizer config — safe
+    across rebinds because ZeRO-1 changes only *shardings*, never the
+    state tree structure, so a checkpoint written under one plan restores
+    under any other. Pipeline plans are barred by default: the rebind path
+    rebuilds a plain SPMD step, not the GPipe stage schedule (deploy that
+    via launch.build.build_cell instead).
+    """
+    p = len(devices)
+    plan = ses.tune(p, allow_pipeline=allow_pipeline)
+    if plan.exec_strategy("train") == "pipeline":
+        raise NotImplementedError(
+            "elastic rebinding of the GPipe stage schedule is not wired; "
+            "keep allow_pipeline=False or deploy via build_cell")
+    mesh = make_mesh(plan.mesh_shape, ("data", "model"),
+                     devices=list(devices)[:p])
+    rules = make_rules(plan.exec_strategy("train"))
+    opt = replace(opt, zero1=plan.zero1)
+    step_fn = jax.jit(make_train_step(model, opt, ShardingCtx(mesh, rules),
+                                      **(fwd_kw or {})))
+    return Binding(ses, plan, mesh, rules, step_fn,
+                   ShardedLoader(data_cfg, mesh),
+                   state_shardings(model, opt, mesh, rules))
+
+
+def _survivors(ses, devices, e: SliceLost):
+    """The (session, devices) that outlive ``e``: degrade the cluster's
+    torus along the lost dimension, or halve p when no topology is
+    described (no slice structure to consult)."""
+    if ses.cluster.topology is not None:
+        degraded = ses.cluster.degraded(dim=e.dim, count=e.count)
+        p_new = min(degraded.topology.size, len(devices))
+        return ses.with_cluster(degraded), list(devices)[:p_new]
+    return ses, list(devices)[:max(len(devices) // 2, 1)]
+
+
+def run_elastic(ses, data_cfg: DataConfig, ckpt: Checkpointer, *,
+                n_steps: int, model=None, opt: OptimizerConfig | None = None,
+                devices=None, start_step: int = 0, ckpt_every: int = 10,
+                async_ckpt: bool = False, max_restarts: int = 3,
+                straggler_patience: int | None = 2, max_reshapes: int = 8,
+                timer: StepTimer | None = None, inject=None,
+                on_metrics=None, on_event=None, fwd_kw: dict | None = None,
+                allow_pipeline: bool = False, seed: int = 0):
+    """Elastic train loop: tune → run → on SliceLost shrink, re-tune,
+    reshard, resume. Returns ``(state, step, events)``.
+
+    ``ses`` is an ``Oracle`` session (repro.api) — its ClusterSpec is the
+    machine being degraded; ``inject`` is the fault hook forwarded to
+    ``run_with_recovery`` (tests/helpers/fault_plan.py builds these).
+    Transient faults never surface here: the inner loop's restart budget
+    (which resets on forward progress) absorbs them on the same mesh.
+    """
+    from ..launch.build import build_model
+    devices = list(devices if devices is not None else jax.devices())
+    model = model if model is not None else build_model(ses.arch_cfg,
+                                                        smoke=ses.smoke)
+    opt = opt if opt is not None else OptimizerConfig()
+    timer = timer if timer is not None else StepTimer()
+    sspec = train_state_spec(model, opt)
+    events: list[ElasticEvent] = []
+
+    b = bind_plan(ses, devices, data_cfg, model, opt, fwd_kw,
+                  allow_pipeline=allow_pipeline)
+    if ckpt.latest_step() is not None:
+        state, step = ckpt.restore(sspec, shardings=b.shardings)
+    else:
+        state = remesh_state(tree_init(sspec, jax.random.PRNGKey(seed)),
+                             shardings=b.shardings)
+        step = start_step
+    reshapes = 0
+    while step < n_steps:
+        try:
+            state, step = run_with_recovery(
+                b.step_fn, state, b.loader, ckpt, n_steps=n_steps,
+                start_step=step, ckpt_every=ckpt_every,
+                async_ckpt=async_ckpt, max_restarts=max_restarts,
+                timer=timer, inject=inject, on_metrics=on_metrics,
+                straggler_patience=straggler_patience,
+                skeleton=sspec, restore_shardings=b.shardings)
+        except SliceLost as e:
+            reshapes += 1
+            if reshapes > max_reshapes:
+                raise
+            ckpt.wait()
+            p_before = len(devices)
+            ses2, devices = _survivors(b.ses, devices, e)
+            timer.reset()   # new plan, new step-time baseline (fresh compile)
+            b = bind_plan(ses2, devices, data_cfg, model, opt, fwd_kw,
+                          allow_pipeline=allow_pipeline)
+            if ckpt.latest_step() is not None:
+                # plan-to-plan reshard: the old plan's layout is in the
+                # checkpoint, the new plan's shardings land it on the
+                # surviving mesh — restore IS the remesh
+                state, step = ckpt.restore(sspec, shardings=b.shardings)
+            else:
+                state = remesh_state(
+                    tree_init(sspec, jax.random.PRNGKey(seed)),
+                    shardings=b.shardings)
+                step = start_step
+            ev = ElasticEvent(
+                step=e.step, cause=e.cause, p_before=p_before,
+                p_after=len(devices), strategy=b.plan.strategy,
+                mesh_shape=(b.plan.p1, b.plan.p2), resumed_from=step,
+                cluster=b.ses.cluster.name)
+            events.append(ev)
+            print(f"[elastic] {e} → p {p_before}→{len(devices)}, re-tuned "
+                  f"{b.plan.strategy} (mesh {b.plan.p1}x{b.plan.p2}), "
+                  f"resumed from step {step}")
+            if on_event:
+                on_event(ev)
+    return state, step, events

@@ -1,0 +1,268 @@
+"""Chaos scenarios: the elastic loop under injected faults, 8 virtual devices.
+
+Usage: python tests/helpers/chaos_checks.py <scenario-name>
+Prints CHECK-PASSED on success (asserted by tests/test_chaos.py and run by
+scripts/check.sh's chaos-gate).
+
+Every scenario drives ``run_elastic`` on a tiny uniform LM over a (2, 4)
+torus (model axis confined to dim 1) with a ``FaultPlan`` injector, and
+pins the recovery contract bit for bit:
+
+* the prefix of the loss trajectory — steps that completed before the
+  fault and were never replayed — equals an uninterrupted baseline run;
+* the suffix equals a *planned* degraded continuation: restore the
+  baseline's own checkpoint under the re-tuned plan's shardings and run a
+  plain (no fault machinery) step loop on the surviving mesh. Recovery
+  must be indistinguishable from having planned the reshape;
+* the re-tuned plan is valid on the shrunken topology (p1·p2 = surviving
+  PE count and the torus ``split_mask`` accepts the factorization);
+* final parameters match the reference continuation exactly.
+
+Steps replayed after a restore overwrite their trajectory slot — the loss
+recorded for a step index is the one the surviving run computed, which is
+what the reference continuation reproduces.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+V, D, L, B, S = 64, 32, 2, 8, 32
+FWD = dict(attn_impl="plain", scan_layers=False, remat=False)
+
+
+def _setup():
+    """(session, data_cfg, model, opt): tiny LM on a (2,4)-torus host."""
+    from dataclasses import replace
+
+    from repro.api import Oracle
+    from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+    from repro.core.cluster import ClusterSpec, Torus
+    from repro.data.pipeline import DataConfig
+    from repro.models import LMConfig, TransformerLM
+    from repro.nn import AttentionConfig, FFNConfig
+    from repro.optim.optimizers import OptimizerConfig
+    mc = LMConfig(name="t", vocab=V, d_model=D, n_layers=L,
+                  attn=AttentionConfig(D, 4, 2, 8, dtype=jnp.float32),
+                  ffn=FFNConfig(D, 2 * D, dtype=jnp.float32),
+                  dtype=jnp.float32)
+    model = TransformerLM(mc)
+    SHAPES["train_tiny"] = ShapeSpec("train_tiny", S, B, "train")
+    acfg = ArchConfig(name="chaos-test", family="lm", model=mc,
+                      smoke_model=mc, source="test", strategy="df")
+    cluster = replace(ClusterSpec.of("host"),
+                      topology=Torus((2, 4), model_dims=(1,)))
+    ses = Oracle(acfg, "train_tiny", cluster, batch=B, seq=S)
+    data_cfg = DataConfig("lm", batch=B, seq_len=S, vocab=V)
+    opt = OptimizerConfig(lr=1e-2, name="adamw", zero1=False)
+    return ses, data_cfg, model, opt
+
+
+def _run(ses, data_cfg, model, opt, ckpt, n_steps, fault=None, **kw):
+    """One elastic run; returns (traj, events, host params)."""
+    from repro.runtime.elastic import run_elastic
+    traj = {}
+    inject = fault.injector(ckpt) if fault is not None else None
+    state, step, events = run_elastic(
+        ses, data_cfg, ckpt, n_steps=n_steps, model=model, opt=opt,
+        ckpt_every=4, inject=inject, fwd_kw=FWD, seed=0,
+        on_metrics=lambda s, m: traj.__setitem__(s, float(m["loss"])), **kw)
+    assert step == n_steps, (step, n_steps)
+    params = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                          state["params"])
+    return traj, events, params
+
+
+def _reference_continuation(ses, data_cfg, model, opt, ck_base, resume_step,
+                            n_steps, p_survive, dim):
+    """A PLANNED degraded run: re-tune on the degraded ClusterSpec, restore
+    the baseline's checkpoint under the new plan's shardings, and run a
+    plain step loop — no fault machinery anywhere. Returns (traj, params,
+    plan, degraded cluster)."""
+    from repro.runtime.elastic import bind_plan
+    from repro.training.steps import train_state_spec
+    degraded = ses.cluster.degraded(dim=dim)
+    assert degraded.topology.size == p_survive, degraded.topology
+    b = bind_plan(ses.with_cluster(degraded), jax.devices()[:p_survive],
+                  data_cfg, model, opt, FWD)
+    st, s0 = ck_base.restore(train_state_spec(model, opt), step=resume_step,
+                             shardings=b.shardings)
+    traj = {}
+    for s in range(s0, n_steps):
+        st, m = b.step_fn(st, b.loader.batch_at(s))
+        traj[s] = float(m["loss"])
+    params = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                          st["params"])
+    return traj, params, b.plan, degraded
+
+
+def _assert_replan_valid(ev, degraded, p_survive):
+    """The re-tuned plan must be deployable on the shrunken topology."""
+    p1, p2 = ev.mesh_shape
+    assert ev.p_after == p_survive and p1 * p2 == p_survive, ev
+    assert bool(degraded.topology.split_mask(p_survive, p1, p2,
+                                             ev.strategy)), \
+        (ev, degraded.topology)
+
+
+def _assert_bit_exact(traj, ref, lo, hi, what):
+    for s in range(lo, hi):
+        assert traj[s] == ref[s], \
+            f"{what}: step {s} diverged: {traj[s]!r} != {ref[s]!r}"
+
+
+def check_kill_midrun():
+    """Slice death at step 10 of 16 (torus dim 0: (2,4) → (4,)): re-plan
+    on the survivors, reshard from the checkpoint at 8, resume — prefix
+    and suffix bit-exact, final params == the planned-reshape reference."""
+    import tempfile
+
+    from fault_plan import FaultPlan
+    from repro.checkpoint.checkpointing import Checkpointer
+    ses, data_cfg, model, opt = _setup()
+    N = 16
+    with tempfile.TemporaryDirectory() as da, \
+            tempfile.TemporaryDirectory() as db:
+        ck_a, ck_b = Checkpointer(da, keep=10), Checkpointer(db, keep=10)
+        traj_a, ev_a, _ = _run(ses, data_cfg, model, opt, ck_a, N)
+        assert ev_a == []
+        traj_b, ev_b, params_b = _run(ses, data_cfg, model, opt, ck_b, N,
+                                      fault=FaultPlan(kill_at={10: 0}))
+        assert len(ev_b) == 1 and ev_b[0].cause == "failure", ev_b
+        ev = ev_b[0]
+        assert ev.p_before == 8 and ev.resumed_from == 8, ev
+        ref, ref_params, plan2, degraded = _reference_continuation(
+            ses, data_cfg, model, opt, ck_a, 8, N, 4, dim=0)
+        _assert_replan_valid(ev, degraded, 4)
+        assert (plan2.p1, plan2.p2) == ev.mesh_shape, (plan2, ev)
+        _assert_bit_exact(traj_b, traj_a, 0, 8, "prefix vs baseline")
+        _assert_bit_exact(traj_b, ref, 8, N, "suffix vs planned reshape")
+        jax.tree.map(np.testing.assert_array_equal, params_b, ref_params)
+
+
+def check_straggler_burst():
+    """Two consecutive straggler alerts (simulated 9.9s steps at 9 and 10
+    vs a millisecond median) exhaust patience=2: the loop checkpoints the
+    healthy state at step 11 and escalates to SliceLost(straggler); the
+    controller remeshes around the slow host. Graceful: NO step is lost or
+    replayed — the whole pre-escalation trajectory matches the baseline,
+    and the continuation matches a planned reshape from the baseline's
+    state at step 11."""
+    import tempfile
+
+    from fault_plan import FaultPlan
+    from repro.checkpoint.checkpointing import Checkpointer
+    from repro.runtime.elastic import bind_plan
+    from repro.runtime.fault_tolerance import remesh_state
+    from repro.training.steps import train_state_spec
+    ses, data_cfg, model, opt = _setup()
+    N = 16
+    with tempfile.TemporaryDirectory() as da, \
+            tempfile.TemporaryDirectory() as db:
+        ck_a, ck_b = Checkpointer(da, keep=10), Checkpointer(db, keep=10)
+        traj_a, _, _ = _run(ses, data_cfg, model, opt, ck_a, N)
+        traj_b, ev_b, params_b = _run(
+            ses, data_cfg, model, opt, ck_b, N,
+            fault=FaultPlan(straggle={9: 9.9, 10: 9.9}),
+            straggler_patience=2)
+        assert len(ev_b) == 1 and ev_b[0].cause == "straggler", ev_b
+        ev = ev_b[0]
+        # escalation fires AFTER the second straggling step completes, so
+        # the state was saved at step 11 and nothing needs replaying
+        assert ev.resumed_from == 11, ev
+        _assert_bit_exact(traj_b, traj_a, 0, 11, "pre-escalation vs baseline")
+        # reference: baseline state at 11 (plain steps from its ckpt@8),
+        # remeshed in memory onto the degraded plan, then run plainly
+        degraded = ses.cluster.degraded(dim=0)
+        _assert_replan_valid(ev, degraded, 4)
+        b1 = bind_plan(ses, jax.devices(), data_cfg, model, opt, FWD)
+        st, s0 = ck_a.restore(train_state_spec(model, opt), step=8,
+                              shardings=b1.shardings)
+        for s in range(s0, 11):
+            st, _ = b1.step_fn(st, b1.loader.batch_at(s))
+        b2 = bind_plan(ses.with_cluster(degraded), jax.devices()[:4],
+                       data_cfg, model, opt, FWD)
+        st = remesh_state(st, shardings=b2.shardings)
+        ref = {}
+        for s in range(11, N):
+            st, m = b2.step_fn(st, b2.loader.batch_at(s))
+            ref[s] = float(m["loss"])
+        _assert_bit_exact(traj_b, ref, 11, N, "suffix vs planned reshape")
+        jax.tree.map(np.testing.assert_array_equal, params_b,
+                     jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  st["params"]))
+
+
+def check_torn_checkpoint():
+    """Slice death at step 10 that also tears the newest checkpoint (the
+    save at 8 loses its .complete marker, as if the failure landed
+    mid-write): recovery must fall back to the previous complete
+    checkpoint at 4 and still land bit-exact on the planned-reshape
+    trajectory from there."""
+    import tempfile
+
+    from fault_plan import FaultPlan
+    from repro.checkpoint.checkpointing import Checkpointer
+    ses, data_cfg, model, opt = _setup()
+    N = 16
+    with tempfile.TemporaryDirectory() as da, \
+            tempfile.TemporaryDirectory() as db:
+        ck_a, ck_b = Checkpointer(da, keep=10), Checkpointer(db, keep=10)
+        traj_a, _, _ = _run(ses, data_cfg, model, opt, ck_a, N)
+        traj_b, ev_b, params_b = _run(
+            ses, data_cfg, model, opt, ck_b, N,
+            fault=FaultPlan(kill_at={10: 0}, tear_on_kill=True))
+        assert len(ev_b) == 1, ev_b
+        ev = ev_b[0]
+        # the torn step-8 checkpoint must NOT be restored from
+        assert ev.resumed_from == 4, ev
+        ref, ref_params, _, degraded = _reference_continuation(
+            ses, data_cfg, model, opt, ck_a, 4, N, 4, dim=0)
+        _assert_replan_valid(ev, degraded, 4)
+        _assert_bit_exact(traj_b, traj_a, 0, 4, "prefix vs baseline")
+        _assert_bit_exact(traj_b, ref, 4, N, "suffix vs planned reshape")
+        jax.tree.map(np.testing.assert_array_equal, params_b, ref_params)
+
+
+def check_transient_spaced():
+    """Four transient node failures spread across 20 steps, restart budget
+    max_restarts=3: forward progress (a fresh checkpoint between failures)
+    resets the budget, so the run completes on the SAME mesh with zero
+    elastic events — and every replayed step recomputes the identical
+    loss, so the whole trajectory and the final params match the
+    uninterrupted baseline bit for bit."""
+    import tempfile
+
+    from fault_plan import FaultPlan
+    from repro.checkpoint.checkpointing import Checkpointer
+    ses, data_cfg, model, opt = _setup()
+    N = 20
+    with tempfile.TemporaryDirectory() as da, \
+            tempfile.TemporaryDirectory() as db:
+        ck_a, ck_b = Checkpointer(da, keep=10), Checkpointer(db, keep=10)
+        traj_a, _, params_a = _run(ses, data_cfg, model, opt, ck_a, N)
+        traj_b, ev_b, params_b = _run(
+            ses, data_cfg, model, opt, ck_b, N,
+            fault=FaultPlan(fail_at=(5, 9, 13, 17)), max_restarts=3)
+        assert ev_b == [], ev_b   # transient faults never trigger a re-plan
+        _assert_bit_exact(traj_b, traj_a, 0, N, "trajectory vs baseline")
+        jax.tree.map(np.testing.assert_array_equal, params_b, params_a)
+
+
+CHECKS = {
+    "kill_midrun": check_kill_midrun,
+    "straggler_burst": check_straggler_burst,
+    "torn_checkpoint": check_torn_checkpoint,
+    "transient_spaced": check_transient_spaced,
+}
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    CHECKS[name]()
+    print("CHECK-PASSED")

@@ -1,0 +1,71 @@
+"""FaultPlan — deterministic fault injection for the chaos harness.
+
+A ``FaultPlan`` declares *what breaks and when*; ``injector()`` compiles it
+into the ``inject`` hook ``run_with_recovery`` / ``run_elastic`` call with
+the step index before each step executes. Faults fire exactly once per
+declared step, so replayed steps (the loop revisits step indices after a
+restore) do not re-trigger them — matching real failures, which do not
+reappear just because the clock rewound.
+
+Fault kinds:
+
+* ``kill_at``: step → torus dim. Raises ``SliceLost`` — abrupt slice
+  death: live state and the killed devices are gone; the elastic
+  controller must re-plan on the survivors and reshard from the
+  checkpoint.
+* ``fail_at``: steps raising a transient ``RuntimeError`` once each — a
+  node flake; ``run_with_recovery`` restores-and-replays on the same mesh.
+* ``straggle``: step → simulated duration in seconds, returned to the
+  loop in place of the wall-clock step time (a deterministic slow host
+  for the ``StepTimer`` → patience-escalation path).
+* ``tear_on_kill``: when a kill fires, first tear the newest checkpoint
+  (``tear_latest`` — arrays present, ``.complete`` missing), so recovery
+  must fall back to the previous complete one: the crash-consistency
+  contract under a failure that interrupts a save.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.runtime.fault_tolerance import SliceLost
+
+
+def tear_latest(ckpt) -> int:
+    """Simulate a torn write: the newest checkpoint loses its commit
+    marker (arrays and manifest still present, ``.complete`` gone), as if
+    the failure landed mid-save. Returns the torn step."""
+    steps = ckpt.completed_steps()
+    if not steps:
+        raise FileNotFoundError(f"no complete checkpoint in {ckpt.dir}")
+    (ckpt.dir / f"step_{steps[-1]:08d}" / ".complete").unlink()
+    return steps[-1]
+
+
+@dataclass
+class FaultPlan:
+    kill_at: dict = field(default_factory=dict)     # step -> torus dim
+    fail_at: tuple = ()                             # transient RuntimeErrors
+    straggle: dict = field(default_factory=dict)    # step -> fake seconds
+    tear_on_kill: bool = False
+
+    def injector(self, ckpt=None):
+        """The ``inject(step)`` hook. ``ckpt`` is only needed when
+        ``tear_on_kill`` is set (the kill must reach into the store)."""
+        if self.tear_on_kill and ckpt is None:
+            raise ValueError("tear_on_kill needs the Checkpointer")
+        fired: set = set()
+
+        def inject(step: int):
+            if step in self.kill_at and ("kill", step) not in fired:
+                fired.add(("kill", step))
+                if self.tear_on_kill:
+                    ckpt.wait()
+                    tear_latest(ckpt)
+                raise SliceLost(step, dim=self.kill_at[step],
+                                reason=f"injected slice death at step {step}")
+            if step in self.fail_at and ("fail", step) not in fired:
+                fired.add(("fail", step))
+                raise RuntimeError(f"injected node failure at step {step}")
+            return self.straggle.get(step)
+
+        return inject

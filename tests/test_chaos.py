@@ -1,0 +1,88 @@
+"""Chaos harness: elastic recovery under injected faults (DESIGN.md §12).
+
+The scenario matrix runs in subprocesses with 8 virtual host devices
+(tests/helpers/chaos_checks.py) and is marked ``chaos`` — excluded from the
+tier-1 fast path, run by ``pytest -m chaos`` / scripts/check.sh's
+chaos-gate. The FaultPlan unit tests below are cheap and unmarked, so the
+injection helper itself stays covered by tier-1.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "helpers"))
+
+HELPER = os.path.join(os.path.dirname(__file__), "helpers",
+                      "chaos_checks.py")
+
+
+def run_scenario(name: str, timeout: int = 420):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, HELPER, name], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert "CHECK-PASSED" in out.stdout, \
+        f"{name} failed:\nstdout:{out.stdout[-2000:]}\nstderr:{out.stderr[-3000:]}"
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("scenario", ["kill_midrun", "straggler_burst",
+                                      "torn_checkpoint", "transient_spaced"])
+def test_chaos_scenario(scenario):
+    """Kill-at-step / straggler-burst / torn-checkpoint / spaced-transients,
+    each pinning the recovery ≡ planned-reshape contract bit for bit."""
+    run_scenario(scenario)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan unit tests (in-process, tier-1)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_faults_fire_once():
+    from fault_plan import FaultPlan
+
+    from repro.runtime.fault_tolerance import SliceLost
+    fp = FaultPlan(kill_at={3: 1}, fail_at=(5,), straggle={7: 4.2})
+    inject = fp.injector()
+    with pytest.raises(SliceLost) as e:
+        inject(3)
+    assert e.value.dim == 1 and e.value.step == 3
+    assert inject(3) is None          # replaying the step: no re-fire
+    with pytest.raises(RuntimeError):
+        inject(5)
+    assert inject(5) is None
+    assert inject(7) == 4.2           # straggle: simulated step seconds
+    assert inject(0) is None
+
+
+def test_fault_plan_tear_needs_checkpointer():
+    from fault_plan import FaultPlan
+    with pytest.raises(ValueError):
+        FaultPlan(kill_at={1: 0}, tear_on_kill=True).injector()
+
+
+def test_tear_latest_unmarks_newest(tmp_path, key):
+    import jax
+
+    from fault_plan import tear_latest
+
+    from repro.checkpoint.checkpointing import Checkpointer
+    ck = Checkpointer(tmp_path, keep=10)
+    state = {"w": jax.random.normal(key, (4,))}
+    ck.save(state, 4)
+    ck.save(state, 8)
+    assert tear_latest(ck) == 8
+    # the torn checkpoint is invisible; recovery falls back to 4
+    assert ck.latest_step() == 4
+    _, step = ck.restore(state)
+    assert step == 4
+
+
+def test_tear_latest_requires_a_checkpoint(tmp_path):
+    from fault_plan import tear_latest
+
+    from repro.checkpoint.checkpointing import Checkpointer
+    with pytest.raises(FileNotFoundError):
+        tear_latest(Checkpointer(tmp_path))

@@ -54,3 +54,55 @@ def test_config_tag_guard(tmp_path, key):
     ck2 = Checkpointer(tmp_path, config_tag="modelB")
     with pytest.raises(ValueError):
         ck2.restore(_state(key))
+
+
+def test_torn_write_falls_back_to_previous_complete(tmp_path, key):
+    """Crash consistency: a checkpoint whose arrays and manifest landed
+    but whose .complete marker did not (the crash hit mid-commit) is
+    invisible — latest_step/restore fall back to the previous complete
+    one, bit-exact."""
+    ck = Checkpointer(tmp_path)
+    state = _state(key)
+    ck.save(state, 10)
+    ck.save(state, 20)
+    assert (tmp_path / "step_00000020" / "arrays.npz").exists()
+    (tmp_path / "step_00000020" / ".complete").unlink()   # torn write
+    assert ck.completed_steps() == [10]
+    assert ck.latest_step() == 10
+    restored, step = ck.restore(state)
+    assert step == 10
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 state, restored)
+
+
+def test_torn_write_with_explicit_step_overwritten_by_next_save(tmp_path,
+                                                                key):
+    """A torn directory is not left to rot: the next save of the same step
+    replaces it atomically and the checkpoint becomes visible again."""
+    ck = Checkpointer(tmp_path)
+    state = _state(key)
+    ck.save(state, 10)
+    (tmp_path / "step_00000010" / ".complete").unlink()
+    assert ck.latest_step() is None
+    ck.save(state, 10)
+    assert ck.latest_step() == 10
+
+
+def test_async_gc_thread_safe_vs_concurrent_reads(tmp_path, key):
+    """Async saves run retention GC in a background thread while the train
+    loop polls completed_steps/latest_step and (on a failure) restores.
+    The shared lock must guarantee that whatever latest_step returns is
+    restorable — the GC can never delete a checkpoint mid-read."""
+    ck = Checkpointer(tmp_path, keep=2)
+    state = _state(key)
+    for n in range(1, 13):
+        ck.save(state, n, blocking=False)
+        for _ in range(25):
+            latest = ck.latest_step()
+            if latest is None:
+                continue
+            restored, got = ck.restore(state, step=latest)
+            assert got == latest
+    ck.wait()
+    assert ck.latest_step() == 12
+    assert len(ck.completed_steps()) == 2

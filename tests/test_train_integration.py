@@ -82,6 +82,61 @@ def test_straggler_alert():
         timer.observe(10, 1.0)
 
 
+def test_straggler_outlier_kept_out_of_baseline():
+    """Regression: the straggler sample used to be appended to the window
+    before raising, so a run of slow steps dragged the median up until the
+    detector stopped firing. Every one of a burst of stragglers must
+    alert, and the median baseline must not move."""
+    timer = StepTimer(window=8, threshold=3.0)
+    for i in range(8):
+        timer.observe(i, 0.1)
+    for i in range(8, 16):   # 0.35 > 3 × 0.1 — every step is a straggler
+        with pytest.raises(StragglerAlert):
+            timer.observe(i, 0.35)
+        assert timer.median == pytest.approx(0.1)  # baseline unpolluted
+
+
+def test_step_timer_reset_clears_baseline():
+    timer = StepTimer(threshold=2.0)
+    for i in range(10):
+        timer.observe(i, 0.1)
+    timer.reset()
+    assert timer.median == 0.0
+    # a fresh window needs 8 samples before alerting again — a re-meshed
+    # plan's first (compile-heavy) step must not trip the old baseline
+    timer.observe(0, 5.0)
+
+
+def test_spaced_failures_do_not_exhaust_restart_budget(tmp_path):
+    """Regression: the restart budget never reset, so 4 transient failures
+    spread across a long run killed it even though each was followed by
+    plenty of forward progress. The budget counts CONSECUTIVE failures —
+    a checkpoint newer than the previous failure's resets it."""
+    step, state, loader = setup()
+    ck = Checkpointer(tmp_path)
+    final, nstep = run_with_recovery(
+        step, state, loader, ck, n_steps=40, ckpt_every=5, async_ckpt=False,
+        inject_failure_at=(7, 13, 22, 33), max_restarts=3)
+    assert nstep == 40
+    assert ck.latest_step() == 40
+
+
+def test_restart_budget_still_bounds_crash_loops(tmp_path):
+    """A fault that recurs every time the same step replays (no forward
+    progress, no checkpoint) must still exhaust the budget and surface."""
+    step, state, loader = setup()
+    ck = Checkpointer(tmp_path)
+
+    def inject(s):
+        if s == 3:
+            raise RuntimeError("deterministic fault at step 3")
+
+    with pytest.raises(RuntimeError, match="deterministic fault"):
+        run_with_recovery(step, state, loader, ck, n_steps=10,
+                          ckpt_every=100, async_ckpt=False, inject=inject,
+                          max_restarts=3)
+
+
 def test_grad_accumulation_matches_full_batch():
     model = tiny_lm()
     opt = OptimizerConfig(lr=1e-2, name="sgd", momentum=0.0, zero1=False,
