@@ -105,12 +105,12 @@ def run(smoke: bool = False):
     return rows
 
 
-def write_artifact(rows, smoke: bool) -> str:
+def write_artifact(rows, smoke: bool, out: str | None = None) -> str:
     rec = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
            "backend": jax.default_backend(), "smoke": smoke,
            "rows": [{"name": n, "us_per_call": round(us, 3), "derived": d}
                     for n, us, d in rows]}
-    path = SMOKE_ARTIFACT if smoke else ARTIFACT
+    path = out or (SMOKE_ARTIFACT if smoke else ARTIFACT)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
         f.write("\n")
@@ -123,6 +123,11 @@ def main(argv=None):
                     help="small shapes, 1 timed iter (CI gate); still runs "
                          "every Pallas kernel, writes the side artifact "
                          "(the committed trajectory records full runs only)")
+    ap.add_argument("--out", default=None,
+                    help="write the artifact to this path instead of the "
+                         "default — scripts/bench_compare.py uses this to "
+                         "land a fresh full run in a scratch file and diff "
+                         "it against the committed trajectory")
     # parse_known_args: benchmarks.run invokes main() programmatically —
     # a foreign sys.argv flag must not SystemExit the whole suite
     args, _ = ap.parse_known_args(argv)
@@ -130,7 +135,7 @@ def main(argv=None):
          "TPU projections in derived)")
     rows = run(smoke=args.smoke)
     emit(rows)
-    note(f"wrote {write_artifact(rows, args.smoke)}")
+    note(f"wrote {write_artifact(rows, args.smoke, out=args.out)}")
 
 
 if __name__ == "__main__":

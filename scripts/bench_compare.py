@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Tolerance-banded compare of a fresh kernel-bench run vs the committed
+perf trajectory (BENCH_kernels.json).
+
+A kernel row regresses when its fresh wall time exceeds the committed one by
+more than the tolerance band (default 25%). Interpret-mode timings on a
+timeshared CPU are noisy, so the band is wide and the check.sh gate wraps
+this in a retry loop — a genuine regression fails every attempt, a
+scheduler stall does not. Speedups never fail; they just print, and the
+trajectory is refreshed by committing the fresh artifact in the PR that
+earned them.
+
+Usage:
+    python -m benchmarks.bench_kernels --out /tmp/bench_fresh.json
+    python scripts/bench_compare.py BENCH_kernels.json /tmp/bench_fresh.json
+
+Exit 0 when every shared row is inside the band, 1 otherwise. Rows present
+only in the baseline fail too (a kernel bench that silently disappears is a
+coverage regression, not noise); rows present only in the fresh run are
+reported and pass (new kernels enter the trajectory when committed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("smoke"):
+        raise SystemExit(f"{path}: smoke artifact — smoke shapes are "
+                         "incomparable with the committed trajectory; "
+                         "re-run without --smoke")
+    return {r["name"]: float(r["us_per_call"]) for r in rec["rows"]}
+
+
+def compare(baseline: dict[str, float], fresh: dict[str, float],
+            tol: float) -> tuple[list[str], list[str]]:
+    """Returns (report lines, failure lines)."""
+    lines, failures = [], []
+    for name in sorted(set(baseline) | set(fresh)):
+        if name not in fresh:
+            failures.append(f"{name}: present in baseline but missing from "
+                            "the fresh run (kernel bench disappeared)")
+            continue
+        if name not in baseline:
+            lines.append(f"  NEW    {name}: {fresh[name]:10.1f} us "
+                         "(no baseline; enters the trajectory on commit)")
+            continue
+        b, f = baseline[name], fresh[name]
+        ratio = f / b if b > 0 else float("inf")
+        verdict = "ok" if ratio <= 1.0 + tol else "REGRESSED"
+        lines.append(f"  {verdict:9s} {name}: {b:10.1f} -> {f:10.1f} us "
+                     f"({ratio:5.2f}x, band <= {1.0 + tol:.2f}x)")
+        if verdict != "ok":
+            failures.append(f"{name}: {ratio:.2f}x vs committed "
+                            f"(> {1.0 + tol:.2f}x tolerance)")
+    return lines, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python scripts/bench_compare.py")
+    ap.add_argument("baseline", help="committed trajectory artifact "
+                                     "(BENCH_kernels.json)")
+    ap.add_argument("fresh", help="fresh full-run artifact "
+                                  "(bench_kernels --out ...)")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="relative regression band (default 0.25 = fail "
+                         "above 1.25x the committed time)")
+    args = ap.parse_args(argv)
+    lines, failures = compare(load_rows(args.baseline), load_rows(args.fresh),
+                              args.tol)
+    print(f"bench_compare: {args.fresh} vs {args.baseline} "
+          f"(tol {args.tol:.0%})")
+    print("\n".join(lines))
+    if failures:
+        print(f"bench_compare: {len(failures)} regression(s):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("bench_compare: all kernels inside the tolerance band")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

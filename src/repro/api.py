@@ -145,11 +145,13 @@ class Oracle:
     def tune(self, p: int, *, switches="all",
              model_width: int | None = None,
              allow_pipeline: bool | None = None):
-        """Cheapest deployable (strategy, p1·p2, switches) TunedPlan at p,
-        honoring the cluster's torus topology (infeasible factorizations
-        are pruned, not silently deployed). ``allow_pipeline=False`` bars
-        the GPipe schedule (the elastic controller's rebind path deploys
-        plain SPMD steps only — runtime/elastic.py)."""
+        """Cheapest deployable (strategy, p1·p2, switches, schedule)
+        TunedPlan at p, honoring the cluster's torus topology (infeasible
+        factorizations are pruned, not silently deployed). Pipeline plans
+        carry the priced schedule (gpipe / 1F1B / interleaved) in
+        ``plan.schedule``. ``allow_pipeline=False`` bars the pipeline
+        strategy (the elastic controller's rebind path deploys plain SPMD
+        steps only — runtime/elastic.py)."""
         from .core.autotune import plan_for_arch
         return plan_for_arch(self.arch_cfg, self.shape.name, p,
                              cluster=self.cluster, cfg=self.cfg,

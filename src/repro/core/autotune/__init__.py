@@ -39,9 +39,10 @@ from ..sweep import (HYBRID_STRATEGIES, SweepResult, parse_p_grid,
                      switch_label, sweep)
 
 # oracle strategies with an executable deployment path: a rules table in
-# parallel/strategies.py, plus the GPipe stage schedule for "pipeline"
-# (parallel/pipeline.make_pipeline_train_step; models that cannot stack
-# uniform stages are filtered per-arch via ``allow_pipeline``).
+# parallel/strategies.py, plus the stage schedules (gpipe / 1F1B /
+# interleaved) for "pipeline" (parallel/schedules.make_pipeline_train_step;
+# models the stage compiler cannot cut are filtered per-arch via
+# ``allow_pipeline``).
 DEPLOYABLE_STRATEGIES = ("serial", "data", "spatial", "filter", "channel",
                          "df", "ds", "ep", "pipeline")
 
@@ -81,8 +82,11 @@ class TunedPlan:
     mem_cap: float | None
     feasible: bool           # False → fallback plan, nothing fit
     source: str              # "sweep" | "fallback"
-    segments: int = 8        # GPipe microbatch count the projection assumed
+    segments: int = 8        # microbatch count the projection assumed
                              # (pipeline plans; deploy must run the same S)
+    schedule: str = "gpipe"  # pipeline schedule the projection priced
+                             # (PIPELINE_SCHEDULES; deploy must run it)
+    virtual_stages: int = 2  # v for interleaved plans (chunks per rank)
 
     @property
     def switches(self) -> dict:
@@ -111,8 +115,9 @@ class TunedPlan:
         deploys this plan for a train / prefill / decode cell."""
         if kind in ("prefill", "decode"):
             # serving: no ZeRO (latency-critical); expert plans keep ep rules.
-            # pipeline plans also serve as TP — the GPipe schedule is a
-            # TRAINING schedule (fill/drain over microbatches).
+            # pipeline plans also serve as TP — every pipeline schedule
+            # (gpipe / 1F1B / interleaved) is a TRAINING schedule (fill/
+            # drain over microbatches).
             return "ep_df" if self.strategy == "ep" else "serve_tp"
         table = {"serial": "data", "data": "data", "spatial": "ds",
                  "filter": "filter", "channel": "channel", "ds": "ds",
@@ -125,7 +130,9 @@ class TunedPlan:
 
     def describe(self) -> str:
         cap = (f"{self.mem_cap / 2**30:.1f}" if self.mem_cap else "∞")
-        return (f"TunedPlan[p={self.p}]: {self.strategy} "
+        strat = (f"{self.strategy}:{self.schedule}"
+                 if self.strategy == "pipeline" else self.strategy)
+        return (f"TunedPlan[p={self.p}]: {strat} "
                 f"(mesh {self.p1}x{self.p2}, switches {self.switch_str()}) "
                 f"→ {self.per_iter_s * 1e3:.2f} ms/iter, "
                 f"{self.mem_bytes / 2**30:.2f}/{cap} GiB, "
@@ -134,7 +141,9 @@ class TunedPlan:
 
 
 def _plan_of(res: SweepResult, i: int, mem_cap, feasible: bool,
-             source: str, segments: int = 8) -> TunedPlan:
+             source: str, segments: int = 8,
+             virtual_stages: int = 2) -> TunedPlan:
+    sched = str(res.schedule[i])
     return TunedPlan(
         strategy=str(res.strategy[i]), p=int(res.p[i]), p1=int(res.p1[i]),
         p2=int(res.p2[i]), remat=bool(res.remat[i]), zero1=bool(res.zero1[i]),
@@ -142,7 +151,9 @@ def _plan_of(res: SweepResult, i: int, mem_cap, feasible: bool,
         bottleneck=str(res.bottleneck[i]), total_s=float(res.total_s[i]),
         iterations=float(res.iterations[i]),
         mem_bytes=float(res.mem_bytes[i]), mem_cap=mem_cap,
-        feasible=feasible, source=source, segments=segments)
+        feasible=feasible, source=source, segments=segments,
+        schedule="gpipe" if sched == "-" else sched,
+        virtual_stages=virtual_stages)
 
 
 def deployable_switch_mask(res: SweepResult, allow_remat: bool = True):
@@ -159,9 +170,9 @@ def deployable_switch_mask(res: SweepResult, allow_remat: bool = True):
     * ``remat`` — wire-able only where the model's forward supports it
       (lm / vlm / encdec; CNN forwards have no checkpointing), gated by
       ``allow_remat``;
-    * ``pipeline`` — the GPipe step deploys no memory switches (its
-      projection is switch-invariant anyway), so only the all-off combo
-      stands.
+    * ``pipeline`` — the pipeline step (any schedule) deploys no memory
+      switches (its projection is switch-invariant anyway), so only the
+      all-off combo stands.
     """
     strat = res.strategy
     m = np.ones(len(res), bool)
@@ -173,23 +184,65 @@ def deployable_switch_mask(res: SweepResult, allow_remat: bool = True):
     return m
 
 
+def _segments_resolvable(batch: int, segments: int, multiple_of: int) -> bool:
+    """Whether the executor's resolve_segments() would find a microbatch
+    count (needed to gate interleaved plans: S must be a multiple of the
+    stage count)."""
+    import warnings
+    from ...parallel.schedules import resolve_segments
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            resolve_segments(batch, segments, multiple_of=multiple_of)
+        return True
+    except ValueError:
+        return False
+
+
+def deployable_schedule_mask(res: SweepResult, cfg: OracleConfig,
+                             max_stages: int | None = None):
+    """Which lattice points' pipeline schedules the executor can actually
+    realize. gpipe/1F1B deploy wherever pipeline itself does; interleaved
+    additionally needs (a) ``v·p2`` chunks to fit the model's block stack
+    and (b) a microbatch count S ≤ ``cfg.segments`` with B % S == 0 and
+    S % p2 == 0 (the runtime resolves segments with
+    ``multiple_of=n_stages`` and raises otherwise)."""
+    m = np.ones(len(res), bool)
+    il = np.asarray(res.schedule) == "interleaved"
+    if not il.any():
+        return m
+    v = max(int(cfg.virtual_stages), 1)
+    if max_stages is not None:
+        m &= ~il | (v * res.p2 <= max_stages)
+    for j in np.flatnonzero(il & m):
+        if not _segments_resolvable(int(res.B[j]), int(cfg.segments),
+                                    int(res.p2[j])):
+            m[j] = False
+    return m
+
+
 def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
              mem_cap: float | None = None, strategies=None,
-             switches="all", fallback: str | None = None,
+             switches="all", schedules="all", fallback: str | None = None,
              allow_remat: bool = True, allow_pipeline: bool = True,
              max_stages: int | None = None, model_width: int | None = None,
              cluster: "ClusterSpec | None" = None,
              rtol: float = 1e-9) -> TunedPlan:
-    """Pick the cheapest deployable (strategy, p1·p2, switches) point at p.
+    """Pick the cheapest deployable (strategy, p1·p2, switches, schedule)
+    point at p.
 
     ``fallback``: strategy name (oracle or executable-rules spelling) that
     wins ties and is returned when nothing fits. ``switches``: as in
     ``sweep()`` — default sweeps all 16 memory-switch combinations, then
     masks the ones the exec path cannot realize per strategy
-    (``deployable_switch_mask``); ``allow_remat=False`` additionally bars
-    remat (models whose forward cannot checkpoint), and
-    ``allow_pipeline=False`` bars the GPipe schedule (models without a
-    uniform block stack — ``parallel.pipeline.pipeline_supported``).
+    (``deployable_switch_mask``); ``schedules``: as in ``sweep()`` —
+    default prices every pipeline schedule (gpipe / 1F1B / interleaved)
+    and lets the cheapest deployable one win, then masks the ones the
+    executor cannot realize (``deployable_schedule_mask``);
+    ``allow_remat=False`` additionally bars remat (models whose forward
+    cannot checkpoint), and ``allow_pipeline=False`` bars the pipeline
+    strategy entirely (models the stage compiler cannot cut —
+    ``parallel.schedules.pipeline_supported``).
     ``model_width`` constrains hybrid plans to one p2 — pass the mesh's
     model-axis size when the mesh is already shaped and cannot be
     refactorized. ``cluster``: a ClusterSpec whose torus topology prunes
@@ -213,7 +266,7 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
                 "pipeline_supported)")
         strategies = tuple(s for s in strategies if s != "pipeline")
     res = sweep(stats, tm, cfg, [p], strategies, mem_cap=mem_cap,
-                switches=switches, cluster=cluster)
+                switches=switches, schedules=schedules, cluster=cluster)
     if len(res) == 0:
         raise ValueError(f"no strategy in {strategies} applies to this model")
     keep = deployable_switch_mask(res, allow_remat=allow_remat)
@@ -227,6 +280,7 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
         # the oracle's p <= G bound counts STAT layers; the executor cuts
         # the model's BLOCK stack, which is shorter (attn+ffn share a block)
         keep &= (res.strategy != "pipeline") | (res.p2 <= max_stages)
+    keep &= deployable_schedule_mask(res, cfg, max_stages=max_stages)
     res = res.select(keep)
     if len(res) == 0:
         raise ValueError(
@@ -245,7 +299,8 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
                                _PREF.get(str(res.strategy[j]), 99),
                                int(res.p1[j])))
         return _plan_of(res, i, mem_cap, feasible=True, source="sweep",
-                        segments=cfg.segments)
+                        segments=cfg.segments,
+                        virtual_stages=cfg.virtual_stages)
     # nothing fits: fall back to the requested strategy's least-memory point
     cand = np.flatnonzero(res.strategy == fallback) if fallback else None
     if cand is None or cand.size == 0:
@@ -254,7 +309,8 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
                                  int(res.p2[j]),
                                  _PREF.get(str(res.strategy[j]), 99)))
     return _plan_of(res, i, mem_cap, feasible=False, source="fallback",
-                    segments=cfg.segments)
+                    segments=cfg.segments,
+                    virtual_stages=cfg.virtual_stages)
 
 
 # ---------------------------------------------------------------------------
@@ -290,12 +346,12 @@ def plan_for_arch(arch_cfg, shape_name: str, p: int, *,
     system, φ/σ tables, and the torus topology that prunes unrealizable
     p1·p2 factorizations. ``model_width``: see ``autotune``.
     ``allow_pipeline``: None (default) lets the model's block structure
-    decide; False bars the GPipe schedule even where it is deployable —
+    decide; False bars the pipeline strategy even where it is deployable —
     the elastic controller (runtime/elastic.py) passes False because its
-    rebind path rebuilds a plain SPMD step, not the stage schedule.
+    rebind path rebuilds a plain SPMD step, not a stage schedule.
     """
     from ...configs.base import SHAPES
-    from ...parallel.pipeline import pipeline_supported
+    from ...parallel.pipeline import pipeline_block_count, pipeline_supported
     if isinstance(system, ClusterSpec) and cluster is None:
         cluster = system
     cluster = ClusterSpec.coerce(cluster)
@@ -317,7 +373,7 @@ def plan_for_arch(arch_cfg, shape_name: str, p: int, *,
                     model_width=model_width, cluster=cluster,
                     allow_remat=arch_cfg.family != "cnn",
                     allow_pipeline=can_pipe,
-                    max_stages=getattr(mc, "n_layers", None))
+                    max_stages=pipeline_block_count(mc))
 
 
 # ---------------------------------------------------------------------------
@@ -338,8 +394,9 @@ def _smoke() -> int:
         plan = autotune(stats, tm, cfg, p)
         assert plan.feasible and plan.p1 * plan.p2 == p, plan
         res = sweep(stats, tm, cfg, [p], mem_cap=plan.mem_cap,
-                    switches="all")
-        dep = res.ok & deployable_switch_mask(res)
+                    switches="all", schedules="all")
+        dep = (res.ok & deployable_switch_mask(res)
+               & deployable_schedule_mask(res, cfg))
         assert np.isclose(plan.total_s, res.total_s[dep].min(),
                           rtol=1e-12), (plan, res.total_s[dep].min())
         pinned = autotune(stats, tm, cfg, p, switches=None,
@@ -381,6 +438,12 @@ def main(argv=None) -> int:
                          "'pipeline' to force a stage-parallel plan)")
     ap.add_argument("--no-switches", action="store_true",
                     help="pin memory switches off instead of sweeping all 16")
+    ap.add_argument("--schedule", default="all",
+                    help="pipeline schedule axis: 'all' (default) lets the "
+                         "cheapest deployable schedule win, or pin one of "
+                         "gpipe / one_f_one_b / interleaved")
+    ap.add_argument("--virtual-stages", type=int, default=2,
+                    help="v for the interleaved schedule (chunks per rank)")
     add_cluster_args(ap, default_system="paper")
     ap.add_argument("--no-overlap", action="store_true",
                     help="rank under the paper's serial comm accounting "
@@ -395,7 +458,7 @@ def main(argv=None) -> int:
     stats, default_D = _model_stats(args.model, args.seq)
     # the CLI's recommendations must honor the same deployability gates as
     # plan_for_arch/train.py — never print a plan the executor rejects
-    from ...parallel.pipeline import pipeline_supported
+    from ...parallel.pipeline import pipeline_block_count, pipeline_supported
     mc = _model_config(args.model)
     can_pipe = pipeline_supported(mc) is None
     tm = TimeModel(cluster.system)
@@ -406,22 +469,28 @@ def main(argv=None) -> int:
           f"mem_cap={cap / 2**30:.1f}GiB switches="
           f"{'off' if args.no_switches else 'all 16 combos'}"
           + (f" topology={cluster.topology}" if cluster.topology else ""))
-    print(f"{'p':>6s} {'strategy':10s} {'p1xp2':>11s} {'switches':24s} "
+    print(f"{'p':>6s} {'strategy':16s} {'p1xp2':>11s} {'switches':24s} "
           f"{'ms/iter':>9s} {'mem_GiB':>8s}  bottleneck")
     for p in p_grid:
         B = args.batch or max(int(round(args.batch_per_pe * p)), 1)
         D = max(args.dataset or default_D, B)
-        cfg = cluster.oracle_config(B=B, D=D, overlap=not args.no_overlap)
+        cfg = cluster.oracle_config(
+            B=B, D=D, overlap=not args.no_overlap,
+            virtual_stages=max(args.virtual_stages, 1))
         plan = autotune(stats, tm, cfg, p, mem_cap=cap,
                         switches=None if args.no_switches else "all",
+                        schedules=("all" if args.schedule == "all"
+                                   else (args.schedule,)),
                         fallback=args.fallback, cluster=cluster,
                         allow_pipeline=can_pipe,
-                        max_stages=getattr(mc, "n_layers", None),
+                        max_stages=pipeline_block_count(mc),
                         strategies=tuple(s for s in
                                          (args.strategies or "").split(",")
                                          if s) or None)
         mark = " " if plan.feasible else "!"
-        print(f"{p:>6d} {plan.strategy:10s} "
+        strat = (f"pipe:{plan.schedule}" if plan.strategy == "pipeline"
+                 else plan.strategy)
+        print(f"{p:>6d} {strat:16s} "
               f"{plan.p1:>5d}x{plan.p2:<5d} {plan.switch_str():24s} "
               f"{plan.per_iter_s * 1e3:>9.3f} "
               f"{plan.mem_bytes / 2**30:>8.2f} {mark} {plan.bottleneck}")

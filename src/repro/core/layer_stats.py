@@ -35,9 +35,20 @@ class LayerStat:
     spatial: int = 0     # spatial/sequence extent (spatial-par limit)
     halo: int = 0        # halo elements per spatial boundary (paper halo(|x|))
     seq_recurrent: bool = False  # True → spatial/sequence split inapplicable
+    flops_bwd_exact: float = 0.0  # measured/derived backward FLOPs per
+                                  # sample when the extractor can compute
+                                  # them (conv: dL/dx + dL/dw each cost a
+                                  # full conv → 2×fw, plus the fw-shaped
+                                  # recompute-free term differs from the
+                                  # 2×fw heuristic on strided/1x1 layers);
+                                  # 0.0 → unknown, consumers fall back
 
     @property
     def flops_bwd(self) -> float:
+        # the oracle's TimeModel keeps the paper's BW ≈ 2× forward
+        # approximation (calibrations and pinned crossovers assume it);
+        # stage partitioners that want the exact count read
+        # ``flops_bwd_exact`` directly (parallel/schedules/stages.py)
         return 2.0 * self.flops_fwd  # BW_data + BW_weight ≈ 2× forward
 
 
@@ -53,8 +64,14 @@ def _conv_stat(name, cin, cout, k, spatial_in, stride, nd) -> LayerStat:
     flops = 2.0 * y * cin * k ** nd
     # halo: K/2 rows on each side of a 1-D split of the first spatial dim
     halo = (k // 2) * cin * int(np.prod(spatial_in[1:])) if k > 1 else 0
+    # exact backward: dL/dw correlates x with dy (2·y·cin·k^nd, same as
+    # fw) and dL/dx is the transposed conv over the INPUT extent
+    # (2·x·cout·k^nd) — on strided layers that is more than fw, so the
+    # 2×fw heuristic undercounts
+    bwd = 2.0 * x * cout * k ** nd + flops
     return LayerStat(name, "conv", x, y, w, flops, F=cout, C=cin,
-                     spatial=int(np.prod(spatial_in)), halo=halo), sp_out
+                     spatial=int(np.prod(spatial_in)), halo=halo,
+                     flops_bwd_exact=bwd), sp_out
 
 
 def resnet_stats(cfg: ResNetConfig, img: int = 224) -> list[LayerStat]:

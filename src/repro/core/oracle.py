@@ -34,6 +34,10 @@ from .partition import cut_values, min_max_partition, stage_sums
 STRATEGY_NAMES = ("serial", "data", "spatial", "pipeline", "filter", "channel",
                   "df", "ds", "ep")
 
+# the pipeline strategy's schedule axis — must match the executor registry
+# (parallel/schedules/runtime.SCHEDULE_NAMES; pinned by a unit test)
+PIPELINE_SCHEDULES = ("gpipe", "one_f_one_b", "interleaved")
+
 # layer kinds that expose a filter/channel split dimension (paper Table 2)
 SPLIT_KINDS = ("conv", "fc", "attn", "ffn", "moe", "ssm", "rec")
 
@@ -129,6 +133,12 @@ class OracleConfig:
     overlap: bool = True
     sigma_levels: "dict | tuple | None" = None
     segments: int = 8             # pipeline micro-batch segments S
+    # pipeline schedule axis (DESIGN.md §4): which clocking the executor
+    # runs — "gpipe" (fill/drain, S microbatches of activations live),
+    # "one_f_one_b" (same clock, ≤p in flight) or "interleaved" (v virtual
+    # stages per rank: bubble shrinks v×, stage-boundary traffic grows v×).
+    schedule: str = "gpipe"
+    virtual_stages: int = 2       # interleaved v (ignored by other schedules)
     zero1: bool = False           # shard WU across DP ranks ([52], §5.3.3)
     # beyond-paper memory-model extensions (DESIGN.md §3):
     remat: bool = False           # activation checkpointing: keep |x_l| only
@@ -408,20 +418,55 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
 
     if strategy == "pipeline":
         S = cfg.segments
-        out["feasible"] = p <= T.n
+        sched = cfg.schedule
         # non-uniform stages: the DP partitioner (core/partition.py) cuts
         # layers minimizing the bottleneck stage, and the schedule is paced
         # by max FW_Gi + max BW_Gi — not the balanced total/p the paper's
         # §5.3.3 caveat assumed. Boundary traffic uses the activation sizes
         # at the ACTUAL cut points, not the global max layer output.
         mfw, mbw, mwu, ycut, mxy, mw = _pipeline_terms_bcast(T, p, shape)
-        out["comp"] = D * (p + S - 1) / S * (mfw + mbw) + iters * mwu
-        out["p2p"] = np.where(p > 1, 2 * D * (p + S - 2) / B * (
-            lvl_model.alpha + B / S * ycut * delta * lvl_model.beta * phi_m),
-            0.0)
-        out["mem"] = gamma * delta * np.maximum(
-            2.0 * B * mxy + 2.0 * mw, 1.0)
-        return out
+        if sched in ("gpipe", "one_f_one_b"):
+            # identical clock (1F1B's forward schedule IS GPipe's; its
+            # backward reordering changes memory, not the critical path):
+            # (p+S−1) stage-ticks of the bottleneck stage, bubble (p−1)/S
+            out["feasible"] = p <= T.n
+            out["comp"] = D * (p + S - 1) / S * (mfw + mbw) + iters * mwu
+            out["p2p"] = np.where(p > 1, 2 * D * (p + S - 2) / B * (
+                lvl_model.alpha
+                + B / S * ycut * delta * lvl_model.beta * phi_m), 0.0)
+            # activation residency: GPipe holds all S microbatches'
+            # activations between forward and backward; 1F1B's steady state
+            # holds at most p (min(p/S, 1) of the batch's worth)
+            act = (1.0 if sched == "gpipe"
+                   else np.minimum(p / np.maximum(S, 1.0), 1.0))
+            out["mem"] = gamma * delta * np.maximum(
+                2.0 * B * act * mxy + 2.0 * mw, 1.0)
+            return out
+        if sched == "interleaved":
+            v = max(int(cfg.virtual_stages), 1)
+            out["feasible"] = v * p <= T.n
+            # v·p chunks round-robin over p ranks: v·S + p − 1 chunk-ticks
+            # at the bottleneck CHUNK cost (the v·p-way partition maxima) —
+            # the fill/drain bubble shrinks to (p−1)/(v·S). Weight update
+            # stays per-rank: a rank owns v chunks ≈ its p-cut stage's
+            # layers, so mwu (the p-way partition max) is the right charge.
+            cfw, cbw, _cwu, cycut, _cxy, _cw = _pipeline_terms_bcast(
+                T, v * p, shape)
+            out["comp"] = (D * (v * S + p - 1) / S * (cfw + cbw)
+                           + iters * mwu)
+            # v× the boundary hops, each shipping the cut activation of the
+            # FINER v·p-way partition
+            out["p2p"] = np.where(p > 1, 2 * D * (v * S + p - 2) / B * (
+                lvl_model.alpha
+                + B / S * cycut * delta * lvl_model.beta * phi_m), 0.0)
+            # steady-state in-flight microbatches: p + v − 1 (each rank
+            # holds one microbatch per virtual slot as groups overlap);
+            # weights are the rank's full p-cut share (all v chunks)
+            act = np.minimum((p + v - 1.0) / np.maximum(S, 1.0), 1.0)
+            out["mem"] = gamma * delta * np.maximum(
+                2.0 * B * act * mxy + 2.0 * mw, 1.0)
+            return out
+        raise ValueError(f"unknown pipeline schedule {sched!r}")
 
     if strategy in ("filter", "channel"):
         lim = T.minF if strategy == "filter" else T.minC
@@ -478,7 +523,8 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
     raise ValueError(strategy)
 
 
-def _limit_str(strategy: str, T: StatTable, B, feasible: bool) -> str:
+def _limit_str(strategy: str, T: StatTable, B, feasible: bool,
+               cfg: "OracleConfig | None" = None) -> str:
     """Human-readable scaling-limit description (mirrors the paper's notes)."""
     if strategy == "serial":
         return "p = 1"
@@ -488,6 +534,8 @@ def _limit_str(strategy: str, T: StatTable, B, feasible: bool) -> str:
         return (f"p <= min spatial ({T.sp_min})"
                 + ("" if feasible else " or recurrent-seq violated"))
     if strategy == "pipeline":
+        if cfg is not None and cfg.schedule == "interleaved":
+            return f"v*p <= G ({T.n}), v={max(int(cfg.virtual_stages), 1)}"
         return f"p <= G ({T.n})"
     if strategy in ("filter", "channel"):
         lim = T.minF if strategy == "filter" else T.minC

@@ -34,8 +34,9 @@ from ..cluster import parse_phi_table as _parse_phi_table
 from ..cluster import parse_sigma_table as _parse_sigma_table
 from ..hardware import (PAPER_V100_CLUSTER, SystemModel, TPU_V5E_POD,
                        cpu_host_model)
-from ..oracle import (OracleConfig, Projection, STRATEGY_NAMES, StatTable,
-                     TimeModel, _eval, _limit_str, precompute)
+from ..oracle import (OracleConfig, PIPELINE_SCHEDULES, Projection,
+                     STRATEGY_NAMES, StatTable, TimeModel, _eval, _limit_str,
+                     precompute)
 
 PURE_STRATEGIES = ("serial", "data", "spatial", "pipeline", "filter",
                    "channel")
@@ -143,6 +144,9 @@ class SweepResult:
     zero1: np.ndarray = None     # bool
     zero3: np.ndarray = None     # bool
     seq_parallel: np.ndarray = None  # bool
+    # pipeline schedule axis (DESIGN.md §4): the schedule each pipeline row
+    # was priced under ("-" for non-pipeline rows)
+    schedule: np.ndarray = None  # str
     mem_cap: float | None = None
 
     def __post_init__(self):
@@ -150,6 +154,8 @@ class SweepResult:
         for name in SWITCH_NAMES:
             if getattr(self, name) is None:
                 setattr(self, name, np.zeros(n, bool))
+        if self.schedule is None:
+            self.schedule = np.full(n, "-", dtype="U12")
 
     def __len__(self) -> int:
         return len(self.p)
@@ -191,7 +197,7 @@ class SweepResult:
             feasible=self.feasible[i], fits=self.fits[i],
             bottleneck=self.bottleneck[i], limit=self.limit[i],
             remat=self.remat[i], zero1=self.zero1[i], zero3=self.zero3[i],
-            seq_parallel=self.seq_parallel[i])
+            seq_parallel=self.seq_parallel[i], schedule=self.schedule[i])
 
     def for_strategy(self, strategy: str) -> "SweepResult":
         return self.select(self.strategy == strategy)
@@ -260,13 +266,18 @@ class SweepResult:
         lines = [f"{'p':>6s} {'strategy':10s} {'p1xp2':>11s} {'B':>7s} "
                  f"{'comp_ms':>10s} {'comm_ms':>10s} {'total_ms':>10s} "
                  f"{'mem_GiB':>8s}  {'bottleneck':18s} {'limit'}"]
+        short = {"gpipe": "gpipe", "one_f_one_b": "1f1b",
+                 "interleaved": "ileav"}
         for p in sorted(set(int(v) for v in best.p)):
             sub = best.select(best.p == p)
             for i in np.argsort(np.where(sub.ok, sub.total_s, np.inf)):
                 it = max(float(sub.iterations[i]), 1.0)
                 mark = " " if sub.ok[i] else "!"
+                sched = str(sub.schedule[i])
+                disp = (f"pipe:{short.get(sched, sched)}"
+                        if sched != "-" else str(sub.strategy[i]))
                 lines.append(
-                    f"{p:>6d} {sub.strategy[i]:10s} "
+                    f"{p:>6d} {disp:10s} "
                     f"{int(sub.p1[i]):>5d}x{int(sub.p2[i]):<5d} "
                     f"{int(sub.B[i]):>7d} "
                     f"{float(sub.comp_s[i])/it*1e3:>10.3f} "
@@ -296,10 +307,10 @@ def _lattice(strategy: str, p_grid, batch_of) -> tuple | None:
 
 def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
           strategies=STRATEGY_NAMES, *, batch_for_p=None,
-          mem_cap: float | None = None, switches=None,
+          mem_cap: float | None = None, switches=None, schedules=None,
           cluster: "ClusterSpec | None" = None) -> SweepResult:
-    """Evaluate the whole (strategy × p × p1·p2 [× switches]) lattice
-    vectorized.
+    """Evaluate the whole (strategy × p × p1·p2 [× switches] [× schedules])
+    lattice vectorized.
 
     ``batch_for_p``: optional callable p → global batch B (weak scaling);
     defaults to the constant ``cfg.B``. ``mem_cap``: per-PE bytes; points
@@ -308,6 +319,11 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
     evaluates only the combination already set on ``cfg``; ``"all"``
     enumerates all 16 (remat, zero1, zero3, seq_parallel) combinations as a
     16× lattice axis; or pass an explicit iterable of 4-bool tuples.
+    ``schedules``: the pipeline strategy's schedule axis (DESIGN.md §4) —
+    ``None`` prices pipeline rows only under ``cfg.schedule`` (current
+    behavior), ``"all"`` enumerates every executor schedule as extra
+    pipeline rows, or pass an explicit iterable of schedule names.
+    Non-pipeline strategies are schedule-invariant and carry ``"-"``.
     ``cluster``: a ClusterSpec whose torus topology (if any) additionally
     prunes lattice points whose model axis cannot embed as a physical ring
     (cluster.Torus.split_mask; DESIGN.md §11) — the α–β terms themselves
@@ -327,74 +343,91 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
         if any(len(c) != len(SWITCH_NAMES) for c in combos):
             raise ValueError(f"each switch combo must be a 4-tuple over "
                              f"{SWITCH_NAMES}")
+    if schedules is None:
+        scheds = (cfg.schedule,)
+    elif schedules == "all":
+        scheds = PIPELINE_SCHEDULES
+    else:
+        scheds = tuple(schedules)
+        unknown = set(scheds) - set(PIPELINE_SCHEDULES)
+        if unknown:
+            raise ValueError(f"unknown schedules {sorted(unknown)}; "
+                             f"known: {list(PIPELINE_SCHEDULES)}")
     T = precompute(stats, tm)
     p_grid = sorted(set(int(p) for p in p_grid if int(p) >= 1))
     batch_of = batch_for_p or (lambda p: cfg.B)
     cols: dict[str, list] = {k: [] for k in
                              ("strategy", "p", "p1", "p2", "B", "iters",
                               "comp", "ge", "fb", "halo", "p2p", "mem",
-                              "feasible", "limit",
+                              "feasible", "limit", "schedule",
                               "remat", "zero1", "zero3", "seq_parallel")}
     for s in strategies:
-        # the lattice, feasibility and limit strings are switch-invariant
-        # (scaling limits never involve the memory model) — build them once
-        # per strategy, re-evaluate only the time/memory terms per combo
         lat = _lattice(s, p_grid, batch_of)
         if lat is None:
             continue
         p, p1, p2, B = lat
         p2_eff = p2 if s in HYBRID_STRATEGIES else (
             p if s in ("filter", "channel", "spatial") else np.ones_like(p))
-        evals = []
-        for combo in combos:
-            cfg_c = replace(cfg, **dict(zip(SWITCH_NAMES, combo)))
-            try:
-                r = _eval(T, s, cfg_c, tm.system, p, p1, p2, p2_eff, B)
-            except ValueError:  # strategy inapplicable to this layer set,
-                break           # independent of the switch combo
-            evals.append((combo, r))
-        if not evals:
-            continue
-        n = len(p)
-        bcast = (lambda v: np.broadcast_to(np.asarray(v, np.float64),
-                                           (n,)).copy())
-        feas = np.broadcast_to(np.asarray(evals[0][1]["feasible"], bool),
-                               (n,)).copy()
-        topo = None if cluster is None else cluster.topology
-        topo_ok = None
-        if topo is not None:
-            topo_ok = np.broadcast_to(
-                topo.split_mask(p, p1, p2, strategy=s), (n,)).copy()
-            feas &= topo_ok
-        memo: dict = {}   # limit strings only vary with (B, feasible)
+        # only the pipeline strategy has a schedule axis
+        for sched in (scheds if s == "pipeline" else ("-",)):
+            cfg_s = cfg if sched == "-" else replace(cfg, schedule=sched)
+            # the lattice, feasibility and limit strings are switch-
+            # invariant (scaling limits never involve the memory model) —
+            # build them once per (strategy, schedule), re-evaluate only
+            # the time/memory terms per combo
+            evals = []
+            for combo in combos:
+                cfg_c = replace(cfg_s, **dict(zip(SWITCH_NAMES, combo)))
+                try:
+                    r = _eval(T, s, cfg_c, tm.system, p, p1, p2, p2_eff, B)
+                except ValueError:  # strategy inapplicable to this layer
+                    break           # set, independent of the switch combo
+                evals.append((combo, r))
+            if not evals:
+                continue
+            n = len(p)
+            bcast = (lambda v: np.broadcast_to(np.asarray(v, np.float64),
+                                               (n,)).copy())
+            feas = np.broadcast_to(np.asarray(evals[0][1]["feasible"], bool),
+                                   (n,)).copy()
+            topo = None if cluster is None else cluster.topology
+            topo_ok = None
+            if topo is not None:
+                topo_ok = np.broadcast_to(
+                    topo.split_mask(p, p1, p2, strategy=s), (n,)).copy()
+                feas &= topo_ok
+            memo: dict = {}   # limit strings only vary with (B, feasible)
 
-        def limit_of(Bi: int, fi: bool) -> str:
-            k = (Bi, fi)
-            if k not in memo:
-                memo[k] = _limit_str(s, T, Bi, fi)
-            return memo[k]
+            def limit_of(Bi: int, fi: bool) -> str:
+                k = (Bi, fi)
+                if k not in memo:
+                    memo[k] = _limit_str(s, T, Bi, fi, cfg_s)
+                return memo[k]
 
-        limits = np.array(
-            [limit_of(int(Bi), bool(fi)) for Bi, fi in zip(B, feas)],
-            dtype=object)
-        if topo_ok is not None and not topo_ok.all():
-            # topology-pruned points carry the placement reason, not the
-            # (possibly satisfied) scaling limit
-            limits = np.where(topo_ok, limits,
-                              topo.limit_str(s)).astype(object)
-        for combo, r in evals:
-            cols["strategy"].append(np.full(n, s, dtype="U8"))
-            cols["p"].append(p)
-            cols["p1"].append(p1)
-            cols["p2"].append(p2)
-            cols["B"].append(B)
-            cols["iters"].append(bcast(r["iters"]))
-            for k in ("comp", "ge", "fb", "halo", "p2p", "mem"):
-                cols[k].append(bcast(r[k]))
-            for name, v in zip(SWITCH_NAMES, combo):
-                cols[name].append(np.full(n, bool(v)))
-            cols["feasible"].append(feas)
-            cols["limit"].append(limits)
+            limits = np.array(
+                [limit_of(int(Bi), bool(fi)) for Bi, fi in zip(B, feas)],
+                dtype=object)
+            if topo_ok is not None and not topo_ok.all():
+                # topology-pruned points carry the placement reason, not
+                # the (possibly satisfied) scaling limit
+                limits = np.where(topo_ok, limits,
+                                  topo.limit_str(s)).astype(object)
+            sched_label = cfg.schedule if s == "pipeline" and sched == "-" \
+                else sched
+            for combo, r in evals:
+                cols["strategy"].append(np.full(n, s, dtype="U8"))
+                cols["p"].append(p)
+                cols["p1"].append(p1)
+                cols["p2"].append(p2)
+                cols["B"].append(B)
+                cols["iters"].append(bcast(r["iters"]))
+                for k in ("comp", "ge", "fb", "halo", "p2p", "mem"):
+                    cols[k].append(bcast(r[k]))
+                for name, v in zip(SWITCH_NAMES, combo):
+                    cols[name].append(np.full(n, bool(v)))
+                cols["schedule"].append(np.full(n, sched_label, dtype="U12"))
+                cols["feasible"].append(feas)
+                cols["limit"].append(limits)
     if not cols["p"]:
         e = np.zeros(0)
         z = np.zeros(0, bool)
@@ -404,7 +437,8 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
             iterations=e, comp_s=e, comm_ge_s=e, comm_fb_s=e, comm_halo_s=e,
             comm_p2p_s=e, mem_bytes=e, feasible=z, fits=z,
             bottleneck=np.zeros(0, object), limit=np.zeros(0, object),
-            remat=z, zero1=z, zero3=z, seq_parallel=z, mem_cap=mem_cap)
+            remat=z, zero1=z, zero3=z, seq_parallel=z,
+            schedule=np.zeros(0, "U12"), mem_cap=mem_cap)
     cat = {k: np.concatenate(v) for k, v in cols.items()}
     fits = (cat["mem"] <= mem_cap if mem_cap is not None
             else np.ones(len(cat["p"]), bool))
@@ -420,7 +454,8 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
         comm_p2p_s=cat["p2p"], mem_bytes=cat["mem"],
         feasible=cat["feasible"], fits=fits, bottleneck=bottleneck,
         limit=cat["limit"], remat=cat["remat"], zero1=cat["zero1"],
-        zero3=cat["zero3"], seq_parallel=cat["seq_parallel"], mem_cap=mem_cap)
+        zero3=cat["zero3"], seq_parallel=cat["seq_parallel"],
+        schedule=cat["schedule"], mem_cap=mem_cap)
 
 
 # ---------------------------------------------------------------------------
@@ -461,16 +496,24 @@ def _smoke() -> int:
     stats = stats_for(RESNET50)
     tm = TimeModel(PAPER_V100_CLUSTER)
     cfg = OracleConfig(B=64, D=6400)
-    res = sweep(stats, tm, cfg, [1, 2, 4, 8, 12, 16], mem_cap=16e9)
+    res = sweep(stats, tm, cfg, [1, 2, 4, 8, 12, 16], mem_cap=16e9,
+                schedules="all")
     worst = 0.0
     for i in range(len(res)):
-        pr = project(str(res.strategy[i]), stats, tm, cfg, int(res.p[i]),
+        sched = str(res.schedule[i])
+        cfg_i = cfg if sched == "-" else replace(cfg, schedule=sched)
+        pr = project(str(res.strategy[i]), stats, tm, cfg_i, int(res.p[i]),
                      p1=int(res.p1[i]), p2=int(res.p2[i]))
         ref = pr.total_s
         worst = max(worst, abs(res.total_s[i] - ref) / max(abs(ref), 1e-30))
     assert worst < 1e-9, f"sweep/scalar mismatch: {worst:.2e}"
     assert res.crossover("data", "df") is None or res.crossover("data", "df") > 0
-    print(f"sweep --smoke OK: {len(res)} lattice points, "
+    n_sched = len(set(str(s) for s in
+                      res.select(res.strategy == "pipeline").schedule))
+    assert n_sched == len(PIPELINE_SCHEDULES), \
+        f"expected {len(PIPELINE_SCHEDULES)} pipeline schedules, got {n_sched}"
+    print(f"sweep --smoke OK: {len(res)} lattice points "
+          f"({n_sched} pipeline schedules), "
           f"max rel err vs project() = {worst:.2e}")
     return 0
 
@@ -503,6 +546,12 @@ def main(argv=None) -> int:
                          "gradient exchange hide under compute, DESIGN.md "
                          "§10)")
     ap.add_argument("--strategies", default=",".join(STRATEGY_NAMES))
+    ap.add_argument("--schedule", default="all",
+                    help="pipeline schedule axis: 'all' (default) sweeps "
+                         f"{'/'.join(PIPELINE_SCHEDULES)} as extra pipeline "
+                         "rows, or name one")
+    ap.add_argument("--virtual-stages", type=int, default=2,
+                    help="v for the interleaved schedule (chunks per rank)")
     ap.add_argument("--crossover", nargs=2, metavar=("BASE", "CHALLENGER"),
                     default=("data", "df"),
                     help="report smallest p where CHALLENGER beats BASE")
@@ -525,18 +574,21 @@ def main(argv=None) -> int:
     cfg = cluster.oracle_config(
         B=batch_of(max(p_grid)), D=max(D, batch_of(max(p_grid))),
         remat=args.remat, zero1=args.zero1, zero3=args.zero3,
-        seq_parallel=args.seq_parallel, overlap=not args.no_overlap)
+        seq_parallel=args.seq_parallel, overlap=not args.no_overlap,
+        virtual_stages=max(args.virtual_stages, 1))
     cap = (args.mem_cap_gib * 2 ** 30 if args.mem_cap_gib
            else tm.system.mem_capacity)
     strategies = tuple(s for s in args.strategies.split(",") if s)
     res = sweep(stats, tm, cfg, p_grid, strategies, batch_for_p=batch_of,
-                mem_cap=cap, cluster=cluster)
+                mem_cap=cap, cluster=cluster,
+                schedules="all" if args.schedule == "all" else (args.schedule,))
 
     if args.csv:
-        print("strategy,p,p1,p2,B,comp_s,comm_ge_s,comm_fb_s,comm_halo_s,"
-              "comm_p2p_s,mem_bytes,feasible,fits,bottleneck")
+        print("strategy,schedule,p,p1,p2,B,comp_s,comm_ge_s,comm_fb_s,"
+              "comm_halo_s,comm_p2p_s,mem_bytes,feasible,fits,bottleneck")
         for i in range(len(res)):
-            print(f"{res.strategy[i]},{res.p[i]},{res.p1[i]},{res.p2[i]},"
+            print(f"{res.strategy[i]},{res.schedule[i]},"
+                  f"{res.p[i]},{res.p1[i]},{res.p2[i]},"
                   f"{res.B[i]},{res.comp_s[i]:.9g},{res.comm_ge_s[i]:.9g},"
                   f"{res.comm_fb_s[i]:.9g},{res.comm_halo_s[i]:.9g},"
                   f"{res.comm_p2p_s[i]:.9g},{res.mem_bytes[i]:.9g},"

@@ -30,9 +30,10 @@ EXEC_STRATEGY = {
     "df": "df",
     "ds": "ds",
     "ep": "ep_df",      # expert parallelism executes as the ep_df hybrid rules
-    "pipeline": "pipeline",  # GPipe schedule: measure_step builds the stage
-                             # executor (parallel/pipeline.py), not a plain
-                             # sharded train step
+    "pipeline": "pipeline",  # stage schedule (gpipe / 1F1B / interleaved):
+                             # measure_step builds the stage executor
+                             # (parallel/schedules), not a plain sharded
+                             # train step
 }
 
 # oracle strategies with NO executable path, and why (so validate() skips
@@ -67,12 +68,14 @@ class ValidationPoint:
 
 
 def measure_step(model, model_cfg, batch, mesh, strategy: str,
-                 seed: int = 0, segments: int = 8) -> float:
+                 seed: int = 0, segments: int = 8,
+                 schedule: str = "gpipe", virtual_stages: int = 2) -> float:
     """Measured per-iteration time of a real sharded train step.
 
-    ``pipeline`` measures the GPipe stage executor: all p PEs become stages
-    of a (1, p) pipe mesh (the paper's pure "layer" strategy) and the step
-    runs the fill/drain schedule with ``segments`` microbatches.
+    ``pipeline`` measures the stage executor under ``schedule`` (gpipe /
+    one_f_one_b / interleaved): all p PEs become stages of a (1, p) pipe
+    mesh (the paper's pure "layer" strategy) and the step runs that
+    schedule with ``segments`` microbatches.
     """
     if strategy in EXEC_SKIP:
         raise NotImplementedError(
@@ -86,19 +89,18 @@ def measure_step(model, model_cfg, batch, mesh, strategy: str,
     rules = make_rules(EXEC_STRATEGY[strategy])
     if strategy == "pipeline":
         from ..launch.compat import make_mesh
-        from ..parallel.pipeline import (block_costs_from_stats,
-                                         clip_segments,
-                                         make_pipeline_train_step)
+        from ..parallel.pipeline import (make_pipeline_train_step,
+                                         pipeline_block_costs)
         p = int(np.prod(list(mesh.shape.values())))
         pipe_mesh = make_mesh((1, p), ("data", "model"),
                               devices=list(np.asarray(mesh.devices).flat))
         ctx = ShardingCtx(pipe_mesh, rules)
         tok = batch["tokens"]
-        costs = block_costs_from_stats(stats_for(model_cfg, tok.shape[1]),
-                                       model.cfg.n_layers)
+        costs = pipeline_block_costs(
+            model, stats_for(model_cfg, tok.shape[1]), attn_impl="plain")
         step = make_pipeline_train_step(
-            model, opt, ctx, block_costs=costs,
-            segments=clip_segments(tok.shape[0], segments),
+            model, opt, ctx, block_costs=costs, segments=segments,
+            schedule=schedule, virtual_stages=virtual_stages,
             attn_impl="plain")
     else:
         ctx = ShardingCtx(mesh, rules)
@@ -177,6 +179,52 @@ def validate(model, model_cfg, batch, mesh, strategies, *,
         points.append(ValidationPoint(s, p, meas, proj.total_s,
                                       serial.total_s))
     return points
+
+
+def measure_schedule_bubble(model, model_cfg, make_batch, mesh, *,
+                            schedule: str = "gpipe",
+                            virtual_stages: int = 2,
+                            S_small: int = 4, S_large: int = 8,
+                            microbatch: int = 1, seed: int = 0) -> dict:
+    """Measured bubble fraction of one pipeline schedule (paper §5.2
+    methodology extended to the schedule axis).
+
+    Runs the stage executor at two microbatch counts with a FIXED
+    per-microbatch size (``make_batch(S · microbatch)`` builds the batch),
+    fits the step time as t(S) = a·S + b — a is the steady-state
+    per-microbatch cost, b the fill/drain (bubble) overhead — and reports
+    the bubble fraction b / t(S_large). Schedules with shorter pipelines
+    (1F1B's early backward, interleaved's v-fold shorter fill) show a
+    smaller b for the same stage cut, which is exactly what the oracle's
+    per-schedule bubble terms claim.
+    """
+    times = {}
+    for S in (S_small, S_large):
+        batch = make_batch(S * microbatch)
+        times[S] = measure_step(model, model_cfg, batch, mesh, "pipeline",
+                                seed=seed, segments=S, schedule=schedule,
+                                virtual_stages=virtual_stages)
+    a = (times[S_large] - times[S_small]) / float(S_large - S_small)
+    b = max(times[S_small] - a * S_small, 0.0)
+    t = times[S_large]
+    return {"schedule": schedule, "S_small": S_small, "S_large": S_large,
+            "per_microbatch_s": a, "bubble_s": b,
+            "t_small_s": times[S_small], "t_large_s": t,
+            "bubble_fraction": b / t if t > 0 else 0.0}
+
+
+def schedule_winner(stats, tm, cfg, p: int) -> str:
+    """The oracle's cheapest pipeline schedule at p — the schedule axis of
+    the sweep restricted to the pipeline strategy. Ties break in
+    PIPELINE_SCHEDULES order (gpipe first), matching autotune."""
+    from .sweep import sweep
+    res = sweep(stats, tm, cfg, [p], strategies=("pipeline",),
+                schedules="all")
+    if len(res) == 0:
+        raise ValueError("pipeline does not apply to this layer set")
+    keep = res.feasible if res.feasible.any() else np.ones(len(res), bool)
+    idx = np.flatnonzero(keep)
+    return str(res.schedule[idx[np.argmin(res.total_s[idx])]])
 
 
 def accuracy_report(points: list[ValidationPoint]) -> str:

@@ -183,26 +183,27 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = No
         if cfg.family in ("lm", "vlm") and unroll_attn:
             kw["attn_impl"] = "chunked"
         if strategy == "pipeline":
-            # GPipe stage schedule (parallel/pipeline.py): stages = the
-            # mesh's model axis, cuts = the DP partitioner over the oracle's
-            # per-block costs, microbatch segments = what the plan's
-            # projection assumed (clipped to divide the global batch — as
-            # the oracle clips when validating)
+            # stage schedule (gpipe / 1F1B / interleaved — the plan says
+            # which) over the mesh's model axis, cuts = the DP partitioner
+            # over the oracle's per-block costs, microbatch segments = what
+            # the plan's projection assumed (the step resolves the largest
+            # deployable S <= that and reports it in metrics)
             from ..core.autotune import stats_for_model
-            from ..parallel.pipeline import (block_costs_from_stats,
-                                             clip_segments,
-                                             make_pipeline_train_step)
+            from ..parallel.pipeline import (make_pipeline_train_step,
+                                             pipeline_block_costs)
             if accum != 1:
                 raise NotImplementedError(
                     "pipeline microbatches ARE the accumulation schedule; "
                     "sequential grad accumulation (accum > 1) is not wired "
-                    "through the GPipe step")
+                    "through the pipeline step")
             seg = plan.segments if plan is not None else 8
-            costs = block_costs_from_stats(
-                stats_for_model(mc, shape.seq_len), mc.n_layers)
+            schedule = plan.schedule if plan is not None else "gpipe"
+            virtual = plan.virtual_stages if plan is not None else 2
+            costs = pipeline_block_costs(
+                model, stats_for_model(mc, shape.seq_len), **kw)
             step = make_pipeline_train_step(
-                model, opt, ctx, block_costs=costs,
-                segments=clip_segments(shape.global_batch, seg), **kw)
+                model, opt, ctx, block_costs=costs, segments=seg,
+                schedule=schedule, virtual_stages=virtual, **kw)
         else:
             step = make_train_step(model, opt, ctx, accum=accum, **kw)
         state_rules = zero1_rules(rules) if opt.zero1 else rules
@@ -221,9 +222,10 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = No
     # serving cells ---------------------------------------------------------
     if strategy == "pipeline":
         raise NotImplementedError(
-            "pipeline is a training schedule (GPipe fill/drain); serve cells "
-            "deploy serve_tp instead — TunedPlan.exec_strategy does this "
-            "automatically")
+            "the pipeline schedules (gpipe / 1F1B / interleaved) are "
+            "training schedules (fill/drain over microbatches); serve "
+            "cells deploy serve_tp instead — TunedPlan.exec_strategy does "
+            "this automatically")
     params = tree_abstract(model.params_spec(), mesh=mesh, rules=rules)
     B, S = shape.global_batch, shape.seq_len
     serve_kw = {k: v for k, v in kw.items() if k != "remat"}

@@ -156,6 +156,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
                        "p2": plan.p2, "split_deployed": deployed,
                        "switches": plan.switch_str(),
                        **plan.switches,     # the four booleans, by name
+                       "schedule": plan.schedule,
                        "per_iter_s": plan.per_iter_s,
                        "bottleneck": plan.bottleneck,
                        "feasible": plan.feasible}
@@ -182,9 +183,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     period = _pattern_period(cell.model)
     n_groups = cell.n_scan_groups
     if strategy == "pipeline":
-        # the GPipe step owns the whole stack (stages = mesh model axis);
-        # a 1-layer override cannot cut into the same stage count, so the
-        # full-scan cost stands un-extrapolated
+        # the pipeline step owns the whole stack (stages = mesh model
+        # axis, any schedule); a 1-layer override cannot cut into the same
+        # stage count, so the full-scan cost stands un-extrapolated
         total = full
     elif n_groups > 1:
         g_cells = []

@@ -55,8 +55,9 @@ def main(argv=None) -> None:
         # switches=None: the serving exec path deploys no memory switches
         # (no optimizer to ZeRO-shard, no backward to remat), so the plan
         # must not claim feasibility through them
-        # allow_pipeline=False: GPipe is a training schedule (fill/drain
-        # over microbatches) — serving must never rank it
+        # allow_pipeline=False: every pipeline schedule (gpipe / 1F1B /
+        # interleaved) is a training schedule (fill/drain over
+        # microbatches) — serving must never rank them
         plan = autotune(stats_for_model(mc, args.prompt_len + args.gen),
                         TimeModel(cluster.system),
                         cluster.oracle_config(B=B, D=B), n,

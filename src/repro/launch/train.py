@@ -113,6 +113,17 @@ def main(argv=None) -> None:
                          "auto-tuner pick strategy/mesh/memory switches")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--schedule", default="auto",
+                    help="pipeline schedule: gpipe | one_f_one_b | "
+                         "interleaved; 'auto' follows the tuned plan "
+                         "(--strategy auto) or gpipe otherwise")
+    ap.add_argument("--virtual-stages", type=int, default=2,
+                    help="v for the interleaved schedule (chunks per rank)")
+    ap.add_argument("--segments", type=int, default=None,
+                    help="requested microbatch count S for pipeline "
+                         "schedules (default: the tuned plan's, else 8); "
+                         "the step resolves the largest deployable S <= "
+                         "this and reports it in metrics")
     ap.add_argument("--ckpt-dir", default="checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -146,16 +157,21 @@ def main(argv=None) -> None:
         from ..core.autotune import autotune, stats_for_model
         from ..core.cluster import ClusterSpec
         from ..core.oracle import TimeModel
-        from ..parallel.pipeline import pipeline_supported
+        from ..parallel.pipeline import (pipeline_block_count,
+                                         pipeline_supported)
         n = len(jax.devices())
         cluster = ClusterSpec.from_cli_args(args)
         plan = autotune(stats_for_model(mc, args.seq),
                         TimeModel(cluster.system),
-                        cluster.oracle_config(B=args.batch, D=args.batch), n,
+                        cluster.oracle_config(
+                            B=args.batch, D=args.batch,
+                            virtual_stages=max(args.virtual_stages, 1)), n,
+                        schedules=("all" if args.schedule == "auto"
+                                   else (args.schedule,)),
                         fallback=cfg.strategy, cluster=cluster,
                         allow_remat=cfg.family != "cnn",
                         allow_pipeline=pipeline_supported(mc) is None,
-                        max_stages=getattr(mc, "n_layers", None))
+                        max_stages=pipeline_block_count(mc))
         print(plan.describe())
         strategy = plan.exec_strategy("train")
         mesh = make_host_mesh(model=plan.p2 if n % plan.p2 == 0 else None)
@@ -173,23 +189,34 @@ def main(argv=None) -> None:
     if plan is not None and cfg.family in ("lm", "vlm", "encdec"):
         fwd_kw["remat"] = plan.remat    # deploy the plan's remat switch
     if strategy == "pipeline":
-        # GPipe stage schedule over the mesh's model axis; S = what the
-        # plan's projection assumed (default 8), clipped to divide the
-        # batch; stage cuts = the DP partitioner over per-block costs
+        # stage schedule (gpipe / 1F1B / interleaved) over the mesh's model
+        # axis; S = what the plan's projection assumed (default 8) — the
+        # step resolves the largest deployable S <= requested and surfaces
+        # it in metrics (pipeline_segments); stage cuts = the DP
+        # partitioner over per-block costs
         from ..core.autotune import stats_for_model
-        from ..parallel.pipeline import (block_costs_from_stats,
-                                         clip_segments,
-                                         make_pipeline_train_step)
+        from ..parallel.pipeline import (make_pipeline_train_step,
+                                         pipeline_block_costs)
         if args.accum != 1:
             raise SystemExit("--accum > 1 is not supported with "
-                             "--strategy pipeline (the GPipe microbatches "
-                             "are the accumulation schedule)")
-        seg = plan.segments if plan is not None else 8
-        costs = block_costs_from_stats(stats_for_model(mc, args.seq),
-                                       mc.n_layers)
+                             "--strategy pipeline (the pipeline "
+                             "microbatches are the accumulation schedule)")
+        seg = args.segments or (plan.segments if plan is not None else 8)
+        schedule = args.schedule
+        virtual = max(args.virtual_stages, 1)
+        if plan is not None:
+            schedule = plan.schedule if schedule == "auto" else schedule
+            virtual = plan.virtual_stages
+        elif schedule == "auto":
+            schedule = "gpipe"
+        costs = pipeline_block_costs(model, stats_for_model(mc, args.seq),
+                                     **fwd_kw)
+        print(f"pipeline schedule={schedule}"
+              + (f" v={virtual}" if schedule == "interleaved" else "")
+              + f" segments<={seg}")
         step = jax.jit(make_pipeline_train_step(
-            model, opt, ctx, block_costs=costs,
-            segments=clip_segments(args.batch, seg),
+            model, opt, ctx, block_costs=costs, segments=seg,
+            schedule=schedule, virtual_stages=virtual,
             **fwd_kw), donate_argnums=(0,))
     else:
         step = jax.jit(make_train_step(model, opt, ctx, accum=args.accum,

@@ -1,6 +1,10 @@
 from .strategies import STRATEGIES, list_strategies, make_rules
-from .pipeline import (block_costs_from_stats, clip_segments, gpipe,
-                       make_masked_stage_fn, make_pipeline_train_step,
-                       make_stage_fn, pipeline_supported, stack_stage_bounds,
-                       stack_stages)
+from .schedules import (SCHEDULE_NAMES, SCHEDULES, block_costs_from_stats,
+                        clip_segments, gpipe, interleaved,
+                        make_masked_stage_fn, make_pipeline_train_step,
+                        make_stage_fn, make_virtual_stage_fn, one_f_one_b,
+                        pipeline_block_costs, pipeline_block_count,
+                        pipeline_supported, resolve_segments,
+                        stack_stage_bounds, stack_stages,
+                        stack_virtual_stage_bounds)
 from .halo import HaloConv, halo_exchange, spatial_conv2d

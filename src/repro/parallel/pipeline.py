@@ -1,289 +1,27 @@
-"""Layer (pipeline) parallelism — paper §3.4, GPipe schedule [17].
+"""Compatibility shim — the pipeline layer now lives in
+``repro.parallel.schedules`` (runtime / stages / hetero / train_step).
 
-``gpipe`` runs a stage function over ``n_stages`` mesh shards with the
-classic (p + S − 1)-step fill/drain schedule the paper's Table-3 "Layer" row
-models:
-
-    T_comp ≈ D(p+S−1)/S · (max FW_Gi + max BW_Gi)
-    T_comm ≈ 2D(p+S−2)/B · max(α + B/S·|y_Gi|·δβ)
-
-Implementation: ``shard_map`` over the stage axis; each rank owns one stage's
-parameters (leading stage dim sharded); microbatch activations hop stages via
-``collective_permute`` (the paper's P2P transfers). Differentiable (scan +
-permute), so the same schedule serves forward and backward.
-
-Beyond the schedule primitive, this module makes pipeline a DEPLOYABLE
-strategy (ISSUE 3):
-
-  * non-uniform stages — ``stack_stage_bounds`` + ``make_masked_stage_fn``
-    realize the DP partitioner's unequal layer counts under SPMD (each stage
-    scans max-stage-length padded slots with a validity mask);
-  * a full train step — ``make_pipeline_train_step`` runs embed → GPipe over
-    the uniform block stack → head/loss → optimizer update for any
-    uniform-pattern TransformerLM, gradient-exact vs the serial step;
-  * a capability probe — ``pipeline_supported`` names the reason a model
-    cannot pipeline (heterogeneous CNN trunks, MoE aux losses, …), consumed
-    by the auto-tuner's deployability gate.
+Everything the old module exported is re-exported here so existing imports
+keep working; new code should import from ``repro.parallel.schedules``.
 """
-from __future__ import annotations
-
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-
-from ..launch.compat import shard_map
-
-
-def gpipe(stage_fn, stage_params, microbatches, mesh: Mesh, axis: str = "model"):
-    """Run a GPipe pipeline.
-
-    stage_fn(params_for_one_stage, x) -> y (same shape as x)
-    stage_params: pytree with leading dim n_stages (sharded over ``axis``)
-    microbatches: (S, mb, ...) array (replicated)
-    Returns: (S, mb, ...) outputs of the final stage (replicated).
-    """
-    n_stages = mesh.shape[axis]
-    S = microbatches.shape[0]
-    T = S + n_stages - 1
-    perm = [(i, i + 1) for i in range(n_stages - 1)]
-
-    def spmd(params_local, mbs):
-        idx = jax.lax.axis_index(axis)
-        params_one = jax.tree.map(lambda x: x[0], params_local)
-
-        def step(carry, t):
-            state = carry  # activation entering this rank at step t
-            # stage 0 ingests microbatch t (only meaningful while t < S)
-            mb_t = jax.lax.dynamic_index_in_dim(
-                mbs, jnp.clip(t, 0, S - 1), axis=0, keepdims=False)
-            inp = jnp.where(idx == 0, mb_t.astype(state.dtype), state)
-            out = stage_fn(params_one, inp)
-            # ship to the next stage; what the last stage computed is emitted
-            nxt = jax.lax.ppermute(out, axis, perm)
-            return nxt, out
-
-        state0 = jnp.zeros(microbatches.shape[1:], microbatches.dtype)
-        _, outs = jax.lax.scan(step, state0, jnp.arange(T))
-        # rank r computed microbatch (t - r) at step t; final stage results
-        # live at steps n_stages-1 … T-1
-        final = jax.lax.dynamic_slice_in_dim(outs, n_stages - 1, S, axis=0)
-        mine = jnp.where(idx == n_stages - 1, final, jnp.zeros_like(final))
-        return jax.lax.psum(mine, axis)
-
-    pspec_params = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = shard_map(spmd, mesh=mesh,
-                   in_specs=(pspec_params, P()), out_specs=P(),
-                   check_vma=False)
-    return fn(stage_params, microbatches)
-
-
-def stack_stages(layer_params_stacked, n_stages: int):
-    """(L, ...) stacked layer params → (n_stages, L/n_stages, ...)."""
-
-    def reshape(x):
-        L = x.shape[0]
-        if L % n_stages:
-            raise ValueError(f"{L} layers do not divide {n_stages} stages")
-        return x.reshape(n_stages, L // n_stages, *x.shape[1:])
-
-    return jax.tree.map(reshape, layer_params_stacked)
-
-
-def make_stage_fn(block_apply):
-    """Stage = scan over the layers owned by this stage.
-
-    block_apply(one_layer_params, x) -> y
-    """
-
-    def stage_fn(stage_params, x):
-        def body(h, lp):
-            return block_apply(lp, h), None
-
-        y, _ = jax.lax.scan(body, x, stage_params)
-        return y
-
-    return stage_fn
-
-
-# ---------------------------------------------------------------------------
-# Non-uniform stages (DP partitioner cuts) + the deployable train step
-# ---------------------------------------------------------------------------
-
-def stack_stage_bounds(layer_params_stacked, bounds):
-    """(L, ...) stacked layer params + partition bounds → the SPMD stage
-    layout: ((n_stages, m, ...) padded stacks, (n_stages, m) validity mask),
-    m = max stage length.
-
-    Stages may own unequal layer counts (core/partition.py DP cuts); padded
-    slots repeat the stage's last layer so every rank scans identical shapes,
-    and the mask turns padded slots into identity in the stage scan (their
-    parameters receive exactly-zero gradients through the ``where``).
-    """
-    bounds = tuple(int(b) for b in bounds)
-    k = len(bounds) - 1
-    counts = [bounds[i + 1] - bounds[i] for i in range(k)]
-    if min(counts) < 1:
-        raise ValueError(f"empty stage in bounds {bounds}")
-    m = max(counts)
-    # one gather per leaf, NOT concat-of-slices: under jit, XLA's SPMD
-    # partitioner miscompiles a concat/stack of slices feeding a shard_map
-    # with P(stage) in_specs (jax 0.4.37 — values silently wrong); a single
-    # take lowers to a clean gather that reshards correctly. Padded slots
-    # clamp to the stage's last layer; the mask keeps their cotangents at
-    # exactly zero, so the duplicated layer sees no spurious gradient.
-    idx = jnp.asarray([min(bounds[i] + j, bounds[i + 1] - 1)
-                       for i in range(k) for j in range(m)])
-    mask = jnp.array([[j < c for j in range(m)] for c in counts])
-    restack = lambda x: jnp.take(x, idx, axis=0).reshape(k, m, *x.shape[1:])
-    return jax.tree.map(restack, layer_params_stacked), mask
-
-
-def make_masked_stage_fn(block_apply):
-    """Stage = masked scan over the (padded) layer slots this stage owns;
-    stage params are the ``stack_stage_bounds`` layout:
-    {"layers": (m, ...) pytree, "mask": (m,) bool}."""
-
-    def stage_fn(stage_params, x):
-        def body(h, slot):
-            lp, valid = slot
-            return jnp.where(valid, block_apply(lp, h), h), None
-
-        y, _ = jax.lax.scan(body, x,
-                            (stage_params["layers"], stage_params["mask"]))
-        return y
-
-    return stage_fn
-
-
-def pipeline_supported(model_or_cfg) -> str | None:
-    """None when the GPipe executor can deploy this model, else the reason.
-
-    The schedule needs a uniform stack of identically-shaped blocks to shard
-    over the stage axis: a single-kind TransformerLM pattern qualifies;
-    heterogeneous CNN trunks and models whose blocks emit side outputs
-    (MoE aux losses) do not — those stay analytics-only (DESIGN.md §4).
-    """
-    from ..models.transformer import LMConfig, TransformerLM
-    cfg = model_or_cfg.cfg if isinstance(model_or_cfg, TransformerLM) \
-        else model_or_cfg
-    if not isinstance(cfg, LMConfig):
-        return (f"{type(cfg).__name__}: only uniform stacked-block models "
-                f"(TransformerLM) can shard stages over a mesh axis")
-    if len(cfg.pattern) != 1:
-        return f"pattern {cfg.pattern} is not a uniform stack"
-    if cfg.pattern[0] == "moe":
-        return "MoE aux losses do not flow through the stage schedule"
-    if cfg.first_k_dense or cfg.mtp_heads:
-        return "leading dense layers / MTP heads break the uniform stack"
-    return None
-
-
-def clip_segments(batch: int, segments: int) -> int:
-    """Largest microbatch-segment count ≤ ``segments`` dividing ``batch``."""
-    s = max(min(int(segments), int(batch)), 1)
-    while batch % s:
-        s -= 1
-    return s
-
-
-def block_costs_from_stats(stats, n_layers: int):
-    """Per-BLOCK fw+bw FLOP cost vector from oracle layer stats.
-
-    ``lm_stats`` names per-layer entries ``L{i}.<part>`` (attn/ffn/...);
-    each block's cost is the sum over its parts (fw + 2×fw for bw). Embed
-    and head entries carry no ``L{i}.`` prefix and are excluded — they run
-    replicated outside the stage schedule. Falls back to uniform costs if
-    the stats carry no per-block entries.
-    """
-    import re
-    import numpy as np
-    costs = np.zeros(n_layers)
-    for st in stats:
-        m = re.match(r"L(\d+)\.", st.name)
-        if m and int(m.group(1)) < n_layers:
-            costs[int(m.group(1))] += 3.0 * st.flops_fwd
-    return costs if costs.any() else np.ones(n_layers)
-
-
-def make_pipeline_train_step(model, opt, ctx, segments: int = 8,
-                             block_costs=None, axis: str = "model",
-                             **fwd_kw):
-    """GPipe train step: (state, batch) → (state, metrics), matching the
-    ``make_train_step`` contract so every launch entry point can deploy it.
-
-    Stages = the mesh's ``axis`` extent; cuts come from the DP min-max
-    partition (core/partition.py) of ``block_costs`` — per-block fw+bw
-    costs, e.g. ``block_costs_from_stats`` over the oracle's layer table —
-    defaulting to uniform costs (equivalent for the uniform stacks the
-    executor supports today). The embed and head run replicated on every
-    rank (they are the oracle's first/last stat layers but carry no
-    stage-boundary traffic worth a dedicated stage); the block stack runs
-    the fill/drain schedule with ``segments`` microbatches. Extra kwargs
-    are filtered to the attention kwargs of ``Block.apply``
-    (attn_impl / q_chunk / kv_chunk) — callers may pass their full
-    forward-kwarg dict.
-    """
-    import numpy as np
-    from ..core.partition import min_max_partition
-    from ..models.transformer import Block, _xent
-    from ..nn.module import NULL_CTX
-    from ..optim.optimizers import apply_update
-
-    reason = pipeline_supported(model)
-    if reason is not None:
-        raise NotImplementedError(f"pipeline cannot deploy: {reason}")
-    mesh = ctx.mesh
-    if mesh is None or axis not in mesh.shape:
-        raise ValueError(f"pipeline needs a mesh with a {axis!r} axis")
-    n_stages = int(mesh.shape[axis])
-    c = model.cfg
-    L = c.n_layers
-    if n_stages > L:
-        raise ValueError(f"{n_stages} stages exceed {L} layers")
-    if block_costs is None:
-        block_costs = np.ones(L)
-    if len(block_costs) != L:
-        raise ValueError(f"{len(block_costs)} block costs for {L} layers")
-    bounds = min_max_partition(block_costs, n_stages).bounds
-    blk = Block(c, c.pattern[0])
-    kw = {k: v for k, v in fwd_kw.items()
-          if k in ("attn_impl", "q_chunk", "kv_chunk")}
-
-    def block_apply(bp, h):
-        # NULL_CTX: no sharding constraints inside the shard_map body
-        y, _aux = blk.apply(bp, h, NULL_CTX, **kw)
-        return y
-
-    stage_fn = make_masked_stage_fn(block_apply)
-
-    def train_step(state, batch):
-        tokens = batch["tokens"]
-        B = tokens.shape[0]
-        S = clip_segments(B, segments)
-
-        def loss_of(params):
-            h = model._embed(params, tokens, ctx)
-            stages, mask = stack_stage_bounds(params["stacks"][0], bounds)
-            mb = h.reshape(S, B // S, *h.shape[1:])
-            out = gpipe(stage_fn, {"layers": stages, "mask": mask}, mb,
-                        mesh, axis)
-            h2 = out.reshape(B, *out.shape[2:]).astype(h.dtype)
-            logits = model._logits(params, h2, ctx)
-            targets = batch.get("targets")
-            if targets is None:
-                targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
-            mask_t = batch.get("mask", jnp.ones(tokens.shape, jnp.float32))
-            ce = jnp.sum(_xent(logits, targets) * mask_t) / \
-                jnp.maximum(jnp.sum(mask_t), 1.0)
-            return ce, {"ce": ce}
-
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_of, has_aux=True)(state["params"])
-        new_params, new_opt, om = apply_update(opt, state["params"], grads,
-                                               state["opt"], state["step"])
-        metrics = dict(metrics, loss=loss, **om)
-        return {"params": new_params, "opt": new_opt,
-                "step": state["step"] + 1}, metrics
-
-    return train_step
+from .schedules import (  # noqa: F401
+    SCHEDULES,
+    SCHEDULE_NAMES,
+    block_costs_from_stats,
+    clip_segments,
+    gpipe,
+    interleaved,
+    make_masked_stage_fn,
+    make_pipeline_train_step,
+    make_stage_fn,
+    make_virtual_stage_fn,
+    model_pipe_blocks,
+    one_f_one_b,
+    pipeline_block_costs,
+    pipeline_block_count,
+    pipeline_supported,
+    resolve_segments,
+    stack_stage_bounds,
+    stack_stages,
+    stack_virtual_stage_bounds,
+)

@@ -1,0 +1,50 @@
+"""Pipeline parallelism, schedule-diverse — paper §3.4 "Layer" strategy.
+
+The package splits the old ``parallel/pipeline.py`` into the three layers a
+schedule engine actually has:
+
+  * ``runtime``  — the executors (``gpipe`` / ``one_f_one_b`` /
+    ``interleaved``): pure shard_map+ppermute clockings over an opaque
+    stage function;
+  * ``stages``   — stacked parameter layouts for uniform TransformerLM
+    trunks (equal, DP-cut, and interleaved-virtual chunkings);
+  * ``hetero``   — per-stage program specialization for CNN trunks and
+    mixed LM patterns (PipeBlock decomposition + lax.switch stage
+    programs over a flat activation buffer);
+  * ``train_step`` — the deployable step that routes a model onto the
+    right layout and executor.
+
+``repro.parallel.pipeline`` remains importable as a compatibility shim.
+"""
+from .hetero import (PipeBlock, model_pipe_blocks, pipeline_block_costs,
+                     pipeline_block_count)
+from .runtime import (SCHEDULE_NAMES, SCHEDULES, gpipe, interleaved,
+                      one_f_one_b)
+from .stages import (block_costs_from_stats, make_masked_stage_fn,
+                     make_stage_fn, make_virtual_stage_fn, stack_stage_bounds,
+                     stack_stages, stack_virtual_stage_bounds)
+from .train_step import (clip_segments, make_pipeline_train_step,
+                         pipeline_supported, resolve_segments)
+
+__all__ = [
+    "PipeBlock",
+    "SCHEDULES",
+    "SCHEDULE_NAMES",
+    "block_costs_from_stats",
+    "clip_segments",
+    "gpipe",
+    "interleaved",
+    "make_masked_stage_fn",
+    "make_pipeline_train_step",
+    "make_stage_fn",
+    "make_virtual_stage_fn",
+    "model_pipe_blocks",
+    "one_f_one_b",
+    "pipeline_block_costs",
+    "pipeline_block_count",
+    "pipeline_supported",
+    "resolve_segments",
+    "stack_stage_bounds",
+    "stack_stages",
+    "stack_virtual_stage_bounds",
+]

@@ -1,0 +1,219 @@
+"""Pipeline schedule executors — paper §3.4 "Layer" parallelism, three ways.
+
+Every executor runs a stage function over the mesh's stage axis under
+``shard_map``; microbatch activations hop stages via ``collective_permute``
+(the paper's P2P transfers). All three are plain differentiable JAX (scan +
+permute), so one schedule serves forward and backward, and all three are
+gradient-exact against the serial step — they differ in *clocking*:
+
+``gpipe``
+    The classic fill/drain: T = S + p − 1 ticks, every microbatch's forward
+    completes before any backward starts — S microbatches of activations in
+    flight, bubble (p−1)/S.
+
+``one_f_one_b``
+    Same forward clock as GPipe (the forward pipeline of 1F1B is identical —
+    stage r starts microbatch m at tick m + r), but the microbatch stream is
+    scanned in windows of ≤ p with the window body ``jax.checkpoint``-ed:
+    the backward recomputes one window at a time, so at most p microbatches
+    of saved activations are live (vs S under GPipe's scan residuals). This
+    is the schedule's steady-state ≤p in-flight property, realized through
+    windowed rematerialization — on a real cluster 1F1B schedules each
+    microbatch's backward eagerly instead of recomputing; the memory
+    signature is the same.
+
+``interleaved``
+    Megatron-style virtual stages: the stack is cut into v·p chunks assigned
+    round-robin (chunk j → rank j mod p); microbatches advance in groups of
+    p and activations ring-permute around the mesh (rank p−1 wraps to rank 0
+    for the next virtual round). T = v·S + p − 1 chunk-ticks at ~1/v the
+    per-tick cost, so the fill/drain bubble shrinks to (p−1)/(v·S) — paid
+    for with v× the stage-boundary traffic. Requires S % p == 0 (microbatch
+    groups of p, as in Megatron).
+
+The oracle prices each clocking in `core/oracle.py` (`OracleConfig.schedule`);
+`core/validation.py` measures the real bubble per schedule (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ...launch.compat import shard_map
+
+SCHEDULE_NAMES = ("gpipe", "one_f_one_b", "interleaved")
+
+
+def _rank_params(params_local, shard_params: bool):
+    # sharded stacks carry a leading stage dim of extent 1 per rank;
+    # replicated (per-stage-specialized) params pass through whole
+    if shard_params:
+        return jax.tree.map(lambda x: x[0], params_local)
+    return params_local
+
+
+def _run(spmd, stage_params, microbatches, mesh, axis, shard_params):
+    pspec = jax.tree.map(
+        lambda _: P(axis) if shard_params else P(), stage_params)
+    fn = shard_map(spmd, mesh=mesh,
+                   in_specs=(pspec, P()), out_specs=P(),
+                   check_vma=False)
+    return fn(stage_params, microbatches)
+
+
+def gpipe(stage_fn, stage_params, microbatches, mesh: Mesh,
+          axis: str = "model", shard_params: bool = True):
+    """Run a GPipe pipeline.
+
+    stage_fn(params_for_one_stage, x) -> y (same shape as x)
+    stage_params: pytree with leading dim n_stages (sharded over ``axis``),
+        or — with ``shard_params=False`` — a replicated pytree the stage_fn
+        specializes per rank itself (lax.switch on the axis index)
+    microbatches: (S, mb, ...) array (replicated)
+    Returns: (S, mb, ...) outputs of the final stage (replicated).
+    """
+    n_stages = mesh.shape[axis]
+    S = microbatches.shape[0]
+    T = S + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def spmd(params_local, mbs):
+        idx = jax.lax.axis_index(axis)
+        params_one = _rank_params(params_local, shard_params)
+
+        def step(carry, t):
+            state = carry  # activation entering this rank at step t
+            # stage 0 ingests microbatch t (only meaningful while t < S)
+            mb_t = jax.lax.dynamic_index_in_dim(
+                mbs, jnp.clip(t, 0, S - 1), axis=0, keepdims=False)
+            inp = jnp.where(idx == 0, mb_t.astype(state.dtype), state)
+            out = stage_fn(params_one, inp)
+            # ship to the next stage; what the last stage computed is emitted
+            nxt = jax.lax.ppermute(out, axis, perm)
+            return nxt, out
+
+        state0 = jnp.zeros(microbatches.shape[1:], microbatches.dtype)
+        _, outs = jax.lax.scan(step, state0, jnp.arange(T))
+        # rank r computed microbatch (t - r) at step t; final stage results
+        # live at steps n_stages-1 … T-1
+        final = jax.lax.dynamic_slice_in_dim(outs, n_stages - 1, S, axis=0)
+        mine = jnp.where(idx == n_stages - 1, final, jnp.zeros_like(final))
+        return jax.lax.psum(mine, axis)
+
+    return _run(spmd, stage_params, microbatches, mesh, axis, shard_params)
+
+
+def one_f_one_b(stage_fn, stage_params, microbatches, mesh: Mesh,
+                axis: str = "model", shard_params: bool = True):
+    """Run a 1F1B pipeline (same contract as ``gpipe``).
+
+    The forward clock is GPipe's (1F1B's forward schedule is identical —
+    T = S + p − 1 ticks, padded to a multiple of the window); the tick
+    stream is scanned in checkpointed windows of w = min(p, S) ticks whose
+    pipeline state carries across windows, so the backward holds at most
+    one window of interior activations plus the window-boundary states:
+    the schedule's ≤ p in-flight memory property, realized as windowed
+    rematerialization. Structurally this is GPipe's single scan with
+    remat windows folded in — the fill/drain clock (and hence the
+    measured bubble intercept) is GPipe's; the recompute cost rides the
+    per-microbatch slope.
+    """
+    n_stages = int(mesh.shape[axis])
+    S = microbatches.shape[0]
+    w = min(n_stages, S)
+    T = S + n_stages - 1
+    n_win = -(-T // w)          # ceil: pad the tick stream, not the batch
+    Tp = n_win * w
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def spmd(params_local, mbs):
+        idx = jax.lax.axis_index(axis)
+        params_one = _rank_params(params_local, shard_params)
+
+        def tick(state, t):
+            # identical to gpipe's tick: stage 0 ingests microbatch t
+            # (clipped past S — padded ticks recompute garbage harmlessly)
+            mb_t = jax.lax.dynamic_index_in_dim(
+                mbs, jnp.clip(t, 0, S - 1), axis=0, keepdims=False)
+            inp = jnp.where(idx == 0, mb_t.astype(state.dtype), state)
+            out = stage_fn(params_one, inp)
+            return jax.lax.ppermute(out, axis, perm), out
+
+        def window(state, ts):
+            return jax.lax.scan(tick, state, ts)
+
+        ticks = jnp.arange(Tp).reshape(n_win, w)
+        state0 = jnp.zeros(mbs.shape[1:], mbs.dtype)
+        _, wouts = jax.lax.scan(jax.checkpoint(window), state0, ticks)
+        outs = wouts.reshape(Tp, *wouts.shape[2:])
+        final = jax.lax.dynamic_slice_in_dim(outs, n_stages - 1, S, axis=0)
+        mine = jnp.where(idx == n_stages - 1, final, jnp.zeros_like(final))
+        return jax.lax.psum(mine, axis)
+
+    return _run(spmd, stage_params, microbatches, mesh, axis, shard_params)
+
+
+def interleaved(stage_fn, stage_params, microbatches, mesh: Mesh,
+                axis: str = "model", virtual_stages: int = 2,
+                shard_params: bool = True):
+    """Run an interleaved-virtual-stage pipeline.
+
+    stage_fn(rank_params, x, q) -> y — q is the (traced) virtual-stage index
+    this rank applies at the current tick; the rank's params carry all v of
+    its chunks (leading dim v after the sharded stage dim, or replicated
+    with ``shard_params=False``).
+
+    Clocking: microbatches advance in groups of p; rank r at tick t works
+    schedule position u = t − r, decomposed u = i + p·(q + v·g) → microbatch
+    m = g·p + i at virtual stage q. Activations ring-permute (rank p−1 wraps
+    to rank 0, carrying the activation into its next virtual round); rank 0
+    ingests a fresh microbatch exactly when its q == 0, which also discards
+    the (already emitted) final outputs the wrap carries.
+    """
+    p = int(mesh.shape[axis])
+    S = microbatches.shape[0]
+    v = int(virtual_stages)
+    if v < 1:
+        raise ValueError(f"virtual_stages must be >= 1, got {v}")
+    if S % p:
+        raise ValueError(
+            f"interleaved schedule needs S % p == 0 (microbatch groups of "
+            f"p, as in Megatron); got S={S}, p={p}")
+    T = v * S + p - 1
+    ring = [(i, (i + 1) % p) for i in range(p)]
+
+    def spmd(params_local, mbs):
+        idx = jax.lax.axis_index(axis)
+        rank_params = _rank_params(params_local, shard_params)
+
+        def tick(state, t):
+            u = jnp.clip(t - idx, 0, v * S - 1)   # fill/drain ranks idle-spin
+            i = u % p
+            qg = u // p
+            q = qg % v
+            g = qg // v
+            mb_t = jax.lax.dynamic_index_in_dim(
+                mbs, jnp.clip(g * p + i, 0, S - 1), axis=0, keepdims=False)
+            fresh = (idx == 0) & (q == 0)
+            inp = jnp.where(fresh, mb_t.astype(state.dtype), state)
+            out = stage_fn(rank_params, inp, q)
+            nxt = jax.lax.ppermute(out, axis, ring)
+            return nxt, out
+
+        state0 = jnp.zeros(mbs.shape[1:], mbs.dtype)
+        _, outs = jax.lax.scan(tick, state0, jnp.arange(T))
+        # microbatch m completes on rank p−1 (final chunk v·p−1) at tick
+        # (p−1) + (m mod p) + p·((v−1) + v·(m div p)) — non-contiguous
+        # across groups, so gather with a static index vector
+        t_idx = jnp.asarray([(p - 1) + (m % p) + p * ((v - 1) + v * (m // p))
+                             for m in range(S)])
+        final = jnp.take(outs, t_idx, axis=0)
+        mine = jnp.where(idx == p - 1, final, jnp.zeros_like(final))
+        return jax.lax.psum(mine, axis)
+
+    return _run(spmd, stage_params, microbatches, mesh, axis, shard_params)
+
+
+SCHEDULES = {"gpipe": gpipe, "one_f_one_b": one_f_one_b,
+             "interleaved": interleaved}

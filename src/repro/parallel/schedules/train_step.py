@@ -1,0 +1,271 @@
+"""The deployable pipeline train step, schedule- and model-polymorphic.
+
+``make_pipeline_train_step`` matches the ``make_train_step`` contract
+((state, batch) → (state, metrics)) so every launch entry point can deploy
+it, and routes between two realizations:
+
+  * **stacked fast path** — uniform-pattern TransformerLM: the (L, ...)
+    stacked block params shard over the stage axis (stages.py layouts), the
+    embed and head run replicated outside the pipe;
+  * **hetero path** — CNN trunks (ResNet/VGG/CosmoFlow, stem through head
+    inside the pipe) and mixed LM patterns: per-stage program
+    specialization over replicated params with a flat activation buffer
+    (hetero.py).
+
+Either path runs any of the three schedule executors (runtime.py):
+``gpipe``, ``one_f_one_b``, ``interleaved``. Gradient-exactness vs the
+serial step holds for every schedule and both paths, with one caveat:
+ResNet/VGG BatchNorm computes batch statistics per *microbatch* under the
+pipe (paper §4.5.2 local-BN semantics), so their gradients match a serial
+step at the microbatch size, not the full batch — CosmoFlow (no BN) and
+all LMs match the full-batch serial step bit-for-bit at matched precision.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from .runtime import SCHEDULE_NAMES, gpipe, interleaved, one_f_one_b
+from .stages import (make_masked_stage_fn, make_virtual_stage_fn,
+                     stack_stage_bounds, stack_virtual_stage_bounds)
+from .hetero import (boundary_shapes, from_buffer, make_switch_stage_fns,
+                     model_pipe_blocks)
+
+
+def pipeline_supported(model_or_cfg) -> str | None:
+    """None when a pipeline schedule can deploy this model, else the reason.
+
+    The stacked executors cover uniform TransformerLM patterns; per-stage
+    program specialization (hetero.py) extends deployment to mixed LM
+    patterns (incl. ``first_k_dense`` leads) and the CNN trunks. Still out:
+    MoE (aux losses do not flow through the stage schedule), MTP heads
+    (branch off mid-trunk hidden), and model families with no block
+    decomposition.
+    """
+    from ...models.cnn import CosmoFlowConfig, ResNetConfig, VGGConfig
+    from ...models.transformer import LMConfig
+    cfg = getattr(model_or_cfg, "cfg", model_or_cfg)
+    if isinstance(cfg, (ResNetConfig, VGGConfig, CosmoFlowConfig)):
+        return None
+    if not isinstance(cfg, LMConfig):
+        return (f"{type(cfg).__name__}: no pipeline block decomposition "
+                f"(TransformerLM trunks and the paper's CNNs pipeline)")
+    if "moe" in cfg.block_kinds():
+        return "MoE aux losses do not flow through the stage schedule"
+    if cfg.mtp_heads:
+        return "MTP heads branch off the mid-trunk hidden state"
+    return None
+
+
+def clip_segments(batch: int, segments: int) -> int:
+    """Largest microbatch-segment count ≤ ``segments`` dividing ``batch``."""
+    s = max(min(int(segments), int(batch)), 1)
+    while batch % s:
+        s -= 1
+    return s
+
+
+def resolve_segments(batch: int, segments: int,
+                     multiple_of: int = 1) -> int:
+    """``clip_segments`` that surfaces silent degradation.
+
+    Returns the largest S ≤ ``segments`` that divides ``batch`` (and is a
+    multiple of ``multiple_of`` — the interleaved schedule's S % p == 0
+    constraint), warning when the pipe runs with fewer microbatches than
+    requested: a prime batch clips all the way to S=1, which serializes the
+    pipeline (bubble (p−1)/S = p−1 stages idle per stage-tick).
+    """
+    batch, m = int(batch), max(int(multiple_of), 1)
+    s = max(min(int(segments), batch), 1)
+    while s > 0 and (batch % s or s % m):
+        s -= 1
+    if s < 1:
+        raise ValueError(
+            f"no segment count ≤ {segments} divides batch {batch} and is a "
+            f"multiple of {m} (the interleaved schedule needs S % p == 0)")
+    if s < int(segments):
+        warnings.warn(
+            f"pipeline segments clipped: requested {segments}, running "
+            f"S={s} (batch {batch}"
+            + (f", S must be a multiple of p={m}" if m > 1 else "")
+            + (") — the pipe is fully serialized" if s == 1 else ")"),
+            stacklevel=2)
+    return s
+
+
+def _run_schedule(schedule, stage_fn, stage_params, mbs, mesh, axis,
+                  virtual_stages, shard_params):
+    if schedule == "gpipe":
+        return gpipe(stage_fn, stage_params, mbs, mesh, axis,
+                     shard_params=shard_params)
+    if schedule == "one_f_one_b":
+        return one_f_one_b(stage_fn, stage_params, mbs, mesh, axis,
+                           shard_params=shard_params)
+    return interleaved(stage_fn, stage_params, mbs, mesh, axis,
+                       virtual_stages=virtual_stages,
+                       shard_params=shard_params)
+
+
+def make_pipeline_train_step(model, opt, ctx, segments: int = 8,
+                             block_costs=None, axis: str = "model",
+                             schedule: str = "gpipe",
+                             virtual_stages: int = 2, **fwd_kw):
+    """Pipeline train step: (state, batch) → (state, metrics).
+
+    Stages = the mesh's ``axis`` extent; cuts come from the DP min-max
+    partition (core/partition.py) of ``block_costs`` — per-block fw+bw
+    costs, e.g. ``pipeline_block_costs`` over the oracle's layer table —
+    defaulting to the decomposition's own weights (uniform when no stats
+    were attached). ``segments`` is the *requested* microbatch count; the
+    step clips it to the batch (and, for ``interleaved``, to a multiple of
+    the stage count), warns on degradation, and reports the running value
+    as ``metrics["pipeline_segments"]``. ``schedule`` picks the executor
+    (``gpipe`` / ``one_f_one_b`` / ``interleaved``, DESIGN.md §4);
+    ``virtual_stages`` is the interleaved v. Extra kwargs are filtered to
+    the attention kwargs of ``Block.apply`` (attn_impl / q_chunk /
+    kv_chunk) — callers may pass their full forward-kwarg dict.
+    """
+    import numpy as np
+    from ...core.partition import min_max_partition
+    from ...models.cnn import CosmoFlow, ResNet, VGG, _softmax_xent
+    from ...models.transformer import TransformerLM
+    from ...optim.optimizers import apply_update
+
+    if schedule not in SCHEDULE_NAMES:
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"pick one of {SCHEDULE_NAMES}")
+    reason = pipeline_supported(model)
+    if reason is not None:
+        raise NotImplementedError(f"pipeline cannot deploy: {reason}")
+    mesh = ctx.mesh
+    if mesh is None or axis not in mesh.shape:
+        raise ValueError(f"pipeline needs a mesh with a {axis!r} axis")
+    n_stages = int(mesh.shape[axis])
+    v = int(virtual_stages) if schedule == "interleaved" else 1
+    if v < 1:
+        raise ValueError(f"virtual_stages must be >= 1, got {v}")
+    n_chunks = n_stages * v
+    seg_multiple = n_stages if schedule == "interleaved" else 1
+
+    c = model.cfg
+    uniform_lm = (isinstance(model, TransformerLM)
+                  and len(c.pattern) == 1 and not c.first_k_dense)
+
+    if uniform_lm:
+        L = c.n_layers
+    else:
+        blocks = model_pipe_blocks(model, None, **fwd_kw)
+        L = len(blocks)
+    if n_chunks > L:
+        raise ValueError(
+            f"{n_stages} stages × {v} virtual exceed {L} blocks")
+    if block_costs is None:
+        block_costs = (np.ones(L) if uniform_lm
+                       else np.asarray([b.cost for b in blocks]))
+    if len(block_costs) != L:
+        raise ValueError(f"{len(block_costs)} block costs for {L} blocks")
+    bounds = min_max_partition(block_costs, n_chunks).bounds
+
+    def xent_of(params, logits, tokens, batch):
+        from ...models.transformer import _xent
+        targets = batch.get("targets")
+        if targets is None:
+            targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        mask_t = batch.get("mask", jnp.ones(tokens.shape, jnp.float32))
+        ce = jnp.sum(_xent(logits, targets) * mask_t) / \
+            jnp.maximum(jnp.sum(mask_t), 1.0)
+        return ce, {"ce": ce}
+
+    if uniform_lm:
+        from ...models.transformer import Block
+        from ...nn.module import NULL_CTX
+        blk = Block(c, c.pattern[0])
+        kw = {k: vv for k, vv in fwd_kw.items()
+              if k in ("attn_impl", "q_chunk", "kv_chunk")}
+
+        def block_apply(bp, h):
+            # NULL_CTX: no sharding constraints inside the shard_map body
+            y, _aux = blk.apply(bp, h, NULL_CTX, **kw)
+            return y
+
+        stage_fn = make_masked_stage_fn(block_apply)
+        vstage_fn = make_virtual_stage_fn(block_apply)
+
+        def pipe(params, x, S):
+            B = x.shape[0]
+            mb = x.reshape(S, B // S, *x.shape[1:])
+            if schedule == "interleaved":
+                stages, mask = stack_virtual_stage_bounds(
+                    params["stacks"][0], bounds, n_stages, v)
+                out = _run_schedule(schedule, vstage_fn,
+                                    {"layers": stages, "mask": mask},
+                                    mb, mesh, axis, v, True)
+            else:
+                stages, mask = stack_stage_bounds(params["stacks"][0],
+                                                  bounds)
+                out = _run_schedule(schedule, stage_fn,
+                                    {"layers": stages, "mask": mask},
+                                    mb, mesh, axis, v, True)
+            return out.reshape(B, *out.shape[2:]).astype(x.dtype)
+
+        def loss_of(params, batch, S):
+            tokens = batch["tokens"]
+            h = model._embed(params, tokens, ctx)
+            h2 = pipe(params, h, S)
+            logits = model._logits(params, h2, ctx)
+            return xent_of(params, logits, tokens, batch)
+
+        batch_of = lambda batch: batch["tokens"].shape[0]  # noqa: E731
+    else:
+        is_cnn = isinstance(model, (ResNet, VGG, CosmoFlow))
+
+        def pipe(params, x, S):
+            B = x.shape[0]
+            shapes = boundary_shapes(blocks, params, x)
+            stage_fn, vstage_fn, K = make_switch_stage_fns(
+                blocks, bounds, shapes, axis, n_stages)
+            flat = x.reshape(S, B // S, -1)
+            if flat.shape[-1] < K:
+                flat = jnp.pad(
+                    flat, ((0, 0), (0, 0), (0, K - flat.shape[-1])))
+            fn = vstage_fn if schedule == "interleaved" else stage_fn
+            out = _run_schedule(schedule, fn, params, flat, mesh, axis,
+                                v, False)
+            return from_buffer(out.reshape(B, K), shapes[-1], x.dtype)
+
+        if is_cnn:
+            def loss_of(params, batch, S):
+                out = pipe(params, batch["images"], S)
+                if isinstance(model, CosmoFlow):
+                    mse = jnp.mean((out - batch["targets"]) ** 2)
+                    return mse, {"mse": mse}
+                ce = _softmax_xent(out, batch["labels"])
+                return ce, {"ce": ce}
+
+            batch_of = lambda batch: batch["images"].shape[0]  # noqa: E731
+        else:
+            def loss_of(params, batch, S):
+                tokens = batch["tokens"]
+                h = model._embed(params, tokens, ctx)
+                h2 = pipe(params, h, S)
+                logits = model._logits(params, h2, ctx)
+                return xent_of(params, logits, tokens, batch)
+
+            batch_of = lambda batch: batch["tokens"].shape[0]  # noqa: E731
+
+    def train_step(state, batch):
+        B = batch_of(batch)
+        S = resolve_segments(B, segments, seg_multiple)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(state["params"], batch, S)
+        new_params, new_opt, om = apply_update(opt, state["params"], grads,
+                                               state["opt"], state["step"])
+        metrics = dict(metrics, loss=loss,
+                       pipeline_segments=jnp.asarray(S), **om)
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step

@@ -103,6 +103,62 @@ def check_pipeline_step_parity():
         rtol=2e-4, atol=2e-4), want5["params"], got5["params"])
 
 
+def check_schedule_parity(schedule: str):
+    """Each pipeline schedule's train step == the serial jit step — same
+    loss and updated params — on (a) a uniform LM stack, (b) a non-uniform
+    cut (more layers than divide evenly into stages/chunks), and (c) a
+    heterogeneous CNN trunk (CosmoFlow stem/conv/head blocks via per-stage
+    program specialization). CosmoFlow has no batch-norm, so CNN parity is
+    exact; see make_pipeline_train_step's docstring for the ResNet/VGG
+    per-microbatch BN caveat."""
+    from repro.models.cnn import CosmoFlow, CosmoFlowConfig
+    from repro.nn.module import NULL_CTX, ShardingCtx, tree_init
+    from repro.optim.optimizers import OptimizerConfig
+    from repro.parallel import make_pipeline_train_step, make_rules
+    from repro.training.steps import make_train_step, train_state_spec
+    opt = OptimizerConfig(name="sgd", zero1=False, grad_clip=1e9)
+    mesh = mesh24()
+    key = jax.random.PRNGKey(0)
+    ctx = ShardingCtx(mesh, make_rules("pipeline"))
+    v = 2 if schedule == "interleaved" else 1
+
+    def assert_match(model, batch, pipe_kw, ref_kw):
+        state = tree_init(train_state_spec(model, opt), key)
+        pipe = jax.jit(make_pipeline_train_step(
+            model, opt, ctx, schedule=schedule, **pipe_kw))
+        ref = jax.jit(make_train_step(model, opt, NULL_CTX, **ref_kw))
+        got, gm = pipe(state, batch)
+        want, wm = ref(state, batch)
+        np.testing.assert_allclose(float(gm["loss"]), float(wm["loss"]),
+                                   rtol=1e-5)
+        assert int(gm["pipeline_segments"]) >= 1   # resolved S surfaced
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-4, atol=2e-4), want["params"], got["params"])
+
+    lm_ref = dict(attn_impl="plain", scan_layers=False, remat=False)
+    # (a) uniform stack: 8 layers on 4 stages (v·4 chunks for interleaved)
+    model, cfg = _uniform_lm(n_layers=8)
+    toks = jax.random.randint(key, (8, 32), 0, cfg.vocab)
+    assert_match(model, {"tokens": toks},
+                 dict(segments=8, virtual_stages=v, attn_impl="plain"),
+                 lm_ref)
+    # (b) non-uniform cut: layer count that does not divide the chunk count
+    n_odd = 10 if schedule == "interleaved" else 5   # 10 on 8 / 5 on 4
+    model_o, cfg_o = _uniform_lm(n_layers=n_odd)
+    assert_match(model_o, {"tokens": toks},
+                 dict(segments=8, virtual_stages=v, attn_impl="plain"),
+                 lm_ref)
+    # (c) heterogeneous CNN trunk: 4 blocks (stem-less conv×3 + head) on 4
+    # stages; interleaved runs v=1 here (v·p chunks must fit 4 blocks)
+    ccfg = CosmoFlowConfig(img=16, n_conv=3, width=8)
+    cmodel = CosmoFlow(ccfg)
+    cbatch = {"images": jax.random.normal(key, (8, 16, 16, 16, 4)),
+              "targets": jax.random.normal(jax.random.fold_in(key, 1),
+                                           (8, 4))}
+    assert_match(cmodel, cbatch, dict(segments=4, virtual_stages=1), {})
+
+
 def check_pipeline_deploy():
     """ISSUE-3 acceptance: the tuner emits a strategy='pipeline' plan that
     build_cell(strategy='auto') deploys and trains for one step."""
@@ -464,6 +520,83 @@ def check_spatial_overlap_validation(write_path=None):
         print(f"wrote {write_path}")
 
 
+def check_schedule_validation(write_path=None):
+    """ISSUE-7 acceptance: the measured bubble fraction at p=8 shrinks
+    under 1F1B and interleaved vs GPipe at equal S, and the oracle's
+    schedule axis picks the measured per-(model, p) winner.
+
+    Methodology (core/validation.measure_schedule_bubble): run each
+    schedule at two microbatch counts with a fixed per-microbatch size,
+    fit t(S) = a·S + b, and read the bubble off the intercept. On
+    timeshared virtual devices idle ranks burn real wall-time, so the
+    fill/drain bubble is visible even on one CPU core. A retry repeats the
+    FULL procedure (fresh calibration + measurements); assertions are
+    never relaxed."""
+    import dataclasses
+    from repro.core import OracleConfig, TimeModel
+    from repro.core.calibration import calibrate_host_system
+    from repro.core.layer_stats import stats_for
+    from repro.core.validation import measure_schedule_bubble, schedule_winner
+    from repro.nn.module import tree_init
+    from repro.parallel.schedules import SCHEDULE_NAMES
+    model, cfg = _uniform_lm(n_layers=16)
+    p = 8
+    from repro.launch.compat import make_mesh
+    mesh = make_mesh((1, p), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    S_small, S_large = 8, 16     # interleaved needs S % p == 0
+
+    def make_batch(B):
+        return {"tokens": jax.random.randint(key, (B, 32), 0, cfg.vocab)}
+
+    stats = stats_for(cfg, 32)
+    flops_step = sum(s.flops_fwd for s in stats) * S_large
+    ok = False
+    for attempt in range(3):
+        sysm = calibrate_host_system(
+            lambda prm, b: model.loss_fn(prm, b),
+            tree_init(model.params_spec(), key), make_batch(S_large),
+            flops_step, mesh=mesh)
+        sysm = dataclasses.replace(sysm, peak_flops=sysm.peak_flops / p)
+        ocfg = OracleConfig(B=S_large, D=S_large, segments=S_large)
+        oracle_pick = schedule_winner(stats, TimeModel(sysm), ocfg, p)
+        bubbles = {}
+        for sched in SCHEDULE_NAMES:
+            bubbles[sched] = measure_schedule_bubble(
+                model, cfg, make_batch, mesh, schedule=sched,
+                virtual_stages=2, S_small=S_small, S_large=S_large)
+            b = bubbles[sched]
+            print(f"{sched:12s} t({S_small})={b['t_small_s']*1e3:7.1f}ms "
+                  f"t({S_large})={b['t_large_s']*1e3:7.1f}ms "
+                  f"bubble={b['bubble_fraction']*100:5.1f}%")
+        measured_pick = min(bubbles, key=lambda s: bubbles[s]["t_large_s"])
+        print(f"oracle winner: {oracle_pick}  measured winner: "
+              f"{measured_pick}")
+        ok = (bubbles["one_f_one_b"]["bubble_fraction"]
+              < bubbles["gpipe"]["bubble_fraction"]
+              and bubbles["interleaved"]["bubble_fraction"]
+              < bubbles["gpipe"]["bubble_fraction"]
+              and oracle_pick == measured_pick)
+        if ok:
+            break
+        print(f"attempt {attempt + 1} failed — full redo")
+    assert bubbles["one_f_one_b"]["bubble_fraction"] \
+        < bubbles["gpipe"]["bubble_fraction"], bubbles
+    assert bubbles["interleaved"]["bubble_fraction"] \
+        < bubbles["gpipe"]["bubble_fraction"], bubbles
+    assert oracle_pick == measured_pick, (oracle_pick, measured_pick)
+    if write_path:
+        import json
+        rec = {"p": p, "S_small": S_small, "S_large": S_large,
+               "model": "uniform-lm-16L-d32",
+               "oracle_winner": oracle_pick,
+               "measured_winner": measured_pick,
+               "schedules": bubbles}
+        with open(write_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"wrote {write_path}")
+
+
 def check_dp_numerics():
     """Sharded df train step == unsharded step (same seed/batch)."""
     from repro.models import LMConfig, TransformerLM
@@ -544,6 +677,8 @@ def check_compressed_allreduce():
 CHECKS = {
     "pipeline": check_pipeline,
     "pipeline_step_parity": check_pipeline_step_parity,
+    "schedule_parity": check_schedule_parity,
+    "schedule_validation": check_schedule_validation,
     "pipeline_deploy": check_pipeline_deploy,
     "pipeline_validation": check_pipeline_validation,
     "tuner_loop": check_tuner_loop,

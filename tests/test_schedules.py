@@ -1,0 +1,212 @@
+"""Schedule-diverse pipeline engine: unit tests for the schedules package
+(parallel/schedules) and the oracle's schedule axis (single device; the
+multi-device gradient-parity checks live in test_distributed.py)."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.layer_stats import LayerStat, stats_for
+from repro.core.oracle import (PIPELINE_SCHEDULES, OracleConfig, TimeModel,
+                               project)
+from repro.core.sweep import PAPER_V100_CLUSTER, sweep
+from repro.models.cnn import RESNET50, CosmoFlowConfig, VGGConfig
+from repro.parallel.schedules import (SCHEDULE_NAMES, block_costs_from_stats,
+                                      clip_segments, pipeline_block_count,
+                                      resolve_segments,
+                                      stack_virtual_stage_bounds)
+
+
+# ---------------------------------------------------------------------------
+# resolve_segments (satellite: surface silent S degradation)
+# ---------------------------------------------------------------------------
+
+def test_resolve_segments_exact_fit_is_silent():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_segments(32, 8) == 8
+
+
+def test_resolve_segments_clips_when_segments_exceed_batch():
+    with pytest.warns(UserWarning, match="clipped"):
+        assert resolve_segments(4, 8) == 4
+
+
+def test_resolve_segments_non_dividing_batch_warns():
+    # 12 % 8 != 0 → largest divisor ≤ 8 is 6
+    with pytest.warns(UserWarning, match="requested 8, running S=6"):
+        assert resolve_segments(12, 8) == 6
+
+
+def test_resolve_segments_prime_batch_serializes_with_warning():
+    with pytest.warns(UserWarning, match="fully serialized"):
+        assert resolve_segments(7, 4) == 1
+
+
+def test_resolve_segments_multiple_of_constraint():
+    # interleaved needs S % p == 0: batch 32, p=4 → 8 works silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_segments(32, 8, multiple_of=4) == 8
+    # batch 20, requested 8: the largest divisor ≤ 8 is 5, but 5 % 4 != 0,
+    # so the constraint pushes S down to 4 — with a warning naming it
+    with pytest.warns(UserWarning, match="multiple of p=4"):
+        assert resolve_segments(20, 8, multiple_of=4) == 4
+
+
+def test_resolve_segments_impossible_raises():
+    # no S ≤ 4 is both a divisor of 6 and a multiple of 4
+    with pytest.raises(ValueError, match="multiple of 4"):
+        resolve_segments(6, 4, multiple_of=4)
+
+
+def test_clip_segments_matches_resolve_without_constraint():
+    for batch, seg in [(32, 8), (12, 8), (7, 4), (1, 8), (8, 1)]:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            assert clip_segments(batch, seg) == resolve_segments(batch, seg)
+
+
+# ---------------------------------------------------------------------------
+# block costs (satellite: exact backward FLOPs, not bw = 2×fw)
+# ---------------------------------------------------------------------------
+
+def test_block_costs_use_exact_backward_flops_when_present():
+    stats = [
+        LayerStat("L0.conv", "conv", 10, 10, 5, flops_fwd=100.0,
+                  flops_bwd_exact=350.0),
+        LayerStat("L1.conv", "conv", 10, 10, 5, flops_fwd=100.0),  # no exact
+    ]
+    costs = block_costs_from_stats(stats, 2)
+    assert costs[0] == pytest.approx(100.0 + 350.0)      # fw + exact bwd
+    assert costs[1] == pytest.approx(100.0 + 200.0)      # fw + 2×fw fallback
+
+
+def test_conv_stats_record_exact_backward():
+    stats = stats_for(RESNET50)
+    conv = [s for s in stats if s.kind == "conv"]
+    assert conv and all(s.flops_bwd_exact > 0 for s in conv)
+    # the strided stem undercounts under bw = 2×fw: dL/dx runs over the
+    # (4× larger) input extent, so exact > 2×fw there
+    stem = next(s for s in stats if s.name == "stem")
+    assert stem.flops_bwd_exact > 2.0 * stem.flops_fwd
+    # the pinned oracle property is untouched: flops_bwd stays 2×fw
+    assert stem.flops_bwd == pytest.approx(2.0 * stem.flops_fwd)
+
+
+def test_pipeline_block_count_per_family():
+    assert pipeline_block_count(RESNET50) == 2 + sum(RESNET50.stage_sizes)
+    assert pipeline_block_count(VGGConfig()) == 14       # 13 convs + head
+    assert pipeline_block_count(CosmoFlowConfig(img=16, n_conv=3)) == 4
+    assert pipeline_block_count(object()) is None
+
+
+# ---------------------------------------------------------------------------
+# virtual-stage restacking
+# ---------------------------------------------------------------------------
+
+def test_stack_virtual_stage_bounds_shapes_and_mask():
+    L, p, v = 10, 4, 2
+    w = {"k": jnp.arange(L * 3, dtype=jnp.float32).reshape(L, 3)}
+    bounds = [0, 2, 3, 5, 6, 7, 8, 9, 10]        # 8 chunks, sizes 2..1
+    stacked, mask = stack_virtual_stage_bounds(w, bounds, p, v)
+    m = max(b - a for a, b in zip(bounds, bounds[1:]))
+    assert stacked["k"].shape == (p, v, m, 3)
+    assert mask.shape == (p, v, m)
+    # chunk j lands on rank j % p, virtual slot j // p; mask counts its size
+    sizes = np.array(bounds[1:]) - np.array(bounds[:-1])
+    for j in range(p * v):
+        r, q = j % p, j // p
+        assert int(mask[r, q].sum()) == sizes[j]
+        # real rows are the chunk's own layers, in order
+        rows = np.asarray(stacked["k"][r, q])[np.asarray(mask[r, q],
+                                                         bool)]
+        want = np.asarray(w["k"])[bounds[j]:bounds[j + 1]]
+        np.testing.assert_array_equal(rows, want)
+
+
+# ---------------------------------------------------------------------------
+# oracle schedule axis
+# ---------------------------------------------------------------------------
+
+def test_schedule_name_registries_agree():
+    assert PIPELINE_SCHEDULES == SCHEDULE_NAMES
+
+
+def _proj(schedule, p=8, B=64, S=8, **kw):
+    stats = stats_for(RESNET50)
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    cfg = OracleConfig(B=B, D=B, segments=S, schedule=schedule, **kw)
+    return project("pipeline", stats, tm, cfg, p)
+
+
+def test_gpipe_default_unchanged():
+    # cfg without a schedule field set → identical to explicit gpipe
+    stats = stats_for(RESNET50)
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    a = project("pipeline", stats, tm, OracleConfig(B=64, D=64), 8)
+    b = _proj("gpipe", B=64)
+    assert a.total_s == b.total_s and a.mem_bytes == b.mem_bytes
+
+
+def test_one_f_one_b_same_time_less_activation_memory():
+    g = _proj("gpipe", p=4, S=16)
+    o = _proj("one_f_one_b", p=4, S=16)
+    assert o.total_s == pytest.approx(g.total_s)   # same clock, same comm
+    assert o.mem_bytes < g.mem_bytes               # ≤ p in-flight, not S
+
+
+def test_interleaved_shrinks_bubble_term():
+    # comp carries the bubble: (vS+p−1)/(v·S) per-stage-chunk work beats
+    # (S+p−1)/S whole-stage work for v>1, p>1
+    g = _proj("gpipe")
+    i = _proj("interleaved")
+    assert i.comp_s < g.comp_s
+    # but pays v× the p2p launches
+    assert i.comm_p2p_s > g.comm_p2p_s
+
+
+def test_unknown_schedule_raises():
+    with pytest.raises(ValueError, match="schedule"):
+        _proj("alternating")
+
+
+def test_sweep_schedule_column_threading():
+    stats = stats_for(RESNET50)
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    cfg = OracleConfig(B=64, D=64)
+    # default: pipeline rows carry cfg.schedule, others "-"
+    res = sweep(stats, tm, cfg, [4], strategies=("data", "pipeline"))
+    assert set(res.schedule[res.strategy == "pipeline"]) == {"gpipe"}
+    assert set(res.schedule[res.strategy != "pipeline"]) == {"-"}
+    # schedules="all": one pipeline row block per schedule
+    res = sweep(stats, tm, cfg, [4], strategies=("pipeline",),
+                schedules="all")
+    assert set(res.schedule) == set(PIPELINE_SCHEDULES)
+    with pytest.raises(ValueError, match="unknown schedules"):
+        sweep(stats, tm, cfg, [4], schedules=("nope",))
+
+
+def test_autotune_plan_carries_schedule_and_gates_interleaved():
+    from repro.core.autotune import autotune, deployable_schedule_mask
+    stats = stats_for(RESNET50)
+    tm = TimeModel(PAPER_V100_CLUSTER)
+    cfg = OracleConfig(B=64, D=64)
+    plan = autotune(stats, tm, cfg, 8, strategies=("pipeline",),
+                    max_stages=18)
+    assert plan.strategy == "pipeline"
+    assert plan.schedule in PIPELINE_SCHEDULES
+    assert plan.virtual_stages == cfg.virtual_stages
+    # interleaved rows whose v·p2 overflow the block stack are masked
+    res = sweep(stats, tm, cfg, [16], strategies=("pipeline",),
+                schedules="all")
+    m = deployable_schedule_mask(res, cfg, max_stages=18)
+    il = res.schedule == "interleaved"
+    assert not m[il].any()            # 2·16 = 32 chunks > 18 blocks
+    assert m[~il].all()
+    # without a stage bound, interleaved is still gated on S % p2 == 0
+    # being resolvable: B=64 has no segment count ≤ 8 that is a multiple
+    # of 16... (16 > 8), so the p2=16 interleaved row stays masked
+    m2 = deployable_schedule_mask(res, cfg)
+    assert not m2[il].any()
