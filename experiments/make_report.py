@@ -14,6 +14,10 @@ Four sections are (re)generated in place, each delimited by its own heading:
     the same (strategy, mesh); rows off by more than {TOL}× either way are
     flagged instead of silently diverging.
 
+Later sections (overlap / pipeline / schedule / cluster-fit / kernel-tune)
+render the validation artifacts scripts/check.sh and the CLI entry points
+write under experiments/.
+
 Usage: PYTHONPATH=src python experiments/make_report.py
 """
 import json
@@ -45,6 +49,9 @@ SCHED_HDR = ("| schedule | t(S_small) ms | t(S_large) ms | per-µbatch ms |"
 CLUSTER_HDR = ("| level | α (µs) | β⁻¹ (GB/s) | φ | σ | fit residual |\n"
                "|---|---|---|---|---|---|")
 
+KT_HDR = ("| kernel (bucket) | blocks | predicted µs | measured µs |"
+          " vs default | |\n|---|---|---|---|---|---|")
+
 # oracle-vs-HLO tolerance: both are coarse bounds (no-overlap roofline vs
 # α–β analytical model), so only order-of-magnitude drift is flagged
 TOL = 3.0
@@ -68,6 +75,8 @@ Auto-generated tables — run `PYTHONPATH=src python experiments/make_report.py`
 ### Schedule validation (measured bubble per schedule, oracle-picked winner)
 
 ### Cluster calibration
+
+### Kernel autotune (prune → measure → cache)
 
 ### Per-cell observations
 
@@ -422,6 +431,65 @@ def cluster_section(here: pathlib.Path) -> str:
     return "\n".join(out)
 
 
+def kernel_tune_section(here: pathlib.Path) -> str:
+    """Predicted-vs-measured block-size table from the kernel autotuner.
+
+    Reads the artifact written by the tune loop
+    (``PYTHONPATH=src python -m repro.api --tune-kernels`` — full shapes;
+    scripts/check.sh runs the smoke variant into a scratch file).
+    """
+    out = ["### Kernel autotune (prune → measure → cache)", "",
+           "ISSUE 8: per (kernel, shape-bucket), the analytic pruner "
+           "(VMEM capacity + roofline knee from "
+           "`HardwareSpec.from_cluster`) kills infeasible block sizes, the "
+           "survivors are *measured* (interpret mode on this CPU box), and "
+           "the measured winner is cached under the cluster fingerprint "
+           "(DESIGN.md §13). The predicted column is the TPU-roofline "
+           "model the pruner ranks by; the measured column is interpret-"
+           "mode wall time — when they disagree on ordering (they do for "
+           "rmsnorm below) the measurement wins, which is exactly why the "
+           "tuner measures instead of trusting the model.", ""]
+    art = here / "kernel_tune.json"
+    if not art.exists():
+        out.append("_no kernel tune artifact yet — run "
+                   "`PYTHONPATH=src python -m repro.api --tune-kernels`_")
+        return "\n".join(out)
+    rec = json.loads(art.read_text())
+    out += [f"Cluster `{rec.get('cluster', '?')}` (fingerprint "
+            f"`{rec.get('fingerprint', '?')}`), backend "
+            f"`{rec.get('backend', '?')}`:", "", KT_HDR]
+    for e in rec.get("entries", {}).values():
+        cands = e.get("candidates") or [
+            {"blocks": e["blocks"], "predicted_us": e["predicted_us"],
+             "measured_us": e["measured_us"], "is_default": True}]
+        d_us = e["default_us"] or 1.0
+        for i, c in enumerate(cands):
+            blocks = ";".join(f"{k}={v}"
+                              for k, v in sorted(c["blocks"].items()))
+            tag = ("winner" if c["measured_us"] == e["measured_us"] else "") \
+                + (" (default)" if c["is_default"] else "")
+            out.append(
+                f"| {(e['kernel'] + ' (' + e['bucket'] + ')') if i == 0 else ''} "
+                f"| {blocks} | {c['predicted_us']:,.1f} "
+                f"| {c['measured_us']:,.1f} "
+                f"| {c['measured_us'] / d_us:.2f}x | {tag.strip()} |")
+    out += ["",
+            "`vs default` < 1 is a real interpret-mode win the TPU model "
+            "did not predict (rmsnorm: fewer, larger grid programs halve "
+            "the per-program emulation overhead). Investigating the "
+            "committed `kernels/conv2d/gemm_interpret` ref_ratio≈1.4x: "
+            "tuned `block_f` does **not** close it — the winner *is* the "
+            "default (block_f=128), and the only other survivor "
+            "(block_f=64) measures slower, agreeing with the predicted "
+            "ordering. The gap is per-program dispatch/emulation overhead "
+            "of interpret mode itself (the kernel launches a B×(F/block_f) "
+            "grid of emulated programs where the jnp reference is one "
+            "fused XLA conv op), not a "
+            "tiling problem — on TPU the same table predicts block_f=128 "
+            "stays optimal at 13.4µs/call."]
+    return "\n".join(out)
+
+
 def replace_between(text: str, start_marker: str, end_marker: str,
                     new: str) -> str:
     start = text.index(start_marker)
@@ -458,6 +526,8 @@ def main():
                       "### Per-cell observations")
     t = ensure_marker(t, "### Schedule validation",
                       "### Cluster calibration")
+    t = ensure_marker(t, "### Kernel autotune",
+                      "### Per-cell observations")
     recs = load_dryrun(here)
     dry, n_base, n_opt = dryrun_sections(recs)
     t = replace_between(t, "### Baseline cells",
@@ -475,11 +545,13 @@ def main():
     t = replace_between(t, "### Schedule validation",
                         "### Cluster calibration", schedule_section(here))
     t = replace_between(t, "### Cluster calibration",
-                        "### Per-cell observations", cluster_section(here))
+                        "### Kernel autotune", cluster_section(here))
+    t = replace_between(t, "### Kernel autotune",
+                        "### Per-cell observations", kernel_tune_section(here))
     exp.write_text(t)
     print(f"refreshed: {n_base} baseline + {n_opt} variant dry-run cells "
           f"+ oracle sweep / auto-tuner / cross-check / overlap / pipeline "
-          f"/ schedule / cluster-fit tables")
+          f"/ schedule / cluster-fit / kernel-tune tables")
 
 
 if __name__ == "__main__":

@@ -93,6 +93,15 @@ echo "== chaos-gate: elastic recovery on virtual devices =="
 python -m repro.api --chaos
 python -m pytest -q -m chaos tests/test_chaos.py
 
+echo "== kernel autotune smoke =="
+# prune → measure → cache on tiny shapes (interpret mode). The gate inside
+# asserts the cached winner is never slower than the measured default —
+# true by construction (the default is always among the measured
+# candidates), so a failure means the tuner's selection logic broke, not
+# timing noise. Writes a scratch artifact, never the committed one.
+python -m repro.api --tune-kernels --tune-shapes smoke \
+    --out /tmp/kernel_tune_smoke.json
+
 echo "== kernel bench smoke =="
 # every Pallas kernel must run (interpret mode); a kernel that stops
 # compiling fails the gate. The smoke writes its own (gitignored) side

@@ -31,9 +31,12 @@ Everything delegates to the same engines the legacy entry points use
 so session results are bit-identical (≤1e-12) to the legacy calls —
 enforced by ``python -m repro.api --parity`` and tests/test_api.py.
 
-CLI:  python -m repro.api --smoke       # project→tune→build→dryrun smoke
-      python -m repro.api --parity      # session ↔ legacy parity gate
+CLI:  python -m repro.api --smoke        # project→tune→build→dryrun smoke
+      python -m repro.api --parity       # session ↔ legacy parity gate
       python -m repro.api --calibrate --out experiments/cluster_fit.json
+      python -m repro.api --tune-kernels # Pallas block-size autotune
+      python -m repro.api --calibrate --tune-kernels   # fit, then tune
+                                         # under the fitted ClusterSpec
 
 Module-level imports stay jax-free so the CLI can set XLA_FLAGS (virtual
 host devices) before any platform initialization.
@@ -97,6 +100,10 @@ class Oracle:
         self.tm = TimeModel(cluster.system)
         self.cfg = cluster.oracle_config(B=self.B, D=self.D,
                                          **self._oracle_kw)
+        # tuned Pallas tiles are fingerprint-keyed to the machine: any
+        # rebind (calibrate/with_cluster) invalidates the session's copy —
+        # tune_kernels() on the new description repopulates it
+        self._kernel_tiles = None
 
     def with_cluster(self, cluster) -> "Oracle":
         """A new session on a different machine — everything else shared."""
@@ -153,12 +160,32 @@ class Oracle:
         strategy (the elastic controller's rebind path deploys plain SPMD
         steps only — runtime/elastic.py)."""
         from .core.autotune import plan_for_arch
-        return plan_for_arch(self.arch_cfg, self.shape.name, p,
+        plan = plan_for_arch(self.arch_cfg, self.shape.name, p,
                              cluster=self.cluster, cfg=self.cfg,
                              stats=self.stats,
                              smoke=self.smoke, mem_cap=self.mem_cap,
                              switches=switches, model_width=model_width,
                              allow_pipeline=allow_pipeline)
+        if self._kernel_tiles is not None:
+            # tuned blocks ride with the plan so deploy (build_cell →
+            # ShardingCtx → HaloConv) uses what the tuner measured
+            import dataclasses
+            plan = dataclasses.replace(plan, kernel_tiles=self._kernel_tiles)
+        return plan
+
+    def tune_kernels(self, *, shapes="full", path=None, **kw):
+        """Tune Pallas block sizes for THIS cluster (kernels/autotune):
+        analytic prune from ``HardwareSpec.from_cluster``, measure the
+        survivors, persist winners to ``path`` (default the committed
+        experiments/kernel_tune.json; "" skips persisting) stamped with
+        the cluster fingerprint. The session keeps the resulting
+        ``KernelTiles`` so subsequent ``tune()`` plans carry them into
+        deployment; re-binding the cluster (``calibrate``/``with_cluster``)
+        drops them — stale tiles never outlive the machine description."""
+        from .kernels.autotune import tune_kernels
+        cache = tune_kernels(self.cluster, shapes=shapes, path=path, **kw)
+        self._kernel_tiles = cache.tiles() if cache.entries else None
+        return cache
 
     # -- deployment ----------------------------------------------------------
 
@@ -171,6 +198,9 @@ class Oracle:
             plan = self.tune(mesh_device_count(mesh),
                              model_width=None if mesh is None
                              else mesh.shape.get("model"))
+        # passing the cluster lets build_cell fingerprint-check any tuned
+        # kernel-tile artifact it falls back to loading
+        kw.setdefault("system", self.cluster)
         return build_cell(self.arch_cfg, self.shape.name, mesh, "auto",
                           smoke=self.smoke, plan=plan, **kw)
 
@@ -494,6 +524,31 @@ def _calibrate(out: str | None, devices: int) -> int:
     return 0
 
 
+def _tune_kernels(shapes: str, out: str | None, devices: int,
+                  calibrate: bool) -> int:
+    """--tune-kernels gate: prune → measure → cache, then assert the
+    artifact's invariant (winner never worse than the measured default —
+    holds by construction, pinned here so CI notices if it ever breaks)."""
+    ses = Oracle("resnet50", "train_4k", smoke=True)   # default: tpu target
+    if calibrate:
+        # compose: fit the machine description first, tune under the fit
+        # (the session rebind drops any stale tiles before tuning)
+        from .launch.mesh import make_host_mesh
+        spec = ses.calibrate(make_host_mesh())
+        print(f"calibrated {spec.name}: fingerprint {spec.fingerprint()}")
+    cache = ses.tune_kernels(shapes=shapes, path=out, verbose=True)
+    for key, e in sorted(cache.entries.items()):
+        assert e["measured_us"] <= e["default_us"] + 1e-9, \
+            f"tuned slower than default for {key}: {e}"
+        print(f"  {key}: {e['blocks']} "
+              f"{e['measured_us']:.1f}us (default {e['default_us']:.1f}us)")
+    from .kernels.autotune import DEFAULT_TUNE_PATH
+    print(f"repro.api --tune-kernels OK ({len(cache.entries)} entries, "
+          f"cluster {cache.cluster_name} fp {cache.fingerprint}, "
+          f"wrote {out or DEFAULT_TUNE_PATH})")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.api",
@@ -512,20 +567,36 @@ def main(argv=None) -> int:
                          "torus slice mid-run, re-tune on the surviving "
                          "ClusterSpec, reshard plan-to-plan, and pin the "
                          "resumed trajectory bit-exact (DESIGN.md §12)")
+    ap.add_argument("--tune-kernels", action="store_true",
+                    help="tune Pallas block sizes for the session cluster "
+                         "(kernels/autotune): analytic prune → measure → "
+                         "cache winners keyed by cluster fingerprint. "
+                         "Composes with --calibrate (fit first, tune under "
+                         "the fitted ClusterSpec)")
+    ap.add_argument("--tune-shapes", choices=("full", "smoke"),
+                    default="full",
+                    help="--tune-kernels shape set: 'full' = the bench "
+                         "shapes (the committed artifact), 'smoke' = tiny "
+                         "CI shapes")
     ap.add_argument("--out", default=None,
-                    help="--calibrate: write the fitted-cluster JSON "
-                         "artifact here (e.g. experiments/cluster_fit.json)")
+                    help="output JSON path: the fitted-cluster artifact "
+                         "(--calibrate) or the tuned-kernel artifact "
+                         "(--tune-kernels; default "
+                         "experiments/kernel_tune.json)")
     ap.add_argument("--devices", type=int, default=8,
                     help="virtual host device count for --smoke/--calibrate/"
                          "--chaos")
     args = ap.parse_args(argv)
-    if args.smoke or args.calibrate or args.chaos:
+    if args.smoke or args.calibrate or args.chaos or args.tune_kernels:
         # must precede any jax import (the module header stays jax-free)
         os.environ.setdefault(
             "XLA_FLAGS",
             f"--xla_force_host_platform_device_count={args.devices}")
     if args.parity:
         return _parity()
+    if args.tune_kernels:
+        return _tune_kernels(args.tune_shapes, args.out, args.devices,
+                             args.calibrate)
     if args.calibrate:
         return _calibrate(args.out, args.devices)
     if args.chaos:

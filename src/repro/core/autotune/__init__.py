@@ -87,6 +87,11 @@ class TunedPlan:
     schedule: str = "gpipe"  # pipeline schedule the projection priced
                              # (PIPELINE_SCHEDULES; deploy must run it)
     virtual_stages: int = 2  # v for interleaved plans (chunks per rank)
+    kernel_tiles: object = None  # kernels.autotune.KernelTiles — tuned Pallas
+                             # block sizes riding with the plan so deploy uses
+                             # the blocks the tuner measured (None = kernel
+                             # defaults; KernelTiles is frozen/hashable so the
+                             # plan stays hashable)
 
     @property
     def switches(self) -> dict:
@@ -132,11 +137,14 @@ class TunedPlan:
         cap = (f"{self.mem_cap / 2**30:.1f}" if self.mem_cap else "∞")
         strat = (f"{self.strategy}:{self.schedule}"
                  if self.strategy == "pipeline" else self.strategy)
+        tiles = ""
+        if self.kernel_tiles is not None and len(self.kernel_tiles):
+            tiles = f", {len(self.kernel_tiles)} tuned kernel tiles"
         return (f"TunedPlan[p={self.p}]: {strat} "
                 f"(mesh {self.p1}x{self.p2}, switches {self.switch_str()}) "
                 f"→ {self.per_iter_s * 1e3:.2f} ms/iter, "
                 f"{self.mem_bytes / 2**30:.2f}/{cap} GiB, "
-                f"{self.bottleneck}"
+                f"{self.bottleneck}{tiles}"
                 + ("" if self.feasible else "  [FALLBACK: nothing fits]"))
 
 

@@ -476,6 +476,21 @@ class ClusterSpec:
             sigma=tuple(sorted(sigma.items())) if sigma else base.sigma,
             fit_residuals=tuple(residuals))
 
+    def fingerprint(self) -> str:
+        """Short stable digest of the machine description (12 hex chars).
+
+        Keys tuned-kernel artifacts (experiments/kernel_tune.json): a cache
+        written under one machine description is invalid under another —
+        different VMEM pressure / rooflines move the block-size optimum.
+        ``fit_residuals`` is excluded (diagnostic only, ``compare=False``),
+        so a re-calibration that lands on the same constants keeps its
+        tuned blocks."""
+        import hashlib
+        d = self.to_json()
+        d.pop("fit_residuals", None)
+        blob = json.dumps(d, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:12]
+
     # -- JSON artifact -------------------------------------------------------
 
     def to_json(self) -> dict:

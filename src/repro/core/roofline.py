@@ -25,12 +25,17 @@ class HardwareSpec:
     ici_bw: float = 50e9             # B/s per link (per mesh axis)
     dci_bw: float = 25e9             # B/s per chip across pods (assumption)
     hbm_bytes: float = 16e9          # v5e HBM capacity
+    vmem_bytes: float = 128 * 2**20  # on-chip VMEM a Pallas program tiles for
+    mxu: int = 128                   # systolic array edge (MXU 128×128)
 
     @classmethod
     def from_cluster(cls, spec) -> "HardwareSpec":
         """Roofline view of a ClusterSpec: intra-pod links from the
         'model' level's β, the cross-pod hop from 'pod' — so dry-run
-        rooflines and oracle projections read one machine description."""
+        rooflines and oracle projections read one machine description.
+        VMEM/MXU keep the v5e defaults (ClusterSpec models the machine at
+        HBM/interconnect granularity; the kernel autotuner consumes them
+        through this view — kernels/autotune/space.py)."""
         return cls(name=spec.name, peak_bf16=spec.peak_flops,
                    hbm_bw=spec.hbm_bw,
                    ici_bw=1.0 / spec.level("model").beta,

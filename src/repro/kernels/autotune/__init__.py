@@ -1,0 +1,25 @@
+"""Pallas block-size autotuner (DESIGN.md §13).
+
+Three layers, one machine description:
+
+* ``space``   — search space + analytic pruner (pure arithmetic; reads
+  ``HardwareSpec.from_cluster(ClusterSpec)`` for VMEM/roofline limits)
+* ``measure`` + ``tune`` — time the survivors, cache the winners to
+  ``experiments/kernel_tune.json`` keyed by (kernel, shape bucket, backend)
+  and stamped with the cluster fingerprint
+* ``cache``   — the jax-free artifact layer; ``KernelTiles`` is the frozen
+  deployment view that ``ShardingCtx`` / ``TunedPlan`` carry so
+  ``build_cell(use_pallas=True)`` and HaloConv deploy tuned blocks
+"""
+from .cache import (DEFAULT_TUNE_PATH, KernelTiles, KernelTuneCache,
+                    entry_key, load_tiles)
+from .space import (DEFAULT_BLOCKS, DISPATCH_S, KERNELS, VMEM_FRACTION,
+                    Candidate, bucket, enumerate_candidates, prune)
+from .tune import DEFAULT_SHAPES, SMOKE_SHAPES, tune_kernels
+
+__all__ = [
+    "DEFAULT_TUNE_PATH", "KernelTiles", "KernelTuneCache", "entry_key",
+    "load_tiles", "DEFAULT_BLOCKS", "DISPATCH_S", "KERNELS", "VMEM_FRACTION",
+    "Candidate", "bucket", "enumerate_candidates", "prune",
+    "DEFAULT_SHAPES", "SMOKE_SHAPES", "tune_kernels",
+]

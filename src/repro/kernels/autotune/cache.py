@@ -1,0 +1,161 @@
+"""Tuned-block cache: experiments/kernel_tune.json (DESIGN.md §13).
+
+Winners are keyed ``kernel|bucket|backend`` and stamped with the
+``ClusterSpec.fingerprint()`` they were measured under.  A cache whose
+fingerprint no longer matches the session's cluster is *stale* — the machine
+description changed, so the block-size optima may have moved — and is ignored
+with a warning rather than deployed silently.  Corrupt or
+version-incompatible artifacts degrade the same way: warn, start fresh.
+
+jax-free (stdlib only): importable from ``core``-adjacent code and before
+XLA_FLAGS are set.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from dataclasses import dataclass, field
+
+CACHE_VERSION = 1
+
+#: committed artifact — same directory the calibration JSONs live in
+DEFAULT_TUNE_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))),
+    "experiments", "kernel_tune.json")
+
+
+def entry_key(kernel: str, bucket: str, backend: str) -> str:
+    return f"{kernel}|{bucket}|{backend}"
+
+
+@dataclass(frozen=True)
+class KernelTiles:
+    """Read-only deployment view of a tune cache.
+
+    Frozen + hashable so it can ride inside ``ShardingCtx`` / ``TunedPlan``
+    (both frozen).  ``entries`` maps key → sorted ((block, value), ...)."""
+    entries: tuple = ()                  # ((key, ((name, val), ...)), ...)
+    fingerprint: str = ""
+    backend: str = "cpu"
+
+    def blocks_for(self, kernel: str, dims: dict) -> dict:
+        """Tuned blocks for (kernel, dims) or {} when untuned."""
+        from .space import bucket        # local: keeps cache.py import-light
+        key = entry_key(kernel, bucket(kernel, dims), self.backend)
+        for k, blocks in self.entries:
+            if k == key:
+                return dict(blocks)
+        return {}
+
+    def conv_block_f(self, *, B, H, W, C, F, kh, kw, sh=1, sw=1,
+                     e=4, default: int = 128) -> int:
+        """The one lookup the CNN deployment path makes (parallel/halo.py)."""
+        blocks = self.blocks_for("conv2d_gemm", dict(
+            B=B, H=H, W=W, C=C, F=F, kh=kh, kw=kw, sh=sh, sw=sw, e=e))
+        return int(blocks.get("block_f", default))
+
+    def __len__(self):
+        return len(self.entries)
+
+
+@dataclass
+class KernelTuneCache:
+    """Mutable tune-loop side: accumulate winners, persist, reload."""
+    fingerprint: str = ""
+    backend: str = "cpu"
+    cluster_name: str = ""
+    entries: dict = field(default_factory=dict)   # key -> entry dict
+
+    def put(self, kernel: str, bucket: str, *, blocks: dict,
+            measured_us: float, default_us: float, predicted_us: float,
+            trials: int, candidates: list | None = None) -> None:
+        self.entries[entry_key(kernel, bucket, self.backend)] = {
+            "kernel": kernel, "bucket": bucket, "backend": self.backend,
+            "blocks": {k: int(v) for k, v in blocks.items()},
+            "measured_us": round(float(measured_us), 3),
+            "default_us": round(float(default_us), 3),
+            "predicted_us": round(float(predicted_us), 3),
+            "trials": int(trials),
+            # full predicted-vs-measured table of the survivors, so
+            # experiments/make_report.py can regenerate the EXPERIMENTS.md
+            # section without re-running the tune
+            "candidates": list(candidates or []),
+        }
+
+    def lookup(self, kernel: str, bucket: str) -> dict | None:
+        e = self.entries.get(entry_key(kernel, bucket, self.backend))
+        return dict(e["blocks"]) if e else None
+
+    def tiles(self) -> KernelTiles:
+        return KernelTiles(
+            entries=tuple(sorted(
+                (k, tuple(sorted(e["blocks"].items())))
+                for k, e in self.entries.items())),
+            fingerprint=self.fingerprint, backend=self.backend)
+
+    # -- persistence ---------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"version": CACHE_VERSION, "fingerprint": self.fingerprint,
+                "backend": self.backend, "cluster": self.cluster_name,
+                "entries": dict(sorted(self.entries.items()))}
+
+    def save(self, path: str = DEFAULT_TUNE_PATH) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str = DEFAULT_TUNE_PATH, *, fingerprint: str = "",
+             backend: str = "cpu", cluster_name: str = "") -> "KernelTuneCache":
+        """Load iff the artifact is readable, version-compatible, and (when a
+        fingerprint is given) was tuned under the same machine description.
+        Every failure mode warns and returns a fresh empty cache."""
+        fresh = cls(fingerprint=fingerprint, backend=backend,
+                    cluster_name=cluster_name)
+        if not os.path.exists(path):
+            return fresh
+        try:
+            with open(path) as f:
+                d = json.load(f)
+            entries = d["entries"]
+            if not isinstance(entries, dict):
+                raise ValueError("entries is not a dict")
+        except (json.JSONDecodeError, KeyError, ValueError, OSError) as exc:
+            warnings.warn(f"kernel tune cache {path} is corrupt "
+                          f"({exc!r}); ignoring it", stacklevel=2)
+            return fresh
+        if d.get("version") != CACHE_VERSION:
+            warnings.warn(
+                f"kernel tune cache {path} has version {d.get('version')!r} "
+                f"(want {CACHE_VERSION}); ignoring it", stacklevel=2)
+            return fresh
+        if fingerprint and d.get("fingerprint") != fingerprint:
+            warnings.warn(
+                f"kernel tune cache {path} is stale: tuned under cluster "
+                f"fingerprint {d.get('fingerprint')!r}, session cluster is "
+                f"{fingerprint!r} — re-tune with --tune-kernels",
+                stacklevel=2)
+            return fresh
+        return cls(fingerprint=d.get("fingerprint", fingerprint),
+                   backend=d.get("backend", backend),
+                   cluster_name=d.get("cluster", cluster_name),
+                   entries=dict(entries))
+
+
+def load_tiles(path: str = DEFAULT_TUNE_PATH, *, cluster=None,
+               backend: str | None = None) -> KernelTiles:
+    """Deployment-side convenience: artifact → ``KernelTiles``.
+
+    With ``cluster`` the artifact must match its fingerprint (stale caches
+    resolve to empty tiles, i.e. kernel defaults).  Without it the artifact
+    is trusted as-is (benchmarks comparing default vs tuned rows)."""
+    fp = cluster.fingerprint() if cluster is not None else ""
+    cache = KernelTuneCache.load(path, fingerprint=fp)
+    if backend is not None:
+        cache.backend = backend
+    return cache.tiles()

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..util import largest_divisor
+
 
 def _decimate(patch, Ho: int, Wo: int, sh: int, sw: int, c: int):
     """Keep every (sh, sw)-th pixel of a (sh·Ho, sw·Wo, C) patch."""
@@ -64,9 +66,7 @@ def conv2d_gemm(x, w, *, strides=(1, 1), block_f: int = 128,
                          f"got strides={(sh, sw)}")
     Ho = H - kh + 1 if not pad_h else -(-H // sh)
     Wo = -(-W // sw)
-    bf = min(block_f, F)
-    while F % bf:
-        bf -= 1
+    bf = largest_divisor(F, block_f)
     # padded extents cover the largest shifted patch, di + sh·Ho ≤ Hp
     Hp = (kh - 1) + sh * Ho
     Wp = (kw - 1) + sw * Wo

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from ..util import largest_divisor
+
 NEG_INF = -1e30
 
 
@@ -59,12 +61,15 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, block_q: int = 128,
                         block_k: int = 128, interpret: bool = False):
-    """q,k,v: (B, H, S, D) → (B, H, S, D)."""
+    """q,k,v: (B, H, S, D) → (B, H, S, D).
+
+    Block sizes that do not divide S fall back to the largest divisor ≤ the
+    request (as rmsnorm does), so odd sequence lengths run instead of
+    crashing — the grid and the KV loop both need exact tiling.
+    """
     B, H, S, D = q.shape
-    bq = min(block_q, S)
-    bk = min(block_k, S)
-    if S % bq or S % bk:
-        raise ValueError(f"S={S} must divide block sizes ({bq}, {bk})")
+    bq = largest_divisor(S, block_q)
+    bk = largest_divisor(S, block_k)
     scale = 1.0 / np.sqrt(D)
     qf = q.reshape(B * H, S, D)
     kf = k.reshape(B * H, S, D)

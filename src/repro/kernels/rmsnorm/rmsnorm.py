@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..util import resolve_block_rows
+
 
 def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -22,22 +24,31 @@ def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
 
 def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
             interpret: bool = False):
-    """x: (..., D); scale: (D,)."""
+    """x: (..., D); scale: (D,).
+
+    The row block resolves to the largest divisor of R ≤ ``block_rows``
+    (O(√R)); when every divisor is pathologically small (prime row counts —
+    a ragged last microbatch used to serialize the grid to R single-row
+    programs), the rows are padded up to a multiple of the requested block
+    instead and the pad rows sliced off (rows are independent).
+    """
     orig_shape = x.shape
     D = x.shape[-1]
     xf = x.reshape(-1, D)
     R = xf.shape[0]
-    br = min(block_rows, R)
-    while R % br:
-        br -= 1
+    br, Rp = resolve_block_rows(R, block_rows)
+    if Rp != R:
+        xf = jnp.pad(xf, ((0, Rp - R), (0, 0)))
     kernel = functools.partial(_rmsnorm_kernel, eps=eps)
     out = pl.pallas_call(
         kernel,
-        grid=(R // br,),
+        grid=(Rp // br,),
         in_specs=[pl.BlockSpec((br, D), lambda i: (i, 0)),
                   pl.BlockSpec((D,), lambda i: (0,))],
         out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((Rp, D), x.dtype),
         interpret=interpret,
     )(xf, scale)
+    if Rp != R:
+        out = out[:R]
     return out.reshape(orig_shape)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..util import largest_divisor
+
 
 def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
                       y_ref, state_ref, decay_ref, *, q: int, h: int,
@@ -60,9 +62,7 @@ def ssd_chunk(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
     """
     Bsz, S, H, P = x.shape
     N = Bm.shape[-1]
-    Q = min(chunk, S)
-    while S % Q:
-        Q -= 1
+    Q = largest_divisor(S, chunk)
     nC = S // Q
 
     kernel = functools.partial(_ssd_chunk_kernel, q=Q, h=H, p=P, n=N)

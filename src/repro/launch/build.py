@@ -124,11 +124,18 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = No
                q_chunk: int = 1024, kv_chunk: int = 1024,
                opt: OptimizerConfig | None = None, accum: int = 1,
                override_layers: int | None = None, plan=None,
-               system=None, use_pallas: bool = False) -> BuiltCell:
+               system=None, use_pallas: bool = False,
+               kernel_tiles=None) -> BuiltCell:
     """Assemble one (arch × shape) cell under a strategy on a mesh.
 
     ``use_pallas`` routes CNN convolutions through the implicit-GEMM Pallas
     kernel (interpret-mode fallback off-TPU) — see ShardingCtx.use_pallas.
+
+    ``kernel_tiles`` pins tuned Pallas block sizes (kernels.autotune).
+    Resolution order when ``use_pallas``: explicit argument → the plan's
+    ``kernel_tiles`` → the committed experiments/kernel_tune.json (validated
+    against ``system``'s fingerprint when ``system`` is a ClusterSpec; a
+    stale artifact warns and deploys kernel defaults).
 
     ``strategy="auto"`` asks the oracle: the sweep-driven auto-tuner
     (core/autotune.py) picks the cheapest feasible (strategy, p1·p2 split,
@@ -165,7 +172,16 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = No
         mc = _with_layers(mc, override_layers)
         cfg = dataclasses.replace(cfg, model=mc, smoke_model=mc)
     model = build_model(cfg, smoke=smoke)
-    ctx = ShardingCtx(mesh, rules, use_pallas=use_pallas)
+    if use_pallas and kernel_tiles is None:
+        if plan is not None and getattr(plan, "kernel_tiles", None) is not None:
+            kernel_tiles = plan.kernel_tiles
+        else:
+            from ..kernels.autotune import load_tiles
+            cluster = system if hasattr(system, "fingerprint") else None
+            tiles = load_tiles(cluster=cluster)
+            kernel_tiles = tiles if len(tiles) else None
+    ctx = ShardingCtx(mesh, rules, use_pallas=use_pallas,
+                      kernel_tiles=kernel_tiles)
     kw = {} if cfg.family == "cnn" else dict(scan_layers=scan_layers)
     if cfg.family in ("lm", "vlm"):
         kw.update(q_chunk=q_chunk, kv_chunk=kv_chunk)

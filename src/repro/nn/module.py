@@ -271,11 +271,16 @@ class ShardingCtx:
     implicit-GEMM Pallas kernel (kernels/conv2d_gemm) instead of
     ``lax.conv`` — interpret-mode off-TPU, so it is correct (if slow)
     everywhere and MXU-shaped where it matters.
+
+    ``kernel_tiles`` (a ``kernels.autotune.KernelTiles``, typed loosely to
+    keep nn jax-import-order-clean) carries tuned block sizes down to the
+    kernel call sites; None ⇒ the kernels' built-in defaults.
     """
 
     mesh: Mesh | None
     rules: Rules
     use_pallas: bool = False
+    kernel_tiles: Any = None
 
     def constrain(self, x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
         if self.mesh is None:

@@ -90,7 +90,23 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _local_conv(xl, wl, trail_pads, *, use_pallas: bool, interpret: bool):
+def _tuned_block_f(ctx, x_shape, w_shape, strides=(1, 1), p: int = 1) -> int:
+    """Tuned conv2d_gemm filter block for this site, or the 128 default.
+
+    ``p`` divides the leading spatial dim for the sharded path so the lookup
+    uses the per-shard tile height the kernel actually sees (the bucket's
+    nearest-pow2 rounding absorbs the kh−1 halo rows)."""
+    tiles = getattr(ctx, "kernel_tiles", None)
+    if tiles is None:
+        return 128
+    B, H, W, C = x_shape
+    kh, kw, _, F = w_shape
+    return tiles.conv_block_f(B=B, H=H // p, W=W, C=C, F=F, kh=kh, kw=kw,
+                              sh=strides[0], sw=strides[1], e=4)
+
+
+def _local_conv(xl, wl, trail_pads, *, use_pallas: bool, interpret: bool,
+                block_f: int = 128):
     """VALID-over-dim-1 conv of a local tile (trailing spatial dims SAME).
 
     The Pallas path is 2-D only and consumes the tile through the
@@ -98,7 +114,8 @@ def _local_conv(xl, wl, trail_pads, *, use_pallas: bool, interpret: bool):
     nd = xl.ndim - 2
     if use_pallas and nd == 2:
         from ..kernels import conv2d_gemm
-        return conv2d_gemm(xl, wl, pad_h=False, interpret=interpret)
+        return conv2d_gemm(xl, wl, pad_h=False, interpret=interpret,
+                           block_f=block_f)
     spatial = "DHW"[-nd:]
     dn = jax.lax.conv_dimension_numbers(
         xl.shape, wl.shape, (f"N{spatial}C", f"{spatial}IO", f"N{spatial}C"))
@@ -109,7 +126,7 @@ def _local_conv(xl, wl, trail_pads, *, use_pallas: bool, interpret: bool):
 def spatial_conv2d(x, w, mesh: Mesh, axis: str = "model", bias=None, *,
                    strides: Sequence[int] | None = None, overlap: bool = True,
                    batch_axes=None, use_pallas: bool = False,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None, block_f: int = 128):
     """N-D conv (stride 1, SAME) with the leading spatial dim sharded.
 
     x: (B, H, *spatial, C) with H sharded over ``axis``; w: (kh, *k, C, F).
@@ -141,7 +158,7 @@ def spatial_conv2d(x, w, mesh: Mesh, axis: str = "model", bias=None, *,
         H = xl.shape[1]
         conv = lambda t: _local_conv(t, wl, trail_pads,       # noqa: E731
                                      use_pallas=use_pallas,
-                                     interpret=interpret)
+                                     interpret=interpret, block_f=block_f)
         if not overlap or H <= lo + hi:
             # serial reference path (also the thin-shard fallback where the
             # interior would be empty — H == lo+hi included: a zero-row
@@ -234,9 +251,11 @@ class HaloConv(Conv):
                     and self.feature_group_count == 1 \
                     and self.padding == "SAME":
                 from ..kernels import conv2d_gemm
-                y = conv2d_gemm(x, params["w"],
-                                strides=tuple(self.strides or (1, 1)),
-                                interpret=not _on_tpu())
+                strides = tuple(self.strides or (1, 1))
+                y = conv2d_gemm(x, params["w"], strides=strides,
+                                interpret=not _on_tpu(),
+                                block_f=_tuned_block_f(
+                                    ctx, x.shape, params["w"].shape, strides))
                 if self.use_bias:
                     y = y + params["b"]
                 return y
@@ -246,4 +265,6 @@ class HaloConv(Conv):
             x, params["w"], ctx.mesh, axis,
             bias=params["b"] if self.use_bias else None,
             overlap=self.overlap, batch_axes=batch_axes,
-            use_pallas=ctx.use_pallas and len(self.kernel) == 2)
+            use_pallas=ctx.use_pallas and len(self.kernel) == 2,
+            block_f=_tuned_block_f(ctx, x.shape, params["w"].shape,
+                                   p=ctx.mesh.shape[axis]))

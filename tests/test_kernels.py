@@ -122,3 +122,31 @@ def test_rmsnorm_sweep(key, shape, dtype):
     tol = 2e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(out.astype(jnp.float32),
                                ref.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("S", [100, 37, 96])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_non_dividing_seq(key, S, causal):
+    """Block sizes that do not divide S fall back to the largest divisor
+    (S=37 is prime → single-block grid) instead of raising."""
+    B, H, D = 2, 2, 32
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, H, S, D))
+               for i in range(3))
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("R", [37, 149, 257])
+def test_rmsnorm_prime_rows_pad_to_block(key, R):
+    """Prime row counts (ragged last microbatch) pad up to the block and
+    slice back instead of degrading to R single-row programs."""
+    D = 128
+    x = jax.random.normal(key, (R, D))
+    sc = jax.random.normal(jax.random.fold_in(key, 1), (D,))
+    out = rmsnorm(x, sc, block_rows=64, interpret=True)
+    assert out.shape == (R, D)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(rmsnorm_ref(x, sc)),
+                               rtol=2e-5, atol=2e-5)
