@@ -6,9 +6,20 @@ Two lattices for ResNet-50 on the paper's cluster model:
     pow2-only path silently dropped; ~27k points).
 Both are evaluated with one sweep() call and with the equivalent per-point
 project() loop. Acceptance floor: vectorized ≥ 10× faster.
+
+The timing rows land in ``BENCH_sweep.json`` at the repo root (``--out``
+redirects to a scratch file) so the sweep-engine wall-clock is a committed
+trajectory like BENCH_kernels.json: scripts/check.sh diffs a fresh run
+against it with scripts/bench_compare.py. The lattice now fans summa over
+every (p2r, p2c) factorization (ISSUE 9) — the committed artifact records
+the 2D-widened lattice, and a fresh full sweep must stay within the
+tolerance band of it.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 from repro.core import (OracleConfig, PAPER_V100_CLUSTER, STRATEGY_NAMES,
@@ -17,6 +28,9 @@ from repro.core.sweep import sweep
 from repro.models.cnn import RESNET50
 
 from .common import emit, note
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(_ROOT, "BENCH_sweep.json")
 
 GRIDS = {
     "pow2": tuple(2 ** k for k in range(11)),
@@ -33,10 +47,11 @@ def _time_both(stats, tm, cfg, grid, reps):
     t_vec = (time.perf_counter() - t0) / reps
 
     points = [(str(res.strategy[i]), int(res.p[i]), int(res.p1[i]),
-               int(res.p2[i])) for i in range(len(res))]
+               int(res.p2[i]), int(res.p2r[i]), int(res.p2c[i]))
+              for i in range(len(res))]
     t0 = time.perf_counter()
-    for s, p, p1, p2 in points:                       # equivalent scalar loop
-        project(s, stats, tm, cfg, p, p1=p1, p2=p2)
+    for s, p, p1, p2, p2r, p2c in points:             # equivalent scalar loop
+        project(s, stats, tm, cfg, p, p1=p1, p2=p2, p2r=p2r, p2c=p2c)
     t_scalar = time.perf_counter() - t0
     return len(res), t_vec, t_scalar
 
@@ -61,9 +76,36 @@ def run():
     return rows
 
 
-def main():
+def write_artifact(rows, out: "str | None" = None) -> str:
+    # only the timing rows enter the trajectory: the synthetic speedup row
+    # carries us_per_call=0, which bench_compare would read as a vanished
+    # baseline — its pass/fail already lives in the derived column above
+    rec = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "smoke": False,
+           "rows": [{"name": n, "us_per_call": round(us, 3), "derived": d}
+                    for n, us, d in rows if us > 0.0]}
+    path = out or ARTIFACT
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.bench_sweep")
+    ap.add_argument("--out", default=None,
+                    help="write the artifact to this path instead of the "
+                         "committed BENCH_sweep.json — scripts/check.sh "
+                         "lands a fresh run in a scratch file and diffs it "
+                         "against the committed trajectory with "
+                         "scripts/bench_compare.py")
+    # parse_known_args: benchmarks.run invokes main() programmatically —
+    # a foreign sys.argv flag must not SystemExit the whole suite
+    args, _ = ap.parse_known_args(argv)
     note("Sweep engine — vectorized lattice vs scalar project() loop")
-    emit(run())
+    rows = run()
+    emit(rows)
+    note(f"wrote {write_artifact(rows, out=args.out)}")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,9 @@ PIPE_HDR = ("| strategy | p | measured ms | projected ms | accuracy |\n"
 SCHED_HDR = ("| schedule | t(S_small) ms | t(S_large) ms | per-µbatch ms |"
              " bubble ms | bubble fraction |\n|---|---|---|---|---|---|")
 
+TENSOR2D_HDR = ("| plan | p1×p2r×p2c | projected ms | measured ms |\n"
+                "|---|---|---|---|")
+
 CLUSTER_HDR = ("| level | α (µs) | β⁻¹ (GB/s) | φ | σ | fit residual |\n"
                "|---|---|---|---|---|---|")
 
@@ -375,6 +378,47 @@ def schedule_section(here: pathlib.Path) -> str:
     return "\n".join(out)
 
 
+def tensor2d_section(here: pathlib.Path) -> str:
+    """Tuned 2D SUMMA point vs best data-parallel plan, oracle vs clock.
+
+    Reads the artifact written by the 2D tensor smoke
+    (``python tests/helpers/multidevice_checks.py tensor2d_validation
+    --write experiments/tensor2d_validation.json`` — scripts/check.sh runs
+    it with retries).
+    """
+    out = ["### 2D tensor validation (SUMMA lattice point, oracle winner "
+           "vs measured winner)", "",
+           "ISSUE 9: the sweep lattice fans the model width over "
+           "(p2r, p2c) grids and the `summa` rules deploy the 2D "
+           "(row × col) SUMMA matmul path (`parallel/summa.py`, DESIGN.md "
+           "§14). On a weight-heavy / batch-light LM, 8-way DP moves the "
+           "full gradient every step while SUMMA moves (r−1)/r weight "
+           "panels over one grid ring plus tiny activation gathers (the "
+           "σ-overlapped seq-parallel comm term) over the other — so the "
+           "tuner should pick a 2D point and the clock should agree "
+           "(`tensor2d_validation` multidevice check).", ""]
+    art = here / "tensor2d_validation.json"
+    if not art.exists():
+        out.append("_no 2D tensor validation artifact yet — run "
+                   "`scripts/check.sh` (or the `tensor2d_validation` "
+                   "multidevice check with `--write`)_")
+        return "\n".join(out)
+    rec = json.loads(art.read_text())
+    pl, alt, ms = rec["plan"], rec["alt"], rec["measured"]
+    out += [f"Model `{rec['model']}`, p={rec['p']}, B={rec['B']}, "
+            f"S={rec['S']}:", "", TENSOR2D_HDR,
+            f"| {pl['strategy']}:{pl['p2r']}x{pl['p2c']} | "
+            f"{pl['p1']}×{pl['p2r']}×{pl['p2c']} | "
+            f"{pl['projected_s'] * 1e3:,.1f} | "
+            f"{ms['summa_s'] * 1e3:,.1f} |",
+            f"| {alt['strategy']} | {alt['p1']}×{alt['p2']} | "
+            f"{alt['projected_s'] * 1e3:,.1f} | "
+            f"{ms['data_s'] * 1e3:,.1f} |", "",
+            f"Oracle winner: **{rec['oracle_winner']}** — measured "
+            f"winner: **{rec['measured_winner']}**."]
+    return "\n".join(out)
+
+
 def cluster_section(here: pathlib.Path) -> str:
     """Fitted ClusterSpec (α/β, φ, σ per interconnect level + residuals).
 
@@ -526,6 +570,8 @@ def main():
                       "### Per-cell observations")
     t = ensure_marker(t, "### Schedule validation",
                       "### Cluster calibration")
+    t = ensure_marker(t, "### 2D tensor validation",
+                      "### Cluster calibration")
     t = ensure_marker(t, "### Kernel autotune",
                       "### Per-cell observations")
     recs = load_dryrun(here)
@@ -543,7 +589,9 @@ def main():
     t = replace_between(t, "### Pipeline validation",
                         "### Schedule validation", pipeline_section(here))
     t = replace_between(t, "### Schedule validation",
-                        "### Cluster calibration", schedule_section(here))
+                        "### 2D tensor validation", schedule_section(here))
+    t = replace_between(t, "### 2D tensor validation",
+                        "### Cluster calibration", tensor2d_section(here))
     t = replace_between(t, "### Cluster calibration",
                         "### Kernel autotune", cluster_section(here))
     t = replace_between(t, "### Kernel autotune",

@@ -326,32 +326,27 @@ def _smoke(devices: int) -> int:
 
 
 def _parity() -> int:
-    """Legacy ↔ session parity gate (check.sh): the deprecation shims warn
-    but behave identically, and session results match the legacy
-    signatures to ≤1e-12."""
-    import warnings
-
+    """Legacy ↔ session parity gate (check.sh): the PR-5 deprecation shims
+    are fully retired (the parsers live in core.cluster only), and session
+    results match the legacy signatures to ≤1e-12."""
     import numpy as np
 
-    from .core import advisor, oracle
+    from .core import advisor, oracle, sweep as sweep_mod
     from .core.autotune import autotune, plan_for_arch
     from .core.hardware import PAPER_V100_CLUSTER
     from .core.layer_stats import stats_for
-    from .core.sweep import parse_phi_table as legacy_phi
-    from .core.sweep import parse_sigma_table as legacy_sigma
     from .core.sweep import sweep as legacy_sweep
     from .models.cnn import RESNET50
 
-    # 1. shims: same result, plus a DeprecationWarning
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        legacy = legacy_phi("data=2.0,model=1.2")
-        legacy_s = legacy_sigma("model=0.5")
-    assert sum(issubclass(x.category, DeprecationWarning) for x in w) == 2, \
-        "legacy parse_*_table shims must emit DeprecationWarning"
+    # 1. the PR-5 shims are gone for good: sweep must NOT re-grow the
+    # parser names, and the canonical core.cluster parsers behave
+    for name in ("parse_phi_table", "parse_sigma_table"):
+        assert not hasattr(sweep_mod, name), \
+            f"retired shim sweep.{name} came back"
     from .core.cluster import parse_phi_table, parse_sigma_table
-    assert legacy == parse_phi_table("data=2.0,model=1.2")
-    assert legacy_s == parse_sigma_table("model=0.5")
+    assert parse_phi_table("data=2.0,model=1.2") == (("data", 2.0),
+                                                     ("model", 1.2))
+    assert parse_sigma_table("model=0.5") == (("model", 0.5),)
 
     # 2. numeric parity: session vs legacy call signatures
     stats = stats_for(RESNET50)
@@ -557,8 +552,8 @@ def main(argv=None) -> int:
                     help="project→tune→build→dryrun on cpu_host_model "
                          "(CI gate)")
     ap.add_argument("--parity", action="store_true",
-                    help="legacy-shim DeprecationWarning + session↔legacy "
-                         "1e-12 parity gate (CI gate)")
+                    help="shim-retirement + session↔legacy 1e-12 parity "
+                         "gate (CI gate)")
     ap.add_argument("--calibrate", action="store_true",
                     help="run the measurement harness on the host mesh and "
                          "fit a ClusterSpec (α/β, φ, σ per level)")

@@ -31,10 +31,13 @@ def _split_candidates(p: int):
 def advise(stats: list[LayerStat], tm: TimeModel, cfg: OracleConfig, p: int,
            mem_cap: float | None = None,
            strategies=("data", "spatial", "pipeline", "filter", "channel",
-                       "df", "ds", "ep"), cluster=None) -> Recommendation:
+                       "df", "ds", "ep", "summa"), cluster=None) -> Recommendation:
     """Rank strategies at p. ``cluster`` (a ClusterSpec) additionally
     rejects splits its torus topology cannot host — they land in
-    ``rejected`` with the placement reason, like any scaling limit."""
+    ``rejected`` with the placement reason, like any scaling limit.
+    The lattice includes the 2D grid points: "summa" fans over every
+    (p1, p2r·p2c) factorization, and the headline ranking keeps its best
+    grid like any other strategy's best split."""
     mem_cap = mem_cap or tm.system.mem_capacity
     res = sweep(stats, tm, cfg, [p], strategies, mem_cap=mem_cap,
                 cluster=cluster)
@@ -56,6 +59,53 @@ def advise(stats: list[LayerStat], tm: TimeModel, cfg: OracleConfig, p: int,
             dedup.append(r)
             seen.add(r.strategy)
     return Recommendation(dedup[0] if dedup else None, dedup, rejected)
+
+
+@dataclass
+class GroupChoice:
+    """Per-layer-group winner in a strategy mixture (advisory)."""
+
+    kind: str            # layer_stats kind: conv | fc | attn | ffn | moe | …
+    n_layers: int
+    strategy: str
+    p1: int
+    p2: int
+    p2r: int             # model-grid factorization (summa winners; 1×1 else)
+    p2c: int
+    total_s: float       # projected epoch seconds for THIS group alone
+
+
+def advise_groups(stats: list[LayerStat], tm: TimeModel, cfg: OracleConfig,
+                  p: int, mem_cap: float | None = None,
+                  strategies=("data", "spatial", "filter", "channel",
+                              "df", "ds", "ep", "summa"),
+                  cluster=None) -> list[GroupChoice]:
+    """Per-layer-group strategy mixture: sweep each group of same-kind
+    layers separately and report its winner (Jia et al., arXiv 1802.04924:
+    per-layer hidden-dimension splits beat any single global strategy).
+
+    Advisory, not a deployable plan: the resharding collectives at group
+    boundaries are not priced, so the mixture's summed time is a lower
+    bound. A mixture that beats the global winner by more than the
+    boundary-reshard cost is the signal to split the deployment. Pipeline
+    is excluded — its schedule spans the whole stack, not one group."""
+    groups: dict[str, list[LayerStat]] = {}
+    for s in stats:
+        groups.setdefault(s.kind, []).append(s)
+    out = []
+    for kind in sorted(groups):
+        gstats = groups[kind]
+        try:
+            rec = advise(gstats, tm, cfg, p, mem_cap=mem_cap,
+                         strategies=strategies, cluster=cluster)
+        except ValueError:   # no strategy applies to this group alone
+            continue
+        b = rec.best
+        if b is None:
+            continue
+        out.append(GroupChoice(kind, len(gstats), b.strategy, b.p1, b.p2,
+                               b.p2r, b.p2c, b.total_s))
+    return out
 
 
 def breakdown_table(recs: list[Projection]) -> str:

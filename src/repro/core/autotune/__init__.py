@@ -44,14 +44,14 @@ from ..sweep import (HYBRID_STRATEGIES, SweepResult, parse_p_grid,
 # models the stage compiler cannot cut are filtered per-arch via
 # ``allow_pipeline``).
 DEPLOYABLE_STRATEGIES = ("serial", "data", "spatial", "filter", "channel",
-                         "df", "ds", "ep", "pipeline")
+                         "df", "ds", "ep", "summa", "pipeline")
 
 # tie-break preference between equal-time strategies: fewest moving parts
 # first (no collectives < gradient exchange only < hybrids < layer-wise
-# collectives < expert all-to-alls)
+# collectives < expert all-to-alls < 2D grids < stage schedules)
 _PREF = {s: i for i, s in enumerate(
     ("serial", "data", "ds", "df", "spatial", "filter", "channel", "ep",
-     "pipeline"))}
+     "summa", "pipeline"))}
 
 # executable rules-table name → oracle strategy (for fallback tie-breaks on
 # arch configs, whose ``strategy`` fields name rules tables)
@@ -59,7 +59,7 @@ ORACLE_OF_EXEC = {
     "data": "data", "spatial": "spatial", "filter": "filter",
     "channel": "channel", "df": "df", "df_zero1": "df", "df_zero3": "df",
     "ds": "ds", "ep_df": "ep", "serve_tp": "df", "serve_seqkv": "ds",
-    "pipeline": "pipeline",
+    "pipeline": "pipeline", "summa": "summa",
 }
 
 
@@ -87,6 +87,8 @@ class TunedPlan:
     schedule: str = "gpipe"  # pipeline schedule the projection priced
                              # (PIPELINE_SCHEDULES; deploy must run it)
     virtual_stages: int = 2  # v for interleaved plans (chunks per rank)
+    p2r: int = 1             # model-grid rows (summa plans: p2 = p2r·p2c)
+    p2c: int = 1             # model-grid cols
     kernel_tiles: object = None  # kernels.autotune.KernelTiles — tuned Pallas
                              # block sizes riding with the plan so deploy uses
                              # the blocks the tuner measured (None = kernel
@@ -102,6 +104,14 @@ class TunedPlan:
     def mesh_shape(self) -> tuple[int, int]:
         """(data, model) mesh factorization to deploy."""
         return (self.p1, self.p2)
+
+    def mesh_spec(self) -> tuple[tuple[int, ...], tuple[str, ...]]:
+        """(shape, axis names) of the mesh this plan deploys on — summa
+        plans need the factored (data, model_r, model_c) grid mesh."""
+        if self.strategy == "summa":
+            return ((self.p1, self.p2r, self.p2c),
+                    ("data", "model_r", "model_c"))
+        return ((self.p1, self.p2), ("data", "model"))
 
     @property
     def per_iter_s(self) -> float:
@@ -126,7 +136,7 @@ class TunedPlan:
             return "ep_df" if self.strategy == "ep" else "serve_tp"
         table = {"serial": "data", "data": "data", "spatial": "ds",
                  "filter": "filter", "channel": "channel", "ds": "ds",
-                 "ep": "ep_df", "pipeline": "pipeline"}
+                 "ep": "ep_df", "pipeline": "pipeline", "summa": "summa"}
         if self.strategy == "df":
             if self.zero3:
                 return "df_zero3"
@@ -137,6 +147,8 @@ class TunedPlan:
         cap = (f"{self.mem_cap / 2**30:.1f}" if self.mem_cap else "∞")
         strat = (f"{self.strategy}:{self.schedule}"
                  if self.strategy == "pipeline" else self.strategy)
+        if self.strategy == "summa":
+            strat = f"summa:{self.p2r}x{self.p2c}"
         tiles = ""
         if self.kernel_tiles is not None and len(self.kernel_tiles):
             tiles = f", {len(self.kernel_tiles)} tuned kernel tiles"
@@ -161,7 +173,8 @@ def _plan_of(res: SweepResult, i: int, mem_cap, feasible: bool,
         mem_bytes=float(res.mem_bytes[i]), mem_cap=mem_cap,
         feasible=feasible, source=source, segments=segments,
         schedule="gpipe" if sched == "-" else sched,
-        virtual_stages=virtual_stages)
+        virtual_stages=virtual_stages,
+        p2r=int(res.p2r[i]), p2c=int(res.p2c[i]))
 
 
 def deployable_switch_mask(res: SweepResult, allow_remat: bool = True):
@@ -174,7 +187,10 @@ def deployable_switch_mask(res: SweepResult, allow_remat: bool = True):
     * ``zero3`` — only the ``df``/``ep`` rules tables shard params over the
       data axis (``df_zero3`` / ``ep_df``);
     * ``seq_parallel`` — only the model-axis tables (``df``/``filter``/
-      ``channel``/``ep``) shard the residual stream;
+      ``channel``/``ep``) shard the residual stream; ``summa`` is excluded
+      from both ZeRO-3 and the seq switch — its residual is already
+      sequence-sharded over the grid rows, the extra column-axis pass the
+      oracle prices has no exec path;
     * ``remat`` — wire-able only where the model's forward supports it
       (lm / vlm / encdec; CNN forwards have no checkpointing), gated by
       ``allow_remat``;
@@ -234,6 +250,7 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
              switches="all", schedules="all", fallback: str | None = None,
              allow_remat: bool = True, allow_pipeline: bool = True,
              max_stages: int | None = None, model_width: int | None = None,
+             model_grid: "tuple[int, int] | None" = None,
              cluster: "ClusterSpec | None" = None,
              rtol: float = 1e-9) -> TunedPlan:
     """Pick the cheapest deployable (strategy, p1·p2, switches, schedule)
@@ -253,7 +270,11 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
     ``parallel.schedules.pipeline_supported``).
     ``model_width`` constrains hybrid plans to one p2 — pass the mesh's
     model-axis size when the mesh is already shaped and cannot be
-    refactorized. ``cluster``: a ClusterSpec whose torus topology prunes
+    refactorized (summa plans are excluded there: a 1D ("data", "model")
+    mesh carries no (model_r, model_c) grid). ``model_grid`` is the
+    converse: pass the (r, c) extents of an already-shaped grid mesh and
+    only summa points on exactly that grid survive.
+    ``cluster``: a ClusterSpec whose torus topology prunes
     p1·p2 factorizations the machine cannot physically host (model axis
     must ring within one allowed torus dim — cluster.Torus); pruned points
     are never deployed, they fall out of the lattice like any other
@@ -284,6 +305,11 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
         # like the hybrids, or the deployed stage count won't match the plan
         keep &= (~np.isin(res.strategy, HYBRID_STRATEGIES + ("pipeline",))
                  | (res.p2 == model_width))
+        keep &= res.strategy != "summa"
+    if model_grid is not None:
+        r, c = model_grid
+        keep &= ((res.strategy == "summa") & (res.p2r == r)
+                 & (res.p2c == c))
     if max_stages is not None:
         # the oracle's p <= G bound counts STAT layers; the executor cuts
         # the model's BLOCK stack, which is shorter (attn+ffn share a block)
@@ -340,6 +366,7 @@ def plan_for_arch(arch_cfg, shape_name: str, p: int, *,
                   smoke: bool = False,
                   mem_cap: float | None = None, switches="all",
                   model_width: int | None = None,
+                  model_grid: "tuple[int, int] | None" = None,
                   cfg: OracleConfig | None = None,
                   stats=None,
                   allow_pipeline: bool | None = None) -> TunedPlan:
@@ -378,7 +405,8 @@ def plan_for_arch(arch_cfg, shape_name: str, p: int, *,
                 and allow_pipeline is not False)
     return autotune(stats, tm, cfg, p, mem_cap=mem_cap, switches=switches,
                     fallback=arch_cfg.strategy_for(shape_name),
-                    model_width=model_width, cluster=cluster,
+                    model_width=model_width, model_grid=model_grid,
+                    cluster=cluster,
                     allow_remat=arch_cfg.family != "cnn",
                     allow_pipeline=can_pipe,
                     max_stages=pipeline_block_count(mc))

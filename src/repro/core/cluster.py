@@ -89,6 +89,12 @@ class Torus:
         dimension: ∃ allowed d with dims[d] % p2 == 0. Spanning two torus
         dimensions would fold two physical rings into one logical ring,
         which the α–β model (one link per hop) does not describe.
+      * a 2D model GRID (summa: p2 = p2r·p2c) embeds each grid dimension
+        as a ring within its own **distinct** allowed torus dimension:
+        ∃ allowed i ≠ j with dims[i] % p2r == 0 and dims[j] % p2c == 0.
+        Row and column rings then never share links, so each carries its
+        own α/β (ClusterSpec may price the row hop as a "model2" level).
+        Degenerate grids (p2r == 1 or p2c == 1) collapse to the 1D rule.
       * the pipeline "model" axis is a **chain** (P2P only); a Hamiltonian
         path snakes across dimensions freely, so pipeline is exempt from
         the one-dimension rule.
@@ -130,21 +136,52 @@ class Torus:
             ws |= {k for k in range(1, e + 1) if e % k == 0}
         return tuple(sorted(ws))
 
-    def split_mask(self, p, p1, p2, strategy: str | None = None):
+    def grid_pairs(self) -> tuple:
+        """Feasible (p2r, p2c) model-grid embeddings (see the class
+        docstring): each grid dim rings within its own distinct allowed
+        torus dim (ordered pairs — row and column hops may differ in
+        speed), plus the degenerate grids the 1D rule already admits."""
+        dims_ok = tuple(range(len(self.dims)) if self.model_dims is None
+                        else self.model_dims)
+        pairs = {(1, 1)}
+        for w in self.model_widths():
+            pairs |= {(1, w), (w, 1)}
+        divs = {d: tuple(k for k in range(1, self.dims[d] + 1)
+                         if self.dims[d] % k == 0) for d in dims_ok}
+        for i in dims_ok:
+            for j in dims_ok:
+                if i != j:
+                    pairs |= {(r, c) for r in divs[i] for c in divs[j]}
+        return tuple(sorted(pairs))
+
+    def split_mask(self, p, p1, p2, strategy: str | None = None,
+                   p2r=None, p2c=None):
         """Vectorized feasibility of (p, p1, p2) lattice points (see the
         class docstring for the embedding rule). ``strategy`` exempts
-        'pipeline' (chain, not ring) from the one-dimension rule."""
+        'pipeline' (chain, not ring) from the one-dimension rule and
+        checks 'summa' points against the 2D grid embeddings
+        (``grid_pairs``; the (p2r, p2c) lattice columns must be passed)."""
         p = np.asarray(p, np.int64)
         p2 = np.asarray(p2, np.int64)
         fits = (p >= 1) & (self.size % np.maximum(p, 1) == 0)
         if strategy == "pipeline":
             return fits
+        if strategy == "summa":
+            r = np.asarray(1 if p2r is None else p2r, np.int64)
+            c = np.asarray(1 if p2c is None else p2c, np.int64)
+            enc = r * np.int64(2 ** 32) + c
+            ok = np.array([ri * 2 ** 32 + ci for ri, ci in self.grid_pairs()],
+                          np.int64)
+            return fits & np.isin(enc, ok)
         ring_ok = np.isin(p2, np.asarray(self.model_widths(), np.int64))
         return fits & ring_ok
 
     def limit_str(self, strategy: str) -> str:
         if strategy == "pipeline":
             return f"topology: p must tile the {self} ({self.size} PEs)"
+        if strategy == "summa":
+            return (f"topology: model grid must embed (row, col) rings in "
+                    f"two distinct dims of {self}")
         return (f"topology: model axis must ring within one dim of {self} "
                 f"(widths {list(self.model_widths())})")
 

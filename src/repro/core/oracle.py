@@ -32,7 +32,7 @@ from .layer_stats import LayerStat
 from .partition import cut_values, min_max_partition, stage_sums
 
 STRATEGY_NAMES = ("serial", "data", "spatial", "pipeline", "filter", "channel",
-                  "df", "ds", "ep")
+                  "df", "ds", "ep", "summa")
 
 # the pipeline strategy's schedule axis — must match the executor registry
 # (parallel/schedules/runtime.SCHEDULE_NAMES; pinned by a unit test)
@@ -94,6 +94,8 @@ class Projection:
     limit: str
     iterations: float
     phases: dict = field(default_factory=dict)
+    p2r: int = 1                 # model-grid rows (summa; p2 = p2r·p2c)
+    p2c: int = 1                 # model-grid cols (summa)
 
     @property
     def comm_s(self) -> float:
@@ -313,14 +315,41 @@ def _pipeline_terms_bcast(T: StatTable, p, shape) -> tuple:
 # The Table-3 math, once, broadcast-capable
 # ---------------------------------------------------------------------------
 
-def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
-          p, p1, p2, p2_eff, B) -> dict:
+def _balanced_divisor(n: int) -> int:
+    """Largest divisor of n that is ≤ √n — the row extent of the most
+    balanced (r, c) grid with r·c = n and r ≤ c."""
+    n = int(n)
+    r = 1
+    for d in range(1, int(n ** 0.5) + 1):
+        if n % d == 0:
+            r = d
+    return r
+
+
+def _summa_row_level(sysm: SystemModel):
+    """Interconnect level pricing the SUMMA row dimension (weight-panel
+    ring). A machine description may expose a distinct second model hop as
+    a "model2" level (ClusterSpec 2D grids); absent that, both grid dims
+    ride the model interconnect. NOTE: ``SystemModel.level`` falls back to
+    the LAST (slowest) level for unknown names, so the scan here must be
+    explicit — a blind ``level("model2")`` would price the row ring at
+    pod/DCI speed."""
+    for name, lvl in sysm.levels:
+        if name == "model2":
+            return lvl
+    return sysm.level("model")
+
+
+def _eval_row(T: StatTable, strategy: str, cfg: OracleConfig,
+              sysm: SystemModel, p, p1, p2, p2_eff, B,
+              p2r=None, p2c=None) -> dict:
     """Evaluate one strategy's Table-3 row at (p, p1, p2, B).
 
     Every argument may be a python scalar (per-point ``project()``) or a
     numpy array of lattice points (sweep engine); all arithmetic broadcasts.
-    Returns per-epoch seconds/bytes arrays: comp, ge, fb, halo, p2p, mem,
-    feasible, iters.
+    ``p2r``/``p2c`` factor the model width into a (row × col) grid — only
+    the "summa" row reads them. Returns per-epoch seconds/bytes arrays:
+    comp, ge, fb, halo, p2p, mem, feasible, iters.
     """
     delta, gamma = cfg.delta, cfg.gamma
     D = cfg.D
@@ -520,7 +549,82 @@ def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
         out["mem"] = mem(act_div=p1, w_div=p2, dp=p1) + zeros
         return out
 
+    if strategy == "summa":  # beyond-paper: 2D (row × col) tensor grid
+        if T.minF is None or T.minC is None:
+            raise ValueError("summa: no splittable layers")
+        r = np.asarray(1 if p2r is None else p2r, np.float64)
+        c = np.asarray(1 if p2c is None else p2c, np.float64)
+        out["feasible"] = ((p1 * p2 == p) & (r * c == p2)
+                           & (c <= T.minF) & (r <= T.minC) & (p1 <= B))
+        out["comp"] = D / p * (FW + BW) + iters * (
+            WU / p if cfg.zero1 else WU / p2)
+        # SUMMA per layer (parallel/summa.py): fw allgathers the activation
+        # blocks along the COLUMN ring ((c−1) steps of B·y_l·δ/p each) and
+        # circulates the weight panels along the ROW ring ((r−1) steps of
+        # w_l·δ/p2 each); backward replays both for dgrad and wgrad — 3
+        # passes total, the same 3× as the paper's filter/channel row. At
+        # r = 1 this degenerates bit-for-bit to fb_term(p2) plus a zero row
+        # term, i.e. the 1D filter split it contains.
+        lvl_row = _summa_row_level(sysm)
+        act = (lvl_model.alpha * (T.n - 1)
+               + B * delta * lvl_model.beta * phi_m / p * T.y_head_sum)
+        wgt = (lvl_row.alpha * (T.n - 1)
+               + delta * lvl_row.beta * phi_m / np.maximum(p2, 1.0) * T.W)
+        out["fb"] = 3.0 * iters * ((c - 1.0) * act + (r - 1.0) * wgt)
+        out["ge"] = exposed(
+            iters * lvl_data.allreduce_v(p1, Wbytes / p2, phi=phi_ge),
+            D / p * BW, sig_d)
+        # activations: batch over p1, sequence over r; the column shard of
+        # the hidden dim is transient (the fw allgather rematerializes the
+        # full hidden block), so the resident residual divides by p1·r only
+        # — the seq_parallel switch (p2_eff = c) claims the rest.
+        out["mem"] = mem(act_div=p1 * r, w_div=p2, dp=p1) + zeros
+        return out
+
     raise ValueError(strategy)
+
+
+def _eval(T: StatTable, strategy: str, cfg: OracleConfig, sysm: SystemModel,
+          p, p1, p2, p2_eff, B, p2r=None, p2c=None) -> dict:
+    """``_eval_row`` plus the cross-cutting sequence-parallel communication
+    term (DESIGN.md §14).
+
+    ``seq_parallel`` shards the residual stream over the model width
+    p2_eff; that is not free: each sharded block allgathers the residual
+    before consuming it and reduce-scatters it back after producing it
+    (Korthikanti et al. — the collectives replace, not join, the identity
+    pass-through). Per layer l (< G, the head keeps its own collective)
+    that is one allgather + one reduce-scatter in forward and the mirrored
+    pair in backward — 4 ring collectives of B·y_l·δ/p per step:
+
+        4 · iters · (p2_eff−1) · (α_m·(G−1) + B·δ·β_m·φ_m/p · Σ y_l)
+
+    overlap-discounted by σ(model) against the forward-compute window
+    (the gather streams ahead of each block; backward's window is already
+    claimed by the gradient exchange). With an ideal interconnect
+    (α→0, bandwidth→∞ i.e. β→0) the term vanishes and the old memory-only
+    switch behavior is recovered exactly (test_oracle_properties.py).
+    """
+    out = _eval_row(T, strategy, cfg, sysm, p, p1, p2, p2_eff, B,
+                    p2r=p2r, p2c=p2c)
+    # serial has no model axis; pipeline's projection is memory-switch-
+    # invariant by design (its stage memory model ignores the switches, and
+    # the executor deploys none — autotune.deployable_switch_mask)
+    if not cfg.seq_parallel or strategy in ("serial", "pipeline"):
+        return out
+    p_ = np.asarray(p, np.float64)
+    pe = np.asarray(p2_eff, np.float64)
+    B_ = np.asarray(B, np.float64)
+    iters = out["iters"]
+    lvl_model = sysm.level("model")
+    phi_m = cfg.phi_for("model", 1.0)
+    full = np.where(pe > 1, 4.0 * iters * (pe - 1.0) * (
+        lvl_model.alpha * (T.n - 1)
+        + B_ * cfg.delta * lvl_model.beta * phi_m / p_ * T.y_head_sum), 0.0)
+    window = cfg.D / p_ * T.FW
+    sig_m = cfg.sigma_for("model")
+    out["fb"] = out["fb"] + full - sig_m * np.minimum(window, full)
+    return out
 
 
 def _limit_str(strategy: str, T: StatTable, B, feasible: bool,
@@ -547,20 +651,34 @@ def _limit_str(strategy: str, T: StatTable, B, feasible: bool,
     if strategy == "ep":
         return ("no MoE layers" if T.n_moe == 0
                 else f"p2 <= n_experts ({T.moe_minF})")
+    if strategy == "summa":
+        return (f"p2 = p2r·p2c, p2r <= min C_l ({T.minC}), "
+                f"p2c <= min F_l ({T.minF})")
     return ""
 
 
 def project(strategy: str, stats: list[LayerStat], tm: TimeModel,
             cfg: OracleConfig, p: int, p1: int | None = None,
-            p2: int | None = None) -> Projection:
-    """One Table-3 row evaluated at p PEs (thin wrapper over ``_eval``)."""
+            p2: int | None = None, p2r: int | None = None,
+            p2c: int | None = None) -> Projection:
+    """One Table-3 row evaluated at p PEs (thin wrapper over ``_eval``).
+
+    For "summa" the model width additionally factors into a (p2r × p2c)
+    grid; unspecified grid dims default to the most balanced factorization
+    of p2 (r ≤ c — columns shard the wider hidden/filter dimension)."""
     T = precompute(stats, tm)
     # p2_eff is derived from the CALLER's p2 (before hybrid defaulting), as
     # the seq-parallel memory switch keys on an explicitly requested width.
     p2_eff = p2 or (p if strategy in ("filter", "channel", "spatial") else 1)
-    if strategy in ("df", "ds", "ep"):
+    if strategy in ("df", "ds", "ep", "summa"):
         p1 = p1 or max(p // 16, 1)
         p2 = p2 or p // p1
+    if strategy == "summa":
+        p2r = p2r or (p2 // p2c if p2c else _balanced_divisor(p2))
+        p2c = p2c or p2 // p2r
+        # the residual stream a seq-parallel switch would shard lives on
+        # the COLUMN ring (the row dim already shards the sequence)
+        p2_eff = p2c
     if strategy == "serial":
         p, rp1, rp2 = 1, 1, 1
     elif strategy == "data":
@@ -569,13 +687,15 @@ def project(strategy: str, stats: list[LayerStat], tm: TimeModel,
         rp1, rp2 = 1, p
     else:
         rp1, rp2 = p1, p2
-    r = _eval(T, strategy, cfg, tm.system, p, p1 or 1, p2 or 1, p2_eff, cfg.B)
+    r = _eval(T, strategy, cfg, tm.system, p, p1 or 1, p2 or 1, p2_eff,
+              cfg.B, p2r=p2r, p2c=p2c)
     feasible = bool(r["feasible"])
     return Projection(strategy, int(p), int(rp1), int(rp2),
                       float(r["comp"]), float(r["ge"]), float(r["fb"]),
                       float(r["halo"]), float(r["p2p"]), float(r["mem"]),
                       feasible, _limit_str(strategy, T, cfg.B, feasible),
-                      float(r["iters"]))
+                      float(r["iters"]),
+                      p2r=int(p2r or 1), p2c=int(p2c or 1))
 
 
 def project_all(stats, tm: TimeModel, cfg: OracleConfig, p: int,

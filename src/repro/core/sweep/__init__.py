@@ -24,14 +24,11 @@ CLI (Fig-5-style scaling table):
 from __future__ import annotations
 
 import argparse
-import warnings
 from dataclasses import dataclass, replace
 
 import numpy as np
 
-from ..cluster import PHI_LEVELS, ClusterSpec, add_cluster_args
-from ..cluster import parse_phi_table as _parse_phi_table
-from ..cluster import parse_sigma_table as _parse_sigma_table
+from ..cluster import ClusterSpec, add_cluster_args
 from ..hardware import (PAPER_V100_CLUSTER, SystemModel, TPU_V5E_POD,
                        cpu_host_model)
 from ..oracle import (OracleConfig, PIPELINE_SCHEDULES, Projection,
@@ -41,6 +38,9 @@ from ..oracle import (OracleConfig, PIPELINE_SCHEDULES, Projection,
 PURE_STRATEGIES = ("serial", "data", "spatial", "pipeline", "filter",
                    "channel")
 HYBRID_STRATEGIES = ("df", "ds", "ep")
+# strategies whose model width additionally factors into a (p2r × p2c)
+# grid — an extra lattice axis on top of the p1·p2 factorization
+GRID_STRATEGIES = ("summa",)
 
 # memory-model switches swept as extra lattice axes (DESIGN.md §3/§8)
 SWITCH_NAMES = ("remat", "zero1", "zero3", "seq_parallel")
@@ -73,26 +73,6 @@ def factor_pairs(p: int) -> list[tuple[int, int]]:
                 out.append((p // d, d))
         d += 1
     return sorted(out)
-
-
-def parse_phi_table(spec: str | None):
-    """DEPRECATED shim — moved to ``repro.core.cluster.parse_phi_table``
-    (``ClusterSpec.from_cli_args`` wires the CLI flags). Same behavior."""
-    warnings.warn(
-        "repro.core.sweep.parse_phi_table moved to repro.core.cluster; "
-        "import it from there (or use ClusterSpec.from_cli_args)",
-        DeprecationWarning, stacklevel=2)
-    return _parse_phi_table(spec)
-
-
-def parse_sigma_table(spec: str | None):
-    """DEPRECATED shim — moved to ``repro.core.cluster.parse_sigma_table``
-    (``ClusterSpec.from_cli_args`` wires the CLI flags). Same behavior."""
-    warnings.warn(
-        "repro.core.sweep.parse_sigma_table moved to repro.core.cluster; "
-        "import it from there (or use ClusterSpec.from_cli_args)",
-        DeprecationWarning, stacklevel=2)
-    return _parse_sigma_table(spec)
 
 
 def parse_p_grid(spec: str) -> list[int]:
@@ -147,6 +127,10 @@ class SweepResult:
     # pipeline schedule axis (DESIGN.md §4): the schedule each pipeline row
     # was priced under ("-" for non-pipeline rows)
     schedule: np.ndarray = None  # str
+    # model-grid factorization axes (GRID_STRATEGIES, DESIGN.md §14):
+    # p2 = p2r·p2c on summa rows, 1·1 everywhere else
+    p2r: np.ndarray = None       # int
+    p2c: np.ndarray = None       # int
     mem_cap: float | None = None
 
     def __post_init__(self):
@@ -156,6 +140,10 @@ class SweepResult:
                 setattr(self, name, np.zeros(n, bool))
         if self.schedule is None:
             self.schedule = np.full(n, "-", dtype="U12")
+        if self.p2r is None:
+            self.p2r = np.ones(n, np.int64)
+        if self.p2c is None:
+            self.p2c = np.ones(n, np.int64)
 
     def __len__(self) -> int:
         return len(self.p)
@@ -197,7 +185,8 @@ class SweepResult:
             feasible=self.feasible[i], fits=self.fits[i],
             bottleneck=self.bottleneck[i], limit=self.limit[i],
             remat=self.remat[i], zero1=self.zero1[i], zero3=self.zero3[i],
-            seq_parallel=self.seq_parallel[i], schedule=self.schedule[i])
+            seq_parallel=self.seq_parallel[i], schedule=self.schedule[i],
+            p2r=self.p2r[i], p2c=self.p2c[i])
 
     def for_strategy(self, strategy: str) -> "SweepResult":
         return self.select(self.strategy == strategy)
@@ -256,7 +245,8 @@ class SweepResult:
                            float(self.comm_fb_s[i]), float(self.comm_halo_s[i]),
                            float(self.comm_p2p_s[i]), float(self.mem_bytes[i]),
                            bool(self.feasible[i]), str(self.limit[i]),
-                           float(self.iterations[i]))
+                           float(self.iterations[i]),
+                           p2r=int(self.p2r[i]), p2c=int(self.p2c[i]))
                 for i in range(len(self))]
 
     def table(self) -> str:
@@ -276,6 +266,8 @@ class SweepResult:
                 sched = str(sub.schedule[i])
                 disp = (f"pipe:{short.get(sched, sched)}"
                         if sched != "-" else str(sub.strategy[i]))
+                if str(sub.strategy[i]) in GRID_STRATEGIES:
+                    disp = f"{disp}:{int(sub.p2r[i])}x{int(sub.p2c[i])}"
                 lines.append(
                     f"{p:>6d} {disp:10s} "
                     f"{int(sub.p1[i]):>5d}x{int(sub.p2[i]):<5d} "
@@ -289,20 +281,25 @@ class SweepResult:
 
 
 def _lattice(strategy: str, p_grid, batch_of) -> tuple | None:
-    """(p, p1, p2, B) integer arrays for one strategy's slice of the lattice."""
+    """(p, p1, p2, p2r, p2c, B) integer arrays for one strategy's slice of
+    the lattice. The grid axes are 1 except for GRID_STRATEGIES, which fan
+    each (p1, p2) split over every (p2r, p2c) factorization of p2."""
     if strategy == "serial":
-        pts = [(1, 1, 1)] if 1 in p_grid else []
+        pts = [(1, 1, 1, 1, 1)] if 1 in p_grid else []
     elif strategy == "data":
-        pts = [(p, p, 1) for p in p_grid]
+        pts = [(p, p, 1, 1, 1) for p in p_grid]
     elif strategy in PURE_STRATEGIES:
-        pts = [(p, 1, p) for p in p_grid]
+        pts = [(p, 1, p, 1, 1) for p in p_grid]
+    elif strategy in GRID_STRATEGIES:
+        pts = [(p, a, b, r, c) for p in p_grid for a, b in factor_pairs(p)
+               for r, c in factor_pairs(b)]
     else:
-        pts = [(p, a, b) for p in p_grid for a, b in factor_pairs(p)]
+        pts = [(p, a, b, 1, 1) for p in p_grid for a, b in factor_pairs(p)]
     if not pts:
         return None
     arr = np.array(pts, np.int64)
     B = np.array([batch_of(int(p)) for p in arr[:, 0]], np.int64)
-    return arr[:, 0], arr[:, 1], arr[:, 2], B
+    return arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3], arr[:, 4], B
 
 
 def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
@@ -357,7 +354,8 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
     p_grid = sorted(set(int(p) for p in p_grid if int(p) >= 1))
     batch_of = batch_for_p or (lambda p: cfg.B)
     cols: dict[str, list] = {k: [] for k in
-                             ("strategy", "p", "p1", "p2", "B", "iters",
+                             ("strategy", "p", "p1", "p2", "p2r", "p2c",
+                              "B", "iters",
                               "comp", "ge", "fb", "halo", "p2p", "mem",
                               "feasible", "limit", "schedule",
                               "remat", "zero1", "zero3", "seq_parallel")}
@@ -365,9 +363,18 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
         lat = _lattice(s, p_grid, batch_of)
         if lat is None:
             continue
-        p, p1, p2, B = lat
-        p2_eff = p2 if s in HYBRID_STRATEGIES else (
-            p if s in ("filter", "channel", "spatial") else np.ones_like(p))
+        p, p1, p2, p2r, p2c, B = lat
+        # the model width the seq-parallel switch shards the residual over:
+        # the hybrids' p2, the full p for the pure model splits, and the
+        # COLUMN ring for grid strategies (rows already shard the sequence)
+        if s in GRID_STRATEGIES:
+            p2_eff = p2c
+        elif s in HYBRID_STRATEGIES:
+            p2_eff = p2
+        elif s in ("filter", "channel", "spatial"):
+            p2_eff = p
+        else:
+            p2_eff = np.ones_like(p)
         # only the pipeline strategy has a schedule axis
         for sched in (scheds if s == "pipeline" else ("-",)):
             cfg_s = cfg if sched == "-" else replace(cfg, schedule=sched)
@@ -379,7 +386,8 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
             for combo in combos:
                 cfg_c = replace(cfg_s, **dict(zip(SWITCH_NAMES, combo)))
                 try:
-                    r = _eval(T, s, cfg_c, tm.system, p, p1, p2, p2_eff, B)
+                    r = _eval(T, s, cfg_c, tm.system, p, p1, p2, p2_eff, B,
+                              p2r=p2r, p2c=p2c)
                 except ValueError:  # strategy inapplicable to this layer
                     break           # set, independent of the switch combo
                 evals.append((combo, r))
@@ -394,7 +402,8 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
             topo_ok = None
             if topo is not None:
                 topo_ok = np.broadcast_to(
-                    topo.split_mask(p, p1, p2, strategy=s), (n,)).copy()
+                    topo.split_mask(p, p1, p2, strategy=s, p2r=p2r, p2c=p2c),
+                    (n,)).copy()
                 feas &= topo_ok
             memo: dict = {}   # limit strings only vary with (B, feasible)
 
@@ -419,6 +428,8 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
                 cols["p"].append(p)
                 cols["p1"].append(p1)
                 cols["p2"].append(p2)
+                cols["p2r"].append(p2r)
+                cols["p2c"].append(p2c)
                 cols["B"].append(B)
                 cols["iters"].append(bcast(r["iters"]))
                 for k in ("comp", "ge", "fb", "halo", "p2p", "mem"):
@@ -438,7 +449,8 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
             comm_p2p_s=e, mem_bytes=e, feasible=z, fits=z,
             bottleneck=np.zeros(0, object), limit=np.zeros(0, object),
             remat=z, zero1=z, zero3=z, seq_parallel=z,
-            schedule=np.zeros(0, "U12"), mem_cap=mem_cap)
+            schedule=np.zeros(0, "U12"), p2r=np.zeros(0, int),
+            p2c=np.zeros(0, int), mem_cap=mem_cap)
     cat = {k: np.concatenate(v) for k, v in cols.items()}
     fits = (cat["mem"] <= mem_cap if mem_cap is not None
             else np.ones(len(cat["p"]), bool))
@@ -455,7 +467,8 @@ def sweep(stats, tm: TimeModel, cfg: OracleConfig, p_grid,
         feasible=cat["feasible"], fits=fits, bottleneck=bottleneck,
         limit=cat["limit"], remat=cat["remat"], zero1=cat["zero1"],
         zero3=cat["zero3"], seq_parallel=cat["seq_parallel"],
-        schedule=cat["schedule"], mem_cap=mem_cap)
+        schedule=cat["schedule"], p2r=cat["p2r"], p2c=cat["p2c"],
+        mem_cap=mem_cap)
 
 
 # ---------------------------------------------------------------------------
@@ -503,7 +516,8 @@ def _smoke() -> int:
         sched = str(res.schedule[i])
         cfg_i = cfg if sched == "-" else replace(cfg, schedule=sched)
         pr = project(str(res.strategy[i]), stats, tm, cfg_i, int(res.p[i]),
-                     p1=int(res.p1[i]), p2=int(res.p2[i]))
+                     p1=int(res.p1[i]), p2=int(res.p2[i]),
+                     p2r=int(res.p2r[i]), p2c=int(res.p2c[i]))
         ref = pr.total_s
         worst = max(worst, abs(res.total_s[i] - ref) / max(abs(ref), 1e-30))
     assert worst < 1e-9, f"sweep/scalar mismatch: {worst:.2e}"
@@ -516,6 +530,42 @@ def _smoke() -> int:
           f"({n_sched} pipeline schedules), "
           f"max rel err vs project() = {worst:.2e}")
     return 0
+
+
+def _resolve_strategies(names) -> tuple:
+    """Map CLI --strategies names onto oracle strategy names.
+
+    Accepts both the oracle spellings (STRATEGY_NAMES) and the executable
+    rules-table spellings (``parallel.strategies.list_strategies()``, e.g.
+    ``df_zero3`` → ``df`` via ``autotune.ORACLE_OF_EXEC``). Unknown names
+    raise with BOTH valid sets — previously a typo fell through to
+    ``sweep()``'s lattice loop and could silently price an empty/partial
+    lattice. The executable namespace is imported lazily: strategies.py
+    pulls in jax, and this module must stay importable with numpy only.
+    """
+    exec_names: tuple = ()
+    oracle_of_exec: dict = {}
+    if any(n not in STRATEGY_NAMES for n in names):
+        try:
+            from ..autotune import ORACLE_OF_EXEC as oracle_of_exec
+            from ...parallel.strategies import list_strategies
+            exec_names = tuple(list_strategies())
+        except Exception:  # no jax runtime: oracle spellings only
+            pass
+    out, unknown = [], []
+    for n in names:
+        if n in STRATEGY_NAMES:
+            out.append(n)
+        elif n in oracle_of_exec:
+            out.append(oracle_of_exec[n])
+        else:
+            unknown.append(n)
+    if unknown:
+        valid = sorted(set(STRATEGY_NAMES) | set(exec_names))
+        raise ValueError(
+            f"unknown strategy name(s) {unknown}; valid names: {valid}")
+    seen: set = set()
+    return tuple(n for n in out if not (n in seen or seen.add(n)))
 
 
 def main(argv=None) -> int:
@@ -545,7 +595,11 @@ def main(argv=None) -> int:
                          "original accounting (default: halo P2P and the "
                          "gradient exchange hide under compute, DESIGN.md "
                          "§10)")
-    ap.add_argument("--strategies", default=",".join(STRATEGY_NAMES))
+    ap.add_argument("--strategies", default=",".join(STRATEGY_NAMES),
+                    help="comma-separated strategy subset; oracle names "
+                         f"({'/'.join(STRATEGY_NAMES)}) or executable "
+                         "rules-table names (parallel/strategies.py); "
+                         "unknown names are rejected with the valid set")
     ap.add_argument("--schedule", default="all",
                     help="pipeline schedule axis: 'all' (default) sweeps "
                          f"{'/'.join(PIPELINE_SCHEDULES)} as extra pipeline "
@@ -578,7 +632,11 @@ def main(argv=None) -> int:
         virtual_stages=max(args.virtual_stages, 1))
     cap = (args.mem_cap_gib * 2 ** 30 if args.mem_cap_gib
            else tm.system.mem_capacity)
-    strategies = tuple(s for s in args.strategies.split(",") if s)
+    try:
+        strategies = _resolve_strategies(
+            tuple(s for s in args.strategies.split(",") if s))
+    except ValueError as e:
+        ap.error(str(e))
     res = sweep(stats, tm, cfg, p_grid, strategies, batch_for_p=batch_of,
                 mem_cap=cap, cluster=cluster,
                 schedules="all" if args.schedule == "all" else (args.schedule,))

@@ -30,6 +30,8 @@ EXEC_STRATEGY = {
     "df": "df",
     "ds": "ds",
     "ep": "ep_df",      # expert parallelism executes as the ep_df hybrid rules
+    "summa": "summa",   # 2D tensor grid: measure_step reshapes the devices
+                        # into a (data, model_r, model_c) mesh from ``grid``
     "pipeline": "pipeline",  # stage schedule (gpipe / 1F1B / interleaved):
                              # measure_step builds the stage executor
                              # (parallel/schedules), not a plain sharded
@@ -69,13 +71,18 @@ class ValidationPoint:
 
 def measure_step(model, model_cfg, batch, mesh, strategy: str,
                  seed: int = 0, segments: int = 8,
-                 schedule: str = "gpipe", virtual_stages: int = 2) -> float:
+                 schedule: str = "gpipe", virtual_stages: int = 2,
+                 grid: "tuple[int, int] | None" = None) -> float:
     """Measured per-iteration time of a real sharded train step.
 
     ``pipeline`` measures the stage executor under ``schedule`` (gpipe /
     one_f_one_b / interleaved): all p PEs become stages of a (1, p) pipe
     mesh (the paper's pure "layer" strategy) and the step runs that
     schedule with ``segments`` microbatches.
+
+    ``summa`` reshapes the same devices into a (data, model_r, model_c)
+    mesh from ``grid`` = (p2r, p2c) — the strategy's rules table routes
+    projections through parallel/summa.py on that mesh.
     """
     if strategy in EXEC_SKIP:
         raise NotImplementedError(
@@ -103,6 +110,17 @@ def measure_step(model, model_cfg, batch, mesh, strategy: str,
             schedule=schedule, virtual_stages=virtual_stages,
             attn_impl="plain")
     else:
+        if strategy == "summa":
+            if grid is None:
+                raise ValueError("summa needs grid=(p2r, p2c)")
+            from ..launch.compat import make_mesh
+            r, c = grid
+            p = int(np.prod(list(mesh.shape.values())))
+            if p % (r * c):
+                raise ValueError(f"grid {r}x{c} does not divide p={p}")
+            mesh = make_mesh((p // (r * c), r, c),
+                             ("data", "model_r", "model_c"),
+                             devices=list(np.asarray(mesh.devices).flat))
         ctx = ShardingCtx(mesh, rules)
         from ..models.transformer import TransformerLM
         from ..models.vlm import VLM
@@ -119,7 +137,8 @@ def measure_step(model, model_cfg, batch, mesh, strategy: str,
 def validate(model, model_cfg, batch, mesh, strategies, *,
              flops_per_sample: float, B: int, S: int = 128,
              oracle_cfg_kw: dict | None = None,
-             cluster=None) -> list[ValidationPoint]:
+             cluster=None,
+             grid: "tuple[int, int] | None" = None) -> list[ValidationPoint]:
     """Measure + project each strategy at p = mesh size; paper Fig. 3.
 
     ``cluster``: a (typically fitted) ClusterSpec describing PER-PE
@@ -127,6 +146,9 @@ def validate(model, model_cfg, batch, mesh, strategies, *,
     the host in place, closing the calibrate→project loop
     (``Oracle.calibrate`` → ``Oracle.validate``). Without it, the host is
     calibrated here as before.
+
+    ``grid``: (p2r, p2c) for the "summa" strategy — measured on the
+    reshaped grid mesh and projected at the matching lattice point.
     """
     import dataclasses
     stats = stats_for(model_cfg, S)
@@ -168,11 +190,16 @@ def validate(model, model_cfg, batch, mesh, strategies, *,
             cfg_s = dataclasses.replace(cfg, segments=clip_segments(
                 B, cfg.segments))
         meas = measure_step(model, model_cfg, batch, mesh, s,
-                            segments=cfg_s.segments)
+                            segments=cfg_s.segments, grid=grid)
         kw = {}
         if s in ("df", "ds", "ep"):
             kw = dict(p1=mesh.shape.get("data", 1),
                       p2=mesh.shape.get("model", 1))
+        elif s == "summa":
+            if grid is None:
+                raise ValueError("summa needs grid=(p2r, p2c)")
+            r, c = grid
+            kw = dict(p1=p // (r * c), p2=r * c, p2r=r, p2c=c)
         proj = project(s, stats, tm, cfg_s, p, **kw)
         serial = project(s, stats, tm,
                          dataclasses.replace(cfg_s, overlap=False), p, **kw)

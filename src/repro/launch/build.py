@@ -157,10 +157,13 @@ def build_cell(cfg: ArchConfig, shape_name: str, mesh, strategy: str | None = No
         # model width this mesh can realize — the plan's split (and its
         # memory claim) always matches what the rules will actually deploy
         from ..core.autotune import plan_for_arch
+        grid = (None if mesh is None or "model_r" not in mesh.shape
+                else (mesh.shape["model_r"], mesh.shape["model_c"]))
         plan = plan_for_arch(
             cfg, shape_name, mesh_device_count(mesh), system=system,
             smoke=smoke,
-            model_width=None if mesh is None else mesh.shape.get("model"))
+            model_width=None if mesh is None else mesh.shape.get("model"),
+            model_grid=grid)
     if plan is not None:
         strategy = plan.exec_strategy(shape.kind)
         if opt is None:

@@ -26,3 +26,16 @@ def make_host_mesh(n_devices: int | None = None,
     model = model or (2 if n % 2 == 0 and n > 1 else 1)
     data = n // model
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_grid_mesh(p1: int, p2r: int, p2c: int) -> jax.sharding.Mesh:
+    """(data, model_r, model_c) mesh for the 2D SUMMA strategy
+    (parallel/summa.py)."""
+    return make_mesh((p1, p2r, p2c), ("data", "model_r", "model_c"))
+
+
+def mesh_for_plan(plan) -> jax.sharding.Mesh:
+    """Shape the mesh a TunedPlan deploys on — the factored grid mesh for
+    summa plans, the usual (data, model) mesh otherwise."""
+    shape, axes = plan.mesh_spec()
+    return make_mesh(shape, axes)

@@ -235,12 +235,20 @@ class Attention:
     # -- shared projection helpers ---------------------------------------
     def _qkv(self, params, x, positions, ctx: ShardingCtx):
         c = self.cfg
-        # Megatron-SP: gather the (smaller) residual stream over the model
-        # axis once, then compute head-sharded projections locally.
-        x = ctx.constrain(x, ("batch", None, "act_embed"))
-        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        from ..parallel import summa  # lazy: nn stays import-light
+        if summa.summa_axes(ctx) and summa.qkv_ok(c, ctx.mesh, x.shape):
+            # 2D grid: SUMMA projections off the 2D-sharded residual; the
+            # act_heads/act_kv constraints below gather seq off the grid
+            # rows for the head-sharded attention core (Megatron-SP, with
+            # the gather now priced by the oracle's seq-comm term).
+            q, k, v = summa.attn_qkv(c, params, x, ctx)
+        else:
+            # Megatron-SP: gather the (smaller) residual stream over the
+            # model axis once, then compute head-sharded projections locally.
+            x = ctx.constrain(x, ("batch", None, "act_embed"))
+            q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
         if c.use_bias:
             q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
         if c.qk_norm:
@@ -256,7 +264,11 @@ class Attention:
         return q, k, v
 
     def _out(self, params, o, ctx: ShardingCtx):
-        y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+        from ..parallel import summa  # lazy: nn stays import-light
+        if summa.summa_axes(ctx) and summa.out_ok(self.cfg, ctx.mesh, o.shape):
+            y = summa.attn_out(self.cfg, params, o, ctx)
+        else:
+            y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
         if self.cfg.out_bias:
             y = y + params["bo"]
         return ctx.constrain(y, ("batch", "seq", "act_embed"))

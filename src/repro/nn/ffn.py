@@ -60,6 +60,10 @@ class FFN:
     def apply(self, params, x, ctx: ShardingCtx = NULL_CTX):
         c = self.cfg
         act = _ACTS[c.activation]
+        from ..parallel import summa  # lazy: nn stays import-light
+        if summa.summa_axes(ctx) and summa.ffn_ok(c, ctx.mesh, x.shape):
+            y = summa.ffn_apply(c, params, x, act, ctx)
+            return ctx.constrain(y, ("batch", "seq", "act_embed"))
         x = ctx.constrain(x, ("batch", None, "act_embed"))
         h = x @ params["w_in"]
         if c.use_bias:

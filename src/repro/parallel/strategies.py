@@ -77,6 +77,20 @@ STRATEGIES: dict[str, dict] = {
     "ep_df": {**_act_common(), "experts": "model", "heads": "model",
               "kv_heads": "model", "mlp": None, "embed": "data",
               "vocab": "model", "qk_rank": "model", "kv_rank": "model"},
+    # 2D (SUMMA) tensor grid: the model axis factors as model_r × model_c.
+    # seq + weight K-dims ride the rows, hidden/filter dims ride the
+    # columns → the residual stream is 2D-sharded (sequence parallelism is
+    # built in). parallel/summa.py detects this table (seq→model_r,
+    # act_embed→model_c is the opt-in marker) and routes FFN/attention
+    # projections through the explicit ppermute SUMMA matmul; on a mesh
+    # without the grid axes the table degrades to fully-replicated (safe).
+    "summa": {"batch": DP, "seq": "model_r",
+              "act_embed": "model_c", "act_mlp": "model_c",
+              "act_heads": "model_c", "act_kv": "model_c",
+              "embed": "model_r", "mlp": "model_c",
+              "heads": "model_c", "kv_heads": "model_c",
+              "conv_in": "model_r", "conv_out": "model_c",
+              "vocab": "model_c"},
     # serving: no ZeRO (weights gathered once, latency-critical), TP on model
     "serve_tp": {**_act_common(seq_parallel=False), "heads": "model",
                  "kv_heads": "model", "mlp": "model", "experts": "model",

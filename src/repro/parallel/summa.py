@@ -1,0 +1,183 @@
+"""2D (SUMMA-style) tensor parallelism over a (row × col) model grid.
+
+The 1D model strategies (filter/channel/df) shard ONE hidden dimension per
+matmul and pay a full-width collective on the other. SUMMA [van de Geijn &
+Watts '97; Xu et al. 2D tensor parallelism in ColossalAI] block-distributes
+every operand over a (r × c) grid instead, so per-device collectives shrink
+to panels: for ``y = x @ w`` with x:(B, S, K) and w:(K, N),
+
+  * x lives as (B, S/r, K/c) blocks, w as (K/r, N/c) blocks, y as
+    (B, S/r, N/c) blocks — the residual stream is 2D-sharded (seq over grid
+    rows = built-in sequence parallelism, hidden over grid columns);
+  * forward: allgather the x panels along the grid COLUMNS (full K per
+    device, c−1 hops of the small activation block), then r ring steps
+    along the grid ROWS — each step multiplies the matching K-slice of the
+    gathered x with the locally-held w panel and ``ppermute``s the panel to
+    the next row (same one-hop ring discipline as parallel/halo.py and the
+    pipeline's stage hops);
+  * backward: jax transposes the graph exactly — the allgather's transpose
+    is the reduce-scatter of the dx partials, the ppermute ring reverses,
+    so gradients are exact to accumulation order (partials accumulate in
+    fp32 via ``preferred_element_type``).
+
+The oracle prices this path as the "summa" strategy row (core/oracle.py):
+(c−1) activation-panel hops + (r−1) weight-panel hops per matmul, with the
+row hops charged at the ClusterSpec's "model2" level when the grid's second
+dim rides a slower interconnect.
+
+Deployment: the ``strategies.py`` "summa" rules table places seq on
+``model_r`` and every hidden/filter axis on ``model_c``; ``summa_axes``
+detects that table + a grid mesh, and ``nn/ffn.py`` / ``nn/attention.py``
+route their projections through ``summa_matmul`` when it applies (falling
+back to the plain GSPMD path whenever a shape does not divide the grid —
+the rules table alone is always safe to deploy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..launch.compat import shard_map
+from ..nn.module import ShardingCtx
+
+ROW_AXIS = "model_r"   # shards seq (activations) / K (weights): p2r devices
+COL_AXIS = "model_c"   # shards hidden/filter dims: p2c devices
+GRID_AXES = (ROW_AXIS, COL_AXIS)
+
+
+def summa_axes(ctx: ShardingCtx) -> tuple[str, str] | None:
+    """(row, col) mesh axis names when ``ctx`` deploys the 2D grid, else None.
+
+    Opt-in = a mesh carrying both grid axes AND the "summa" rules table
+    (the only table that puts the residual's seq dim on the grid rows and
+    its embed dim on the grid columns).
+    """
+    mesh = ctx.mesh
+    if mesh is None or ROW_AXIS not in mesh.shape or COL_AXIS not in mesh.shape:
+        return None
+    if ctx.rules.get("seq") != ROW_AXIS or ctx.rules.get("act_embed") != COL_AXIS:
+        return None
+    return GRID_AXES
+
+
+def grid_shape(mesh) -> tuple[int, int]:
+    """(r, c) extents of the model grid."""
+    return mesh.shape[ROW_AXIS], mesh.shape[COL_AXIS]
+
+
+def _dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def matmul_ok(mesh, x_shape, k: int, n: int) -> bool:
+    """True when summa_matmul's shard_map specs divide (B, S, k) @ (k, n)
+    exactly — callers fall back to the plain GSPMD path otherwise."""
+    r, c = grid_shape(mesh)
+    dp = 1
+    for a in _dp_axes(mesh):
+        dp *= mesh.shape[a]
+    return (x_shape[0] % dp == 0 and x_shape[1] % r == 0
+            and k % (r * c) == 0 and n % c == 0)
+
+
+def summa_matmul(x, w, mesh, *, bias=None, accum_dtype=jnp.float32):
+    """``x @ w (+ bias)`` executed as SUMMA on the model grid.
+
+    x: (B, S, K) sharded P(dp, model_r, model_c); w: (K, N) sharded
+    P(model_r, model_c) — GSPMD reshards at entry when the stored layout
+    differs (e.g. FFN's w_out, stored transposed by the rules table).
+    Returns (B, S, N) sharded P(dp, model_r, model_c).
+    """
+    r, c = grid_shape(mesh)
+    K = x.shape[-1]
+    Kr = K // r
+    dp = _dp_axes(mesh) or None
+    io = P(dp, ROW_AXIS, COL_AXIS)
+    perm = [(i, (i + 1) % r) for i in range(r)]
+
+    def local(xl, wl):
+        # 1. gather the activation panels along the grid columns: full K
+        #    per device, blocks concatenated in col order (= K order).
+        xf = jax.lax.all_gather(xl, COL_AXIS, axis=2, tiled=True)
+        # 2. ring-broadcast the weight panels along the grid rows. After t
+        #    shifts of i→i+1, row j holds panel (j − t) mod r; each step
+        #    contracts that panel with its K-slice of the gathered x.
+        row = jax.lax.axis_index(ROW_AXIS)
+        acc = jnp.zeros(xl.shape[:2] + (wl.shape[1],), accum_dtype)
+        panel = wl
+        for t in range(r):
+            src = (row - t) % r
+            xs = jax.lax.dynamic_slice_in_dim(xf, src * Kr, Kr, axis=2)
+            acc = acc + jnp.einsum("bsk,kn->bsn", xs, panel,
+                                   preferred_element_type=accum_dtype)
+            if t + 1 < r:
+                panel = jax.lax.ppermute(panel, ROW_AXIS, perm)
+        return acc.astype(x.dtype)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(io, P(ROW_AXIS, COL_AXIS)),
+                   out_specs=io, check_vma=False)
+    y = fn(x, w)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Layer entry points (lazily imported by nn/ffn.py and nn/attention.py)
+# ---------------------------------------------------------------------------
+
+def ffn_ok(cfg, mesh, x_shape) -> bool:
+    return (matmul_ok(mesh, x_shape, cfg.d_model, cfg.d_ff)
+            and matmul_ok(mesh, x_shape, cfg.d_ff, cfg.d_model))
+
+
+def ffn_apply(cfg, params, x, act, ctx: ShardingCtx):
+    """Dense FFN body on the grid. The first matmul's output blocks are
+    exactly the second's input blocks, so the chain needs no resharding."""
+    mesh = ctx.mesh
+    h = summa_matmul(x, params["w_in"], mesh,
+                     bias=params.get("b_in") if cfg.use_bias else None)
+    h = act(h)
+    if cfg.glu:
+        h = h * summa_matmul(x, params["w_gate"], mesh)
+    return summa_matmul(h, params["w_out"], mesh,
+                        bias=params.get("b_out") if cfg.use_bias else None)
+
+
+def qkv_ok(cfg, mesh, x_shape) -> bool:
+    r, c = grid_shape(mesh)
+    return (matmul_ok(mesh, x_shape, cfg.d_model, cfg.q_dim)
+            and cfg.kv_dim % c == 0
+            and cfg.n_heads % c == 0 and cfg.n_kv_heads % c == 0)
+
+
+def attn_qkv(cfg, params, x, ctx: ShardingCtx):
+    """q/k/v projections on the grid: (B, S, D) → (B, S, H, head_dim).
+
+    The head axes flatten into the matmul's N dim (c | n_heads is gated by
+    ``qkv_ok`` so the un-flatten is shard-local); bias/norm/rope stay in
+    the caller."""
+    mesh = ctx.mesh
+    B, S, D = x.shape
+    q = summa_matmul(x, params["wq"].reshape(D, cfg.q_dim), mesh)
+    k = summa_matmul(x, params["wk"].reshape(D, cfg.kv_dim), mesh)
+    v = summa_matmul(x, params["wv"].reshape(D, cfg.kv_dim), mesh)
+    return (q.reshape(B, S, cfg.n_heads, cfg.head_dim),
+            k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+            v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim))
+
+
+def out_ok(cfg, mesh, o_shape) -> bool:
+    return matmul_ok(mesh, o_shape, cfg.q_dim, cfg.d_model)
+
+
+def attn_out(cfg, params, o, ctx: ShardingCtx):
+    """Output projection: (B, S, H, head_dim) → (B, S, D) 2D-residual.
+
+    Entering the shard_map re-scatters seq onto the grid rows — the
+    reduce-scatter half of the sequence-parallel pair the oracle's
+    seq-comm term prices."""
+    B, S = o.shape[:2]
+    wo = params["wo"].reshape(cfg.q_dim, cfg.d_model)
+    return summa_matmul(o.reshape(B, S, cfg.q_dim), wo, ctx.mesh)

@@ -8,11 +8,10 @@ Pins the ISSUE-5 acceptance surface:
     vs the unconstrained one,
   * ``ClusterSpec.fitted_from`` round-trips synthetic measurements (α/β
     recovered by the Hockney fit, φ/σ exactly),
-  * the deduplicated CLI wiring (ClusterSpec.from_cli_args) and the
-    deprecation shims left behind in sweep.
+  * the deduplicated CLI wiring (ClusterSpec.from_cli_args); the PR-5
+    sweep.parse_*_table deprecation shims are retired for good.
 """
 import argparse
-import warnings
 
 import numpy as np
 import pytest
@@ -114,9 +113,17 @@ def test_sweep_prunes_topology_infeasible_splits():
     assert "topology" in str(sp.limit[0])
     assert free.select(free.strategy == "spatial").feasible.any()
     # and the surviving ring widths are exactly the torus divisors —
-    # except pipeline, whose stage chain may snake across dims
-    ok = res.select(res.ok & (res.strategy != "pipeline"))
+    # except pipeline (stage chain may snake across dims) and summa, whose
+    # (r × c) grid legitimately embeds its two rings in two DISTINCT dims
+    ok = res.select(res.ok & (res.strategy != "pipeline")
+                    & (res.strategy != "summa"))
     assert set(np.unique(ok.p2)) <= {1, 2, 4}
+    sm = res.select(res.ok & (res.strategy == "summa"))
+    assert 8 in sm.p2                     # the 4×2 grid fills the torus
+    for r_, c_ in zip(sm.p2r, sm.p2c):
+        r_, c_ = int(r_), int(c_)
+        assert (4 % r_ == 0 and 2 % c_ == 0) \
+            or (2 % r_ == 0 and 4 % c_ == 0), (r_, c_)
     pipe = res.select(res.ok & (res.strategy == "pipeline"))
     assert 8 in pipe.p2                   # the chain exemption is real
     # the α–β numbers themselves are untouched — only feasibility moved
@@ -125,32 +132,53 @@ def test_sweep_prunes_topology_infeasible_splits():
 
 def test_topology_changes_the_chosen_plan_pinned():
     """Acceptance pin: a topology-constrained ClusterSpec provably changes
-    the tuner's plan vs the unconstrained one."""
+    the tuner's plan vs the unconstrained one (1D strategies — summa is
+    excluded here because its 2D grid legitimately EMBEDS in the torus,
+    which the second half pins)."""
+    from repro.core.autotune import DEPLOYABLE_STRATEGIES
+    no_summa = tuple(s for s in DEPLOYABLE_STRATEGIES if s != "summa")
     stats = stats_for(CosmoFlowConfig(img=128))
     cfg = OracleConfig(B=2, D=1584)
-    free = autotune(stats, TM, cfg, 8, fallback="ds", allow_pipeline=False)
+    free = autotune(stats, TM, cfg, 8, fallback="ds", allow_pipeline=False,
+                    strategies=no_summa)
     assert (free.strategy, free.p2) == ("spatial", 8)   # test_autotune pin
     cluster = ClusterSpec.from_system(
         PAPER_V100_CLUSTER, topology=Torus((4, 2)))
     bound = autotune(stats, TM, cfg, 8, fallback="ds", allow_pipeline=False,
-                     cluster=cluster)
+                     cluster=cluster, strategies=no_summa)
     assert bound.feasible
     assert (bound.strategy, bound.p2) != (free.strategy, free.p2)
     assert bound.strategy == "ds" and bound.p2 in (2, 4)
+    # summa's (r × c) grid rides TWO torus dims, so the same constraint
+    # does NOT displace it: the full-set winner keeps its plan, grid
+    # embedded with each ring in its own dim
+    free_2d = autotune(stats, TM, cfg, 8, fallback="ds",
+                       allow_pipeline=False)
+    bound_2d = autotune(stats, TM, cfg, 8, fallback="ds",
+                        allow_pipeline=False, cluster=cluster)
+    assert free_2d.strategy == "summa" and bound_2d == free_2d
     # the same constraint through the session facade
     ses = Oracle("cosmoflow", "train_4k", cluster, batch=2, dataset=1584,
                  mem_cap=TM.system.mem_capacity)
-    assert ses.tune(8).p2 in (1, 2, 4)
+    plan = ses.tune(8)
+    assert plan.strategy == "summa" and (plan.p2r, plan.p2c) == (4, 1)
 
 
 def test_exhausted_model_dims_force_pure_data():
-    """resnet50 @ p=1024 tunes to df (512×2) unconstrained (test_autotune
-    pin); a torus with no model-capable dim must fall back to pure DP."""
+    """resnet50 @ p=1024 tunes to df (512×2) among the 1D strategies
+    (test_autotune pin; the full set now prefers a summa grid); a torus
+    with no model-capable dim must fall back to pure DP — summa included,
+    since BOTH its rings need a model dim."""
+    from repro.core.autotune import DEPLOYABLE_STRATEGIES
+    no_summa = tuple(s for s in DEPLOYABLE_STRATEGIES if s != "summa")
     stats = stats_for(RESNET50)
     cfg = OracleConfig(B=2048, D=2048)
     free = autotune(stats, TM, cfg, 1024, fallback="data",
-                    allow_pipeline=False)
+                    allow_pipeline=False, strategies=no_summa)
     assert (free.strategy, free.p1, free.p2) == ("df", 512, 2)
+    full = autotune(stats, TM, cfg, 1024, fallback="data",
+                    allow_pipeline=False)
+    assert full.strategy == "summa" and full.total_s <= free.total_s
     cluster = ClusterSpec.from_system(
         PAPER_V100_CLUSTER, topology=Torus((1024,), model_dims=()))
     bound = autotune(stats, TM, cfg, 1024, fallback="data",
@@ -316,19 +344,16 @@ def test_both_clis_share_the_cluster_flags():
         src = open(find_spec(name).origin).read()
         assert "add_cluster_args(ap" in src, name
         assert "ClusterSpec.from_cli_args" in src, name
-        # the copy-pasted table parsers are gone (only the shims remain in
-        # sweep; autotune imports nothing of them)
+        # the copy-pasted table parsers are gone for good (no shims either)
         assert "def _parse_level_table" not in src, name
 
 
-def test_sweep_shims_warn_but_behave():
-    from repro.core.sweep import parse_phi_table as shim_phi
-    from repro.core.sweep import parse_sigma_table as shim_sigma
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        assert shim_phi("data=2.0") == parse_phi_table("data=2.0")
-        assert shim_sigma("model=0.5") == parse_sigma_table("model=0.5")
-    assert sum(issubclass(x.category, DeprecationWarning) for x in w) == 2
+def test_sweep_shims_are_retired():
+    """The PR-5 transition shims are gone: core.sweep no longer exports the
+    parser names at all — core.cluster is the one home."""
+    from repro.core import sweep as sweep_mod
+    for name in ("parse_phi_table", "parse_sigma_table"):
+        assert not hasattr(sweep_mod, name), name
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,11 @@ def _weak(p, per_pe=2.0):
 # regression pins: paper-consistent winners (Table 3 / Fig. 5)
 # ---------------------------------------------------------------------------
 
+# the paper's Table-3/Fig-5 strategy set — summa postdates it, so the
+# historical pins run with it excluded; the 2D winners get their own pins
+NO_SUMMA = tuple(s for s in DEPLOYABLE_STRATEGIES if s != "summa")
+
+
 @pytest.mark.parametrize("p,want_strategy,want_split", [
     (8, "data", (8, 1)),        # Table 3: data wins while GE is cheap
     (64, "data", (64, 1)),
@@ -40,11 +45,29 @@ def test_autotune_resnet50_pins(p, want_strategy, want_split):
     # CNN trunks cannot stack uniform stages, so the realistic call bars
     # pipeline exactly as plan_for_arch does for cnn-family archs
     plan = autotune(stats_for(RESNET50), TM, _weak(p), p, mem_cap=CAP,
-                    fallback="data", allow_pipeline=False)
+                    fallback="data", allow_pipeline=False,
+                    strategies=NO_SUMMA)
     assert plan.feasible and plan.source == "sweep"
     assert plan.strategy == want_strategy
     assert (plan.p1, plan.p2) == want_split
     assert plan.p1 * plan.p2 == p
+
+
+@pytest.mark.parametrize("p,want,want_grid", [
+    (8, "data", None),            # GE still cheap: the grid can't beat DP
+    (64, "data", None),
+    (1024, "summa", (2, 2)),      # past the crossover the 2D grid's panel
+])                                # collectives undercut df's full-width fb
+def test_autotune_resnet50_2d_pins(p, want, want_grid):
+    """ISSUE-9 regression pins: with the full strategy set the tuner keeps
+    data while it wins and hands the large-p regime to a summa grid."""
+    plan = autotune(stats_for(RESNET50), TM, _weak(p), p, mem_cap=CAP,
+                    fallback="data", allow_pipeline=False)
+    assert plan.feasible and plan.strategy == want, plan.describe()
+    if want_grid is not None:
+        assert (plan.p2r, plan.p2c) == want_grid, plan.describe()
+        assert plan.mesh_spec() == ((plan.p1,) + want_grid,
+                                    ("data", "model_r", "model_c"))
 
 
 @pytest.mark.parametrize("p,want_strategy", [
@@ -61,7 +84,8 @@ def test_autotune_cosmoflow_pins(p, want_strategy):
     for overlap in (False, True):
         cfg = OracleConfig(B=B, D=max(1584, B), overlap=overlap)
         plan = autotune(stats_for(CosmoFlowConfig(img=128)), TM, cfg, p,
-                        mem_cap=CAP, fallback="ds", allow_pipeline=False)
+                        mem_cap=CAP, fallback="ds", allow_pipeline=False,
+                        strategies=NO_SUMMA)
         assert plan.feasible, plan
         assert plan.strategy == want_strategy, (overlap, plan.describe())
         assert plan.p1 * plan.p2 == p

@@ -17,7 +17,8 @@ import pytest
 from repro.core import (OracleConfig, PAPER_V100_CLUSTER, TimeModel, project,
                         stats_for)
 from repro.core.oracle import SIGMA_DEFAULTS
-from repro.core.sweep import parse_sigma_table, sweep
+from repro.core.cluster import parse_sigma_table
+from repro.core.sweep import sweep
 from repro.models.cnn import RESNET50, CosmoFlowConfig, VGGConfig
 
 TM = TimeModel(PAPER_V100_CLUSTER)

@@ -162,6 +162,34 @@ def test_remat_and_zero3_reduce_memory():
     assert zero3 < remat
 
 
+def test_seq_parallel_comm_charged_and_ideal_interconnect_recovers():
+    """ISSUE-9 satellite: seq_parallel is no longer a free memory switch.
+    On a real system each residual-sharded block pays 4 ring collectives
+    per step (allgather in, reduce-scatter out, mirrored in backward),
+    σ-overlapped against the forward window — so fb comm and the total
+    strictly grow while memory still shrinks. With an ideal interconnect
+    (α = β = 0) the term vanishes and the old memory-only totals are
+    recovered exactly."""
+    tm = TimeModel(SYS)
+    cfg, cfg_sp = mk_cfg(), mk_cfg(seq_parallel=True)
+    lattice = (("filter", {}), ("df", dict(p1=4, p2=4)),
+               ("summa", dict(p1=2, p2=8, p2r=2, p2c=4)))
+    for s, kw in lattice:
+        base = project(s, STATS, tm, cfg, 16, **kw)
+        sp = project(s, STATS, tm, cfg_sp, 16, **kw)
+        assert base.feasible and sp.feasible, s
+        assert sp.mem_bytes < base.mem_bytes, s       # the switch still pays
+        assert sp.comm_fb_s > base.comm_fb_s, s       # ...but comm is charged
+        assert sp.total_s > base.total_s, s
+    tmi = TimeModel(cpu_host_model(alpha=0.0, beta=0.0, flops=1e12))
+    for s, kw in lattice:
+        base = project(s, STATS, tmi, cfg, 16, **kw)
+        sp = project(s, STATS, tmi, cfg_sp, 16, **kw)
+        assert sp.comm_fb_s == base.comm_fb_s, s
+        assert sp.total_s == base.total_s, s
+        assert sp.mem_bytes < base.mem_bytes, s
+
+
 def test_gradient_compression_quantization_error_bounded(key=None):
     import jax, jax.numpy as jnp
     from repro.optim.compress import dequantize_int8, quantize_int8

@@ -53,7 +53,8 @@ def test_sweep_matches_scalar_project_everywhere(case):
               "comm_p2p_s", "mem_bytes")
     for i in range(len(res)):
         pr = project(str(res.strategy[i]), stats, TM, cfg, int(res.p[i]),
-                     p1=int(res.p1[i]), p2=int(res.p2[i]))
+                     p1=int(res.p1[i]), p2=int(res.p2[i]),
+                     p2r=int(res.p2r[i]), p2c=int(res.p2c[i]))
         assert bool(res.feasible[i]) == pr.feasible, (case, i)
         assert str(res.limit[i]) == pr.limit, (case, i)
         for f in fields:
@@ -70,6 +71,34 @@ def test_sweep_covers_all_strategies_and_all_splits():
     assert set(res.strategy) == set(STRATEGY_NAMES) - {"serial"}
     df = res.for_strategy("df")
     assert sorted(zip(df.p1, df.p2)) == factor_pairs(12)
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_sweep_grid_and_seq_comm_parity(case):
+    """ISSUE-9 satellite: the sweep↔scalar parity extends to the new
+    lattice axes — (p2r, p2c) grid factorizations of the summa rows and
+    the seq-parallel comm term of every row — at ≤1e-12 relative."""
+    mk_stats, cfg = CASES[case]
+    import dataclasses
+    cfg_sp = dataclasses.replace(cfg, seq_parallel=True)
+    stats = mk_stats()
+    res = sweep(stats, TM, cfg_sp, [8, 12, 64],
+                mem_cap=TM.system.mem_capacity)
+    # summa fans over EVERY (p2r, p2c) factorization of every p2 | p
+    sm = res.for_strategy("summa")
+    got = {(int(a), int(b), int(c))
+           for a, b, c in zip(sm.p2, sm.p2r, sm.p2c)}
+    for p2 in {int(v) for v in sm.p2}:
+        for r_, c_ in factor_pairs(p2):
+            assert (p2, r_, c_) in got, (p2, r_, c_)
+    rng = np.random.default_rng(0)
+    for i in rng.choice(len(res), size=min(len(res), 200), replace=False):
+        pr = project(str(res.strategy[i]), stats, TM, cfg_sp, int(res.p[i]),
+                     p1=int(res.p1[i]), p2=int(res.p2[i]),
+                     p2r=int(res.p2r[i]), p2c=int(res.p2c[i]))
+        got_t, want_t = float(res.total_s[i]), pr.total_s
+        assert abs(got_t - want_t) <= 1e-12 * max(abs(want_t), 1e-30), \
+            (case, str(res.strategy[i]), int(res.p[i]), got_t, want_t)
 
 
 def test_weak_scaling_batch_per_point():
@@ -185,7 +214,7 @@ def test_advise_matches_scalar_ranking():
     assert totals == sorted(totals)
     for r in rec.ranked:
         pr = project(r.strategy, stats_for(RESNET50), TM, cfg, r.p,
-                     p1=r.p1, p2=r.p2)
+                     p1=r.p1, p2=r.p2, p2r=r.p2r, p2c=r.p2c)
         assert np.isclose(r.total_s, pr.total_s, rtol=1e-12)
 
 
