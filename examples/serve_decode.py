@@ -1,7 +1,11 @@
-"""Batched serving example: prefill + greedy decode with KV caches.
+"""Serving example: continuous batching through the paged KV cache.
 
-Uses the reduced qwen3 config and both KV-cache layouts (classic per-head vs
-sequence-sharded flash-decoding) to show the serving path end-to-end.
+Replays a small synthetic trace through the engine (`repro.serve.Engine`
+via the `launch/serve.py` CLI) under both serving rules tables — classic
+per-head KV sharding (`serve_tp`) and the sequence-sharded
+flash-decoding layout (`serve_seqkv`) — on the reduced qwen3 config.
+Both runs emit identical tokens: the cache layout is invisible to the
+math (tests/test_serve.py pins this against a dense solo decode).
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -13,12 +17,14 @@ from repro.launch.serve import main as serve_main
 
 
 def main():
-    print("--- classic per-head KV cache ---")
-    serve_main(["--arch", "qwen3-32b", "--smoke", "--batch", "4",
-                "--prompt-len", "32", "--gen", "16"])
-    print("--- sequence-sharded (flash-decoding) KV cache ---")
-    serve_main(["--arch", "qwen3-32b", "--smoke", "--batch", "4",
-                "--prompt-len", "32", "--gen", "16", "--kv-shards", "2",
+    print("--- serve_tp: classic per-head KV cache ---")
+    serve_main(["--arch", "qwen3-32b", "--smoke", "--max-batch", "4",
+                "--requests", "6", "--rate", "50", "--prompt-len", "32",
+                "--gen", "16", "--closed-loop"])
+    print("--- serve_seqkv: sequence-sharded (flash-decoding) KV cache ---")
+    serve_main(["--arch", "qwen3-32b", "--smoke", "--max-batch", "4",
+                "--requests", "6", "--rate", "50", "--prompt-len", "32",
+                "--gen", "16", "--closed-loop", "--kv-shards", "2",
                 "--strategy", "serve_seqkv"])
 
 

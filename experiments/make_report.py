@@ -419,6 +419,58 @@ def tensor2d_section(here: pathlib.Path) -> str:
     return "\n".join(out)
 
 
+SERVE_HDR = ("| strategy | kv shards | oracle tok/s | oracle p99 ms |"
+             " measured tok/s | measured p50 ms |\n|---|---|---|---|---|---|")
+
+
+def serving_section(here: pathlib.Path) -> str:
+    """Serving oracle rows vs the measured continuous-batching engine.
+
+    Reads the artifact written by the serving smoke
+    (``python tests/helpers/multidevice_checks.py serving_validation
+    --write experiments/serving_validation.json`` — scripts/check.sh runs
+    it with retries).
+    """
+    out = ["### Serving validation (oracle winner vs measured winner)", "",
+           "ISSUE 10: the continuous-batching engine (`serve/engine.py`) "
+           "replays one Poisson trace through the paged KV cache under "
+           "both serving rules tables on a 2-device host mesh — `serve_tp` "
+           "(KV sharded over heads, 2 collectives/layer) vs `serve_seqkv` "
+           "(KV sharded over the cache span, 3 collectives/layer for the "
+           "LSE merge). The check pins two things: every request's tokens "
+           "are bit-exact vs a dense single-device greedy reference (the "
+           "paged gather/scatter and batch joins/evictions are invisible "
+           "to the math), and the serving oracle's throughput winner "
+           "(`serve/oracle.py`, M/D/1 on priced prefill/decode steps) is "
+           "the measured winner. Absolute tok/s differ wildly — the "
+           "oracle prices the machine description, the measurement eats "
+           "host dispatch overhead — but the RANKING is the oracle's "
+           "product, same as the training validations above.", ""]
+    art = here / "serving_validation.json"
+    if not art.exists():
+        out.append("_no serving validation artifact yet — run "
+                   "`scripts/check.sh` (or the `serving_validation` "
+                   "multidevice check with `--write`)_")
+        return "\n".join(out)
+    rec = json.loads(art.read_text())
+    tr = rec["traffic"]
+    out += [f"Model `{rec['model']}`, p2={rec['p2']}, "
+            f"max_len={rec['max_len']}, traffic λ={tr['rate']}/s, "
+            f"prompt={tr['prompt_len']}, gen={tr['gen_len']}, "
+            f"{tr['requests']} requests:", "", SERVE_HDR]
+    for s, orc in rec["oracle"].items():
+        ms = rec["measured"][s]
+        kv = rec["p2"] if s == "serve_seqkv" else 1
+        out.append(f"| {s} | {kv} | {orc['tok_per_s']:,.0f} | "
+                   f"{orc['latency_p99_s'] * 1e3:,.2f} | "
+                   f"{ms['tok_per_s']:,.1f} | "
+                   f"{ms['latency_p50_s'] * 1e3:,.1f} |")
+    out += ["", f"Oracle winner: **{rec['oracle_winner']}** — measured "
+            f"winner: **{rec['measured_winner']}**; tokens bit-exact vs "
+            f"dense reference: **{rec['tokens_bit_exact_vs_dense']}**."]
+    return "\n".join(out)
+
+
 def cluster_section(here: pathlib.Path) -> str:
     """Fitted ClusterSpec (α/β, φ, σ per interconnect level + residuals).
 
@@ -572,6 +624,8 @@ def main():
                       "### Cluster calibration")
     t = ensure_marker(t, "### 2D tensor validation",
                       "### Cluster calibration")
+    t = ensure_marker(t, "### Serving validation",
+                      "### Cluster calibration")
     t = ensure_marker(t, "### Kernel autotune",
                       "### Per-cell observations")
     recs = load_dryrun(here)
@@ -591,7 +645,9 @@ def main():
     t = replace_between(t, "### Schedule validation",
                         "### 2D tensor validation", schedule_section(here))
     t = replace_between(t, "### 2D tensor validation",
-                        "### Cluster calibration", tensor2d_section(here))
+                        "### Serving validation", tensor2d_section(here))
+    t = replace_between(t, "### Serving validation",
+                        "### Cluster calibration", serving_section(here))
     t = replace_between(t, "### Cluster calibration",
                         "### Kernel autotune", cluster_section(here))
     t = replace_between(t, "### Kernel autotune",
@@ -599,7 +655,7 @@ def main():
     exp.write_text(t)
     print(f"refreshed: {n_base} baseline + {n_opt} variant dry-run cells "
           f"+ oracle sweep / auto-tuner / cross-check / overlap / pipeline "
-          f"/ schedule / cluster-fit / kernel-tune tables")
+          f"/ schedule / serving / cluster-fit / kernel-tune tables")
 
 
 if __name__ == "__main__":

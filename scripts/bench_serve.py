@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Serving-engine throughput trajectory (BENCH_serve.json).
+
+Replays one synthetic Poisson trace (serve/traffic.py) through the
+continuous-batching engine closed-loop on the host backend and records
+µs-per-generated-token at decode-batch widths 1 and 4 — the width-4 row
+is the continuous-batching win the engine exists for, and both rows are
+a committed perf trajectory: scripts/check.sh lands a fresh run in a
+scratch file and diffs it against the committed BENCH_serve.json with
+scripts/bench_compare.py (wide band — host wall-clock on a timeshared
+core is noisy; a real engine regression fails every retry).
+
+Usage:
+    python scripts/bench_serve.py                 # refresh the artifact
+    python scripts/bench_serve.py --out /tmp/x.json   # scratch run
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+ARTIFACT = os.path.join(_ROOT, "BENCH_serve.json")
+
+
+def run_rows():
+    import jax
+    import jax.numpy as jnp
+    from repro.models import LMConfig, TransformerLM
+    from repro.nn import AttentionConfig, FFNConfig
+    from repro.nn.module import NULL_CTX, tree_init
+    from repro.serve import Engine, ServeConfig, TrafficModel
+
+    cfg = LMConfig(
+        name="bench", vocab=512, d_model=64, n_layers=4,
+        attn=AttentionConfig(64, 4, 2, 16, dtype=jnp.float32),
+        ffn=FFNConfig(64, 256, dtype=jnp.float32), dtype=jnp.float32)
+    model = TransformerLM(cfg)
+    params = tree_init(model.params_spec(), jax.random.PRNGKey(0))
+    traffic = TrafficModel(rate=100.0, prompt_len=32, gen_len=16, spread=0.5)
+    trace = traffic.trace(12, cfg.vocab, seed=0)
+
+    rows = []
+    for width in (1, 4):
+        sc = ServeConfig(max_len=64, max_batch=width, block_tokens=16,
+                         prefill_chunk=16, dtype=jnp.float32)
+        eng = Engine(model, params, NULL_CTX, sc)
+        eng.run(trace, honor_arrivals=False)      # compile + warm caches
+        eng.reset()
+        rep = eng.run(trace, honor_arrivals=False)
+        assert rep.n_tokens == sum(r.max_new for r in trace), \
+            "bench replay dropped tokens"
+        rows.append((f"serve/closed_loop/batch{width}",
+                     1e6 * rep.wall_s / rep.n_tokens,
+                     f"tok_per_s={rep.tok_per_s:.1f};"
+                     f"latency_p50_s={rep.percentile(50):.4f};"
+                     f"latency_p99_s={rep.percentile(99):.4f};"
+                     f"ttft_p50_s={rep.percentile(50, 'ttft'):.4f}"))
+    return rows
+
+
+def write_artifact(rows, out: "str | None" = None) -> str:
+    rec = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "smoke": False,
+           "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                    for n, us, d in rows]}
+    path = out or ARTIFACT
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python scripts/bench_serve.py")
+    ap.add_argument("--out", default=None,
+                    help="write the artifact here instead of the committed "
+                         "BENCH_serve.json")
+    args = ap.parse_args(argv)
+    rows = run_rows()
+    for n, us, d in rows:
+        print(f"{n:32s} {us:10.1f} us/token   {d}")
+    print(f"wrote {write_artifact(rows, out=args.out)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -147,6 +147,33 @@ class Oracle:
         from .core.roofline import HardwareSpec
         return HardwareSpec.from_cluster(self.cluster)
 
+    # -- serving -------------------------------------------------------------
+
+    def serve_project(self, traffic, p: int, *, strategy: str = "serve_tp",
+                      p2: int | None = None, kv_shards: int | None = None,
+                      max_batch: int = 8, **kw):
+        """One serving row priced under ``traffic`` (a TrafficModel):
+        TTFT / latency p50/p99 and token throughput from the session's
+        machine description (serve/oracle.py, DESIGN.md §15)."""
+        from .serve.oracle import price_serving
+        p2 = p2 or p
+        kv = kv_shards if kv_shards is not None else (
+            1 if strategy == "serve_tp" else p2)
+        return price_serving(self.model_cfg, self.cluster, strategy,
+                             p // p2, p2, kv, max_batch, traffic, **kw)
+
+    def serve_sweep(self, traffic, p: int, **kw):
+        """Every (strategy, p1·p2, kv_shards, max_batch) serving row."""
+        from .serve.oracle import serve_sweep
+        return serve_sweep(self.model_cfg, self.cluster, p, traffic, **kw)
+
+    def serve_tune(self, traffic, p: int, slo_p99: float, **kw):
+        """Highest-throughput serving plan meeting the p99 SLO (ServePlan;
+        ``meets_slo=False`` + least-bad row when nothing does)."""
+        from .serve.oracle import serve_tune
+        return serve_tune(self.model_cfg, self.cluster, p, traffic,
+                          slo_p99, **kw)
+
     # -- decision ------------------------------------------------------------
 
     def tune(self, p: int, *, switches="all",
@@ -544,6 +571,30 @@ def _tune_kernels(shapes: str, out: str | None, devices: int,
     return 0
 
 
+def _serve_tune(arch: str, p: int, rate: float, prompt: int, gen: int,
+                slo_ms: float, max_len: int | None, cluster: str) -> int:
+    """--serve-tune gate: price the serving sweep and print the plan; exit
+    non-zero when no configuration meets the stated p99 SLO."""
+    from .serve.traffic import TrafficModel
+    # pricing is analytic — the FULL model config costs nothing to price
+    ses = Oracle(arch, cluster=cluster)
+    traffic = TrafficModel(rate=rate, prompt_len=prompt, gen_len=gen)
+    plan = ses.serve_tune(traffic, p, slo_ms / 1e3, max_len=max_len)
+    print(f"serving sweep: {ses.arch_cfg.name} on {ses.cluster.name}, "
+          f"p={p}, rate={rate}/s, prompt={prompt}, gen={gen}")
+    print(plan.describe())
+    shown = 0
+    for row in plan.rows:
+        if row is plan.winner or row is plan.runner_up:
+            continue
+        print("  " + row.describe())
+        shown += 1
+        if shown >= 8:
+            break
+    print(f"repro.api --serve-tune {'OK' if plan.meets_slo else 'SLO-MISS'}")
+    return 0 if plan.meets_slo else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.api",
@@ -581,7 +632,33 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=8,
                     help="virtual host device count for --smoke/--calibrate/"
                          "--chaos")
+    ap.add_argument("--serve-tune", action="store_true",
+                    help="price the serving sweep (serve/oracle.py) and "
+                         "print the cheapest plan meeting --slo-ms; exits "
+                         "1 on an SLO miss (DESIGN.md §15)")
+    ap.add_argument("--arch", default="qwen3-32b",
+                    help="--serve-tune arch (any registered config)")
+    ap.add_argument("--p", type=int, default=8,
+                    help="--serve-tune deployment size (PEs)")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="--serve-tune arrival rate, requests/s")
+    ap.add_argument("--prompt", type=int, default=512,
+                    help="--serve-tune mean prompt length")
+    ap.add_argument("--gen", type=int, default=128,
+                    help="--serve-tune generation length")
+    ap.add_argument("--slo-ms", type=float, default=30000.0,
+                    help="--serve-tune p99 request-latency SLO (ms)")
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="--serve-tune KV capacity per sequence "
+                         "(default: prompt+gen rounded up)")
+    ap.add_argument("--cluster", default="tpu",
+                    help="--serve-tune machine description preset "
+                         "(tpu | paper | host | a ClusterSpec JSON path)")
     args = ap.parse_args(argv)
+    if args.serve_tune:
+        return _serve_tune(args.arch, args.p, args.rate, args.prompt,
+                           args.gen, args.slo_ms, args.max_len,
+                           args.cluster)
     if args.smoke or args.calibrate or args.chaos or args.tune_kernels:
         # must precede any jax import (the module header stays jax-free)
         os.environ.setdefault(

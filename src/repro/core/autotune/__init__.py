@@ -250,6 +250,7 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
              switches="all", schedules="all", fallback: str | None = None,
              allow_remat: bool = True, allow_pipeline: bool = True,
              max_stages: int | None = None, model_width: int | None = None,
+             model_widths: "tuple[int, ...] | None" = None,
              model_grid: "tuple[int, int] | None" = None,
              cluster: "ClusterSpec | None" = None,
              rtol: float = 1e-9) -> TunedPlan:
@@ -271,7 +272,11 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
     ``model_width`` constrains hybrid plans to one p2 — pass the mesh's
     model-axis size when the mesh is already shaped and cannot be
     refactorized (summa plans are excluded there: a 1D ("data", "model")
-    mesh carries no (model_r, model_c) grid). ``model_grid`` is the
+    mesh carries no (model_r, model_c) grid). ``model_widths`` is the
+    allowed-SET form of the same constraint — pass the p2 values a mesh
+    factory can realize (e.g. the divisors of the device count) to get
+    the cheapest plan that tiles, instead of silently dropping the model
+    axis when the single winner doesn't. ``model_grid`` is the
     converse: pass the (r, c) extents of an already-shaped grid mesh and
     only summa points on exactly that grid survive.
     ``cluster``: a ClusterSpec whose torus topology prunes
@@ -305,6 +310,10 @@ def autotune(stats, tm: TimeModel, cfg: OracleConfig, p: int, *,
         # like the hybrids, or the deployed stage count won't match the plan
         keep &= (~np.isin(res.strategy, HYBRID_STRATEGIES + ("pipeline",))
                  | (res.p2 == model_width))
+        keep &= res.strategy != "summa"
+    if model_widths is not None:
+        keep &= (~np.isin(res.strategy, HYBRID_STRATEGIES + ("pipeline",))
+                 | np.isin(res.p2, tuple(model_widths)))
         keep &= res.strategy != "summa"
     if model_grid is not None:
         r, c = model_grid

@@ -698,6 +698,27 @@ def project(strategy: str, stats: list[LayerStat], tm: TimeModel,
                       p2r=int(p2r or 1), p2c=int(p2c or 1))
 
 
+def seq_flops_coeffs(mc, seq: int) -> "tuple[float, float]":
+    """Fit per-sample forward FLOPs ≈ a·S + b·S² from two stat evaluations.
+
+    Transformer forward cost is exactly linear-plus-quadratic in sequence
+    length (attention scores are the only S² term), so two points pin the
+    polynomial: evaluating the layer stats at S and S/2 gives
+    b = 2(F(S) − 2·F(S/2))/S² and a = F(S)/S − b·S. The serving oracle
+    (serve/oracle.py) differentiates this to price decode — the marginal
+    cost of token L is a + 2bL — and integrates it for chunked prefill,
+    without a per-length stats rebuild inside the sweep.
+    """
+    from .layer_stats import stats_for
+    S = max(int(seq), 8)
+    S += S % 2
+    f1 = float(sum(st.flops_fwd for st in stats_for(mc, S)))
+    f2 = float(sum(st.flops_fwd for st in stats_for(mc, S // 2)))
+    b = 2.0 * (f1 - 2.0 * f2) / (S * S)
+    a = f1 / S - b * S
+    return a, b
+
+
 def project_all(stats, tm: TimeModel, cfg: OracleConfig, p: int,
                 strategies=STRATEGY_NAMES) -> list[Projection]:
     out = []

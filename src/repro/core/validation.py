@@ -208,6 +208,30 @@ def validate(model, model_cfg, batch, mesh, strategies, *,
     return points
 
 
+def measure_serving(model, mesh, strategy: str, serve_cfg, requests, *,
+                    params=None, seed: int = 0, warmup: bool = True,
+                    honor_arrivals: bool = False):
+    """Measured serving replay: the continuous-batching engine under one
+    serving rules table on ``mesh``, fed ``requests`` (a trace from
+    TrafficModel.trace). Returns the engine's ServeReport — tok/s and
+    latency percentiles the serving oracle's ranking is validated against
+    (tests/helpers/multidevice_checks.py serving_validation).
+
+    ``warmup`` replays the trace once first so compile time stays out of
+    the measured wall clock; ``honor_arrivals=False`` (default) replays
+    closed-loop, measuring capacity rather than queueing.
+    """
+    from ..serve.engine import Engine
+    ctx = ShardingCtx(mesh, make_rules(strategy))
+    if params is None:
+        params = tree_init(model.params_spec(), jax.random.PRNGKey(seed))
+    eng = Engine(model, params, ctx, serve_cfg, seed=seed)
+    if warmup:
+        eng.run(requests, honor_arrivals=False)
+        eng.reset()
+    return eng.run(requests, honor_arrivals=honor_arrivals)
+
+
 def measure_schedule_bubble(model, model_cfg, make_batch, mesh, *,
                             schedule: str = "gpipe",
                             virtual_stages: int = 2,

@@ -572,7 +572,10 @@ class TransformerLM:
 
     def decode_step(self, params, token, cache, pos, ctx: ShardingCtx = NULL_CTX,
                     embeddings=None, scan_layers=True):
-        """token: (B, 1) int32; pos: scalar. Returns (logits (B,1,V), cache)."""
+        """token: (B, C) int32 (C=1 classic decode, C>1 a chunked-prefill
+        step); pos: scalar or (B,) int32 — each sequence's first new index
+        (attention-kind blocks only accept the vector/chunk forms; the
+        serving engine gates on that). Returns (logits (B,C,V), cache)."""
         c = self.cfg
         period, n_groups, rem = self._groups()
         h = self._embed(params, token, ctx, embeddings)

@@ -343,30 +343,46 @@ class Attention:
         }
 
     def decode(self, params, x, cache, pos, ctx: ShardingCtx = NULL_CTX):
-        """One decode step. x: (B, 1, d_model); pos: scalar int32 (current index).
+        """Incremental step against the KV cache.
 
-        Returns (y, new_cache). Window attention uses a ring-buffer write.
+        x: (B, C, d_model) — C new tokens per sequence (C=1: classic decode;
+        C>1: a chunked-prefill step, the serving engine's prefill phase).
+        pos: scalar int32 OR (B,) int32 — the index of each sequence's first
+        new token, so a continuous batch can hold sequences at different
+        depths. Token j of row b lands at position pos[b]+j.
+
+        Returns (y, new_cache). Window attention uses a ring-buffer write;
+        with C > 1 a ring write may evict keys still inside an earlier
+        chunk-token's window, so chunked callers must keep C=1 on windowed
+        layers (the serving engine enforces this).
         """
         c = self.cfg
-        B = x.shape[0]
-        positions = jnp.full((B, 1), pos, jnp.int32)
+        B, C, _ = x.shape
+        p0 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+        positions = p0[:, None] + jnp.arange(C, dtype=jnp.int32)  # (B, C)
         q, k_new, v_new = self._qkv(params, x, positions, ctx)
         shards = cache["k"].shape[1]
         span = cache["k"].shape[2]
         total = shards * span
-        write = pos % total if c.window is not None else pos
-        sh, loc = write // span, write % span
+        write = positions % total if c.window is not None else positions
 
         # one-hot masked write instead of dynamic_update_slice: a traced
         # index into a sharded dim forces the SPMD partitioner to re-gather
         # the cache (§Perf iteration log); the mask is elementwise and keeps
-        # the cache fully sharded.
-        m = (jnp.arange(shards)[:, None] == sh) & \
-            (jnp.arange(span)[None, :] == loc)          # (shards, span)
-        m = m[None, :, :, None, None]
+        # the cache fully sharded. With C tokens the mask is (B,C,shards,span)
+        # and the einsum places each token exactly once (positions within a
+        # chunk are distinct mod total for C <= total).
+        slot = jnp.arange(total, dtype=jnp.int32).reshape(shards, span)
+        M = write[:, :, None, None] == slot[None, None]   # (B,C,shards,span)
+        touched = M.any(axis=1)                           # (B,shards,span)
 
         def upd(buf, new):
-            return jnp.where(m, new[:, None].astype(buf.dtype), buf)
+            # new: (B, C, KV, D) → scatter to (B, shards, span, KV, D);
+            # the one-hot product is exact (0/1 factors), so this matches
+            # a direct masked write bit for bit.
+            contrib = jnp.einsum("bcnk,bchd->bnkhd", M.astype(new.dtype), new)
+            return jnp.where(touched[..., None, None],
+                             contrib.astype(buf.dtype), buf)
 
         cache = {"k": upd(cache["k"], k_new), "v": upd(cache["v"], v_new)}
 
@@ -378,27 +394,29 @@ class Attention:
             kc = jnp.repeat(kc, rep, axis=3)
             vc = jnp.repeat(vc, rep, axis=3)
         scale = 1.0 / np.sqrt(c.head_dim)
-        qh = q.transpose(0, 2, 1, 3)  # (B,H,1,D)
+        qh = q.transpose(0, 2, 1, 3)  # (B,H,C,D)
 
-        # token index currently held by each cache slot (ring-aware when windowed)
-        slot = jnp.arange(total).reshape(shards, span)
+        # token index currently held by each cache slot (ring-aware when
+        # windowed: relative to the LAST token written, which owns the ring)
         if c.window is not None:
-            kpos = pos - ((pos - slot) % total)
+            p_last = positions[:, -1][:, None, None]       # (B,1,1)
+            kpos = p_last - ((p_last - slot[None]) % total)  # (B,shards,span)
         else:
-            kpos = slot
-        valid = (kpos <= pos) & (kpos >= 0)
+            kpos = jnp.broadcast_to(slot[None], (B, shards, span))
+        qpos = positions[:, :, None, None]                 # (B,C,1,1)
+        valid = (kpos[:, None] <= qpos) & (kpos[:, None] >= 0)
         if c.window is not None:
-            valid &= kpos > pos - c.window
+            valid &= kpos[:, None] > qpos - c.window       # (B,C,shards,span)
 
-        s = jnp.einsum("bhqd,bnkhd->bhqnk", qh, kc).astype(jnp.float32) * scale
+        s = jnp.einsum("bhcd,bnkhd->bhcnk", qh, kc).astype(jnp.float32) * scale
         s = _softcap(s, c.logit_softcap)
-        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        s = jnp.where(valid[:, None], s, NEG_INF)
         m = jnp.max(s, axis=(-2, -1), keepdims=True)
         p = jnp.exp(s - m)
         p = jnp.where(jnp.isfinite(m), p, 0.0)
-        o = jnp.einsum("bhqnk,bnkhd->bhqd", p.astype(q.dtype), vc).astype(jnp.float32)
+        o = jnp.einsum("bhcnk,bnkhd->bhcd", p.astype(q.dtype), vc).astype(jnp.float32)
         o = o / jnp.maximum(jnp.sum(p, axis=(-2, -1)), 1e-30)[..., None]
-        o = o.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,1,H,D)
+        o = o.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,C,H,D)
         return self._out(params, o, ctx), cache
 
 

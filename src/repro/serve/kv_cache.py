@@ -1,0 +1,271 @@
+"""Paged/blocked KV cache for the serving engine (DESIGN.md §15).
+
+The dense cache the attention path consumes is laid out per sequence as
+``(B, shards, span, KV, HD)`` (nn/attention.py ``cache_spec``): flat token
+``t`` lives at ``(shard t//span, slot t%span)``. Paging keeps the SAME
+layout but chops the ``span`` dim into fixed ``bspan``-slot blocks held in
+a shared pool:
+
+    pool leaf:  (num_blocks, shards, bspan, KV, HD)     lead/tail layers
+                (G, num_blocks, shards, bspan, KV, HD)  scanned stacks
+
+Block ``j`` of a sequence covers slots ``[j·bspan, (j+1)·bspan)`` in EVERY
+shard, i.e. ``block_tokens = shards·bspan`` tokens of capacity — so a
+sequence of ``L`` tokens owns ``ceil(min(L, span)/bspan)`` blocks and the
+rest of the pool is free for other sequences (the memory win vs a dense
+``max_batch × max_len`` preallocation).
+
+The pool's logical axes mirror the dense cache's (blocks replicated, the
+``seq``-shards and ``act_kv`` dims keep their names), so the ``serve_tp``
+and ``serve_seqkv`` rules tables shard the POOL exactly as they shard the
+dense cache — and ``gather_view`` (a take over the replicated blocks axis)
+reconstructs a dense view the existing ``Attention.decode`` consumes
+unchanged. Exactness vs the dense path is gated by ``max_abs_diff`` /
+tests/test_serve.py.
+
+Allocation is host-side and O(1): a free-list ``BlockAllocator`` with
+block 0 reserved as the null block — unallocated block-table entries point
+at it, and writes landing there (inactive engine slots) are never read
+back as valid positions (the attention valid mask covers them).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+import jax
+
+from ..nn.module import ParamSpec, param
+
+NULL_BLOCK = 0
+
+
+# ---------------------------------------------------------------------------
+# Host-side free-list allocator
+# ---------------------------------------------------------------------------
+class BlockAllocator:
+    """Fixed pool of ``num_blocks`` blocks; block 0 is the reserved null
+    block and is never handed out. ``alloc`` returns None on OOM (the
+    engine's admission control backs off instead of crashing)."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        self.num_blocks = num_blocks
+        # pop() from the end hands out ascending ids first — deterministic
+        # layouts for tests and reproducible traces
+        self._free = list(range(num_blocks - 1, 0, -1))
+
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> "list[int] | None":
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, ids) -> None:
+        for i in ids:
+            i = int(i)
+            if not 0 < i < self.num_blocks:
+                raise ValueError(f"block id {i} out of range")
+            if i in self._free:
+                raise ValueError(f"double free of block {i}")
+            self._free.append(i)
+
+
+# ---------------------------------------------------------------------------
+# Geometry
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class CacheGeometry:
+    """Shared shape facts of every attention cache leaf in the model."""
+
+    shards: int        # cache shard dim (1 or the mesh model size)
+    span: int          # slots per shard (max_len // shards)
+    bspan: int         # slots per shard per block
+    n_blk: int         # blocks per sequence (span // bspan)
+    kv_bytes_per_token: int  # summed over layers, at shards' dtype
+
+    @property
+    def block_tokens(self) -> int:
+        """Allocation granularity in tokens."""
+        return self.shards * self.bspan
+
+    @property
+    def max_len(self) -> int:
+        return self.shards * self.span
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks a sequence of ``n_tokens`` (prompt+gen) occupies."""
+        used = min(max(n_tokens, 1), self.span)
+        return -(-used // self.bspan)
+
+
+def _leaf_dims(ps: ParamSpec):
+    """(batch_axis, shards, span, tail) of one dense cache leaf spec;
+    raises for non-attention cache layouts (MLA latents, SSM states …)."""
+    if len(ps.shape) == 5:
+        b_ax = 0
+    elif len(ps.shape) == 6 and ps.axes[0] == "layers":
+        b_ax = 1
+    else:
+        raise ValueError(
+            f"unsupported cache leaf {ps.shape} {ps.axes}: the paged pool "
+            "serves GQA attention caches (B, shards, span, KV, HD) only")
+    if ps.axes[b_ax:b_ax + 2] != ("batch", "seq"):
+        raise ValueError(f"unexpected cache leaf axes {ps.axes}")
+    return b_ax, ps.shape[b_ax + 1], ps.shape[b_ax + 2], ps.shape[b_ax + 3:]
+
+
+def cache_geometry(model, max_len: int, *, shards: int = 1,
+                   block_tokens: int = 16,
+                   dtype=jnp.bfloat16) -> CacheGeometry:
+    """Validate the model's cache tree for paging and derive the geometry.
+
+    Every leaf must share (shards, span): windowed layers whose span was
+    clamped below ``max_len`` (and non-attention caches) are rejected here —
+    the single reason the serving engine gates on attention-only models.
+    """
+    spec = model.cache_spec(1, max_len, shards=shards, dtype=dtype)
+    leaves = jax.tree.leaves(
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    if not leaves:
+        raise ValueError("model has an empty cache spec")
+    geo = None
+    kv_bytes = 0
+    for ps in leaves:
+        b_ax, sh, span, tail = _leaf_dims(ps)
+        if geo is None:
+            geo = (sh, span)
+        elif geo != (sh, span):
+            raise ValueError(
+                f"non-uniform cache geometry {geo} vs {(sh, span)}: paged "
+                "serving needs every layer's cache to share (shards, span) "
+                "— windowed/local attention spans below max_len don't")
+        n_layers = ps.shape[0] if b_ax == 1 else 1
+        per_slot = int(np.prod(tail)) * jnp.dtype(dtype).itemsize
+        kv_bytes += n_layers * sh * span * per_slot
+    sh, span = geo
+    if sh * span != max_len:
+        raise ValueError(f"cache covers {sh * span} slots, want {max_len}")
+    if block_tokens % sh:
+        raise ValueError(f"block_tokens={block_tokens} must be a multiple "
+                         f"of kv_shards={sh}")
+    bspan = block_tokens // sh
+    if span % bspan:
+        raise ValueError(f"block span {bspan} must divide the cache span "
+                         f"{span} (max_len/kv_shards)")
+    return CacheGeometry(shards=sh, span=span, bspan=bspan,
+                         n_blk=span // bspan,
+                         kv_bytes_per_token=kv_bytes // max_len)
+
+
+# ---------------------------------------------------------------------------
+# Pool spec + gather/scatter views
+# ---------------------------------------------------------------------------
+def pool_spec(model, geo: CacheGeometry, num_blocks: int,
+              dtype=jnp.bfloat16):
+    """ParamSpec tree of the shared block pool — zeros-initializing, so
+    ``tree_init`` materializes each buffer exactly once."""
+    spec = model.cache_spec(1, geo.max_len, shards=geo.shards, dtype=dtype)
+
+    def one(ps: ParamSpec) -> ParamSpec:
+        b_ax, sh, _, tail = _leaf_dims(ps)
+        lead = ps.shape[:b_ax]
+        shape = lead + (num_blocks, sh, geo.bspan) + tail
+        axes = ps.axes[:b_ax] + (None,) + ps.axes[b_ax + 1:]
+        return param(shape, axes, init=lambda k, s, d: jnp.zeros(s, d),
+                     dtype=ps.dtype)
+
+    return jax.tree.map(one, spec,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def gather_view(pool, tables: jnp.ndarray):
+    """Dense cache view of the sequences in ``tables`` (B, n_blk) int32.
+
+    A take over the pool's replicated blocks axis followed by a reshape —
+    the sharded dims (seq shards, kv heads) pass through untouched, so the
+    view carries the same layout the rules tables expect. Null-block
+    entries materialize garbage at positions the attention valid mask
+    (kpos <= pos) never exposes.
+    """
+    def one(leaf):
+        if leaf.ndim == 5:                      # (NB, sh, bspan, KV, HD)
+            g = jnp.take(leaf, tables, axis=0)  # (B, nblk, sh, bspan, ...)
+            B, nblk, sh, bspan = g.shape[:4]
+            return g.transpose(0, 2, 1, 3, 4, 5).reshape(
+                B, sh, nblk * bspan, *g.shape[4:])
+        g = jnp.take(leaf, tables, axis=1)      # (G, B, nblk, sh, bspan, .)
+        G, B, nblk, sh, bspan = g.shape[:5]
+        return g.transpose(0, 1, 3, 2, 4, 5, 6).reshape(
+            G, B, sh, nblk * bspan, *g.shape[5:])
+
+    return jax.tree.map(one, pool)
+
+
+def scatter_blocks(pool, tables: jnp.ndarray, dense, jidx: jnp.ndarray):
+    """Write blocks ``jidx`` (B, nj) of the dense view back into the pool.
+
+    The decode step touches exactly one block per sequence, a prefill
+    chunk a static range — so per step the pool write is O(touched
+    blocks), not O(max_len). Rows parked on the null block (inactive
+    engine slots) scatter garbage into block 0, which is never read back
+    as a valid position.
+    """
+    nj = jidx.shape[1]
+    ids = jnp.take_along_axis(tables, jidx, axis=1)      # (B, nj)
+
+    def one(leaf, dl):
+        if leaf.ndim == 5:
+            B, sh, span = dl.shape[:3]
+            nblk = tables.shape[1]
+            bspan = span // nblk
+            blocks = dl.reshape(B, sh, nblk, bspan, *dl.shape[3:])
+            blocks = blocks.transpose(0, 2, 1, 3, 4, 5)  # (B,nblk,sh,...)
+            idx = jidx.reshape(jidx.shape + (1,) * (blocks.ndim - 2))
+            sel = jnp.take_along_axis(blocks, idx, axis=1)   # (B,nj,...)
+            return leaf.at[ids.reshape(-1)].set(
+                sel.reshape(-1, *sel.shape[2:]).astype(leaf.dtype))
+        G, B, sh, span = dl.shape[:4]
+        nblk = tables.shape[1]
+        bspan = span // nblk
+        blocks = dl.reshape(G, B, sh, nblk, bspan, *dl.shape[4:])
+        blocks = blocks.transpose(0, 1, 3, 2, 4, 5, 6)   # (G,B,nblk,sh,...)
+        idx = jidx.reshape((1,) + jidx.shape + (1,) * (blocks.ndim - 3))
+        sel = jnp.take_along_axis(blocks, idx, axis=2)   # (G,B,nj,...)
+        return leaf.at[:, ids.reshape(-1)].set(
+            sel.reshape(G, -1, *sel.shape[3:]).astype(leaf.dtype))
+
+    return jax.tree.map(one, pool, dense)
+
+
+def max_abs_diff(pool, tables, dense, geo: CacheGeometry,
+                 length: int) -> float:
+    """Exactness gate: largest |paged − dense| over the first ``length``
+    token positions of sequence rows in ``tables`` vs a dense reference
+    cache. 0.0 ⇔ bit-exact (same dtype both sides)."""
+    view = gather_view(pool, tables)
+    worst = 0.0
+    slot = np.arange(geo.max_len).reshape(geo.shards, geo.span)
+    mask = slot < length                                  # (shards, span)
+
+    def one(a, b):
+        nonlocal worst
+        a = np.asarray(jax.device_get(a), np.float32)
+        b = np.asarray(jax.device_get(b), np.float32)
+        sh_ax = a.ndim - 4                                # shards dim index
+        m = mask.reshape((1,) * sh_ax + mask.shape + (1, 1))
+        worst = max(worst, float(np.max(np.abs((a - b) * m))))
+
+    jax.tree.map(one, view, dense)
+    return worst

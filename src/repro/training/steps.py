@@ -69,7 +69,12 @@ def make_train_step(model, opt: OptimizerConfig, ctx: ShardingCtx,
 
 
 def make_prefill_step(model, ctx: ShardingCtx, **kw) -> Callable:
-    """(params, batch, cache) -> (logits, cache). batch carries the prompt."""
+    """(params, batch, cache) -> (logits, cache). batch carries the prompt.
+
+    Returned un-jitted. Callers that jit it MUST donate the cache —
+    ``jax.jit(step, donate_argnums=(2,))`` — or every prefill materializes
+    a second full KV cache just to update it (the serving engine and
+    launch/dryrun.py both donate; keep new call sites consistent)."""
 
     def prefill_step(params, batch, cache):
         if hasattr(model, "prefill"):
@@ -85,7 +90,11 @@ def make_prefill_step(model, ctx: ShardingCtx, **kw) -> Callable:
 
 
 def make_decode_step(model, ctx: ShardingCtx, **kw) -> Callable:
-    """(params, token, cache, pos) -> (logits, cache). One new token."""
+    """(params, token, cache, pos) -> (logits, cache). One new token.
+
+    Same donation contract as ``make_prefill_step``: jit with
+    ``donate_argnums=(2,)`` so the per-token cache update happens in place
+    instead of copying the whole cache every step."""
 
     def decode_step(params, token, cache, pos):
         return model.decode_step(params, token, cache, pos, ctx, **kw)

@@ -785,6 +785,114 @@ def check_tensor2d_validation(write_path=None):
         print(f"wrote {write_path}")
 
 
+def check_serving_validation(write_path=None):
+    """ISSUE-10 acceptance: the serving oracle's throughput/latency ranking
+    between the two serving layouts at equal model width matches a measured
+    engine replay, and the sharded paged engine emits exactly the tokens of
+    the dense single-device decode path.
+
+    serve_tp vs serve_seqkv at p2=2 is the structural comparison: both
+    halve per-device compute and KV identically, but serve_seqkv pays one
+    extra collective per layer (the sequence-shard LSE merge) — the oracle
+    prices that third collective, so its winner must also be the measured
+    winner. A retry repeats the FULL procedure (both warmed measurements);
+    the winner assertion is never relaxed. Optionally writes the
+    EXPERIMENTS.md "Serving validation" artifact."""
+    from repro.core.cluster import ClusterSpec
+    from repro.core.validation import measure_serving
+    from repro.launch.compat import make_mesh
+    from repro.models import LMConfig, TransformerLM
+    from repro.nn import AttentionConfig, FFNConfig
+    from repro.nn.module import tree_init
+    from repro.serve import ServeConfig, TrafficModel, price_serving
+    # sized so the per-layer collective gap dominates host dispatch noise:
+    # at d256/L6/B8 the seqkv step measures ~45% slower than serve_tp on
+    # the virtual-device host — far above the ~3% replay jitter
+    cfg = LMConfig(name="srv", vocab=512, d_model=256, n_layers=6,
+                   attn=AttentionConfig(256, 8, 2, 32, dtype=jnp.float32),
+                   ffn=FFNConfig(256, 1024, dtype=jnp.float32),
+                   dtype=jnp.float32)
+    model = TransformerLM(cfg)
+    traffic = TrafficModel(rate=50.0, prompt_len=16, gen_len=8, spread=0.0)
+    trace = traffic.trace(6, cfg.vocab, seed=0)
+    max_len, p2 = 64, 2
+    mesh = make_mesh((1, p2), ("data", "model"))
+    cluster = ClusterSpec.of("host")
+    configs = {
+        "serve_tp": (1, ServeConfig(max_len=max_len, max_batch=8,
+                                    block_tokens=16, prefill_chunk=16,
+                                    kv_shards=1, dtype=jnp.float32)),
+        "serve_seqkv": (p2, ServeConfig(max_len=max_len, max_batch=8,
+                                        block_tokens=16, prefill_chunk=16,
+                                        kv_shards=p2, dtype=jnp.float32)),
+    }
+    rows = {s: price_serving(cfg, cluster, s, 1, p2, kv, c.max_batch,
+                             traffic, max_len=max_len, dtype_bytes=4)
+            for s, (kv, c) in configs.items()}
+    for s, r in rows.items():
+        assert r.feasible, (s, r.limit)
+        print("oracle:   " + r.describe())
+    oracle_winner = max(rows, key=lambda s: rows[s].tok_per_s)
+
+    # dense single-device greedy reference for request 0 (paged + sharded
+    # must be bit-exact against it under BOTH rules tables)
+    req = trace[0]
+    key = jax.random.PRNGKey(0)
+    params = tree_init(model.params_spec(), key)
+    cache = jax.tree.map(jnp.zeros_like,
+                         tree_init(model.cache_spec(1, max_len,
+                                                    dtype=jnp.float32), key))
+    lg, cache = model.prefill(params, jnp.asarray(req.prompt[None]), cache,
+                              attn_impl="plain")
+    ref = [int(np.argmax(np.asarray(lg[0, 0])))]
+    for i in range(req.max_new - 1):
+        lg, cache = model.decode_step(params, jnp.asarray([[ref[-1]]]),
+                                      cache, len(req.prompt) + i)
+        ref.append(int(np.argmax(np.asarray(lg[0, 0]))))
+
+    ok = False
+    for attempt in range(3):
+        reports = {s: measure_serving(model, mesh, s, c, trace,
+                                      params=params)
+                   for s, (kv, c) in configs.items()}
+        for s, rep in reports.items():
+            print(f"measured: {s:<11} tok/s={rep.tok_per_s:8.1f} "
+                  f"p50={rep.percentile(50) * 1e3:7.1f}ms")
+            got = next(r.tokens for r in rep.requests if r.rid == req.rid)
+            assert got == ref, (
+                f"{s}: paged sharded tokens diverge from dense reference",
+                got, ref)
+        measured_winner = max(reports, key=lambda s: reports[s].tok_per_s)
+        print(f"oracle winner {oracle_winner}, measured {measured_winner}")
+        ok = measured_winner == oracle_winner
+        if ok:
+            break
+        print(f"attempt {attempt + 1} failed — full redo")
+    assert ok, ("oracle winner != measured winner", oracle_winner,
+                {s: r.tok_per_s for s, r in reports.items()})
+    if write_path:
+        import json
+        rec = {"p2": p2, "max_len": max_len,
+               "model": "lm-6L-d256-h8kv2 (serving check)",
+               "traffic": {"rate": traffic.rate,
+                           "prompt_len": traffic.prompt_len,
+                           "gen_len": traffic.gen_len,
+                           "requests": len(trace)},
+               "oracle": {s: {"tok_per_s": rows[s].tok_per_s,
+                              "latency_p99_s": rows[s].latency_p99,
+                              "t_decode_s": rows[s].t_decode}
+                          for s in rows},
+               "measured": {s: {"tok_per_s": reports[s].tok_per_s,
+                                "latency_p50_s": reports[s].percentile(50)}
+                            for s in reports},
+               "oracle_winner": oracle_winner,
+               "measured_winner": measured_winner,
+               "tokens_bit_exact_vs_dense": True}
+        with open(write_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"wrote {write_path}")
+
+
 def check_compressed_allreduce():
     from repro.optim.compress import compressed_mean
     mesh = mesh24()
@@ -821,6 +929,7 @@ CHECKS = {
     "dp_numerics": check_dp_numerics,
     "summa_parity": check_summa_parity,
     "tensor2d_validation": check_tensor2d_validation,
+    "serving_validation": check_serving_validation,
     "oracle_validation": check_oracle_validation,
     "compressed_allreduce": check_compressed_allreduce,
 }
